@@ -1,0 +1,66 @@
+"""Shared benchmark plumbing: dataset construction, timing, CSV output."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import OptimizerConfig
+from repro.configs.icf_cyclegan import CycleGANConfig
+from repro.data import jag
+
+# benchmark-scale CycleGAN: 16x16 images keep the 1-core CPU runs honest
+# but fast; the modality structure (5 -> 15 scalars + 12 images) is intact.
+BENCH_CCFG = CycleGANConfig(
+    name="icf-cyclegan-bench", image_size=16,
+    fwd_hidden=(64, 128, 64), inv_hidden=(64, 128, 64),
+    disc_hidden=(64, 64), enc_hidden=(256, 64), dec_hidden=(64, 256))
+
+PAPER_BATCH = 128        # paper Section IV: mini-batch 128, Adam lr 1e-3
+PAPER_OPT = OptimizerConfig(name="adam", lr=1e-3, warmup_steps=1,
+                            grad_clip_norm=0.0)
+
+
+def make_jag_arrays(n: int, seed: int = 0):
+    xs = jag.sample_inputs(n, seed)
+    sim = jag.jag_simulate(xs, BENCH_CCFG.image_size)
+    return sim["x"], jag.flatten_outputs(sim)
+
+
+def timeit(fn: Callable, warmup: int = 2, iters: int = 10) -> float:
+    """Times fn, blocking on its return value (async dispatch safe)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) / iters
+
+
+def silo_partition(x: np.ndarray, K: int, key_dim: int = 0) -> list:
+    """The paper's data-silo scenario: partition sample indices into K
+    contiguous regions of parameter space (sorted along `key_dim`).
+    Quasi-random (Halton) index ranges still cover the space, so genuine
+    silos must be cut in INPUT space, not index space."""
+    order = np.argsort(x[:, key_dim], kind="stable")
+    return [order[k * len(order) // K:(k + 1) * len(order) // K]
+            for k in range(K)]
+
+
+class CsvReport:
+    """Collects `name,us_per_call,derived` rows (benchmarks/run.py format)."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = ""):
+        self.rows.append(f"{name},{us_per_call:.1f},{derived}")
+
+    def dump(self):
+        print("name,us_per_call,derived")
+        for r in self.rows:
+            print(r)

@@ -1,0 +1,76 @@
+"""Paper Fig. 9 — small-scale data parallelism limits.
+
+Strong-scales one CycleGAN trainer by splitting the fixed 128-sample
+mini-batch over 1..16 simulated GPUs.  Per-device compute time is
+MEASURED on CPU (jit'd train step at per-device batch 128/N); the
+gradient all-reduce time is DERIVED from model size and NVLink/IB
+bandwidths (the paper's hardware), reproducing the efficiency collapse
+the paper observes past ~16 GPUs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (BENCH_CCFG, PAPER_BATCH, PAPER_OPT,
+                               CsvReport, make_jag_arrays, timeit)
+from repro.train.steps import make_gan_steps
+
+# comm model: V100 4-GPU NVLink node + EDR IB across nodes (paper's Lassen)
+NVLINK_BW = 150e9      # bytes/s effective all-reduce within node
+IB_BW = 12.5e9         # bytes/s per rail EDR, 2 rails
+LATENCY = 20e-6
+
+
+def allreduce_time(nbytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    bw = NVLINK_BW if n <= 4 else 2 * IB_BW
+    return 2 * nbytes * (n - 1) / n / bw + LATENCY * np.log2(n)
+
+
+def run(report: CsvReport, quick: bool = False):
+    # fig9 needs per-device compute >> dispatch overhead: use the paper's
+    # full 64x64-image CycleGAN so splitting the 128-batch matters.
+    from repro.configs.icf_cyclegan import CycleGANConfig
+    big_cfg = CycleGANConfig(image_size=32 if quick else 64,
+                             enc_hidden=(1024, 256),
+                             dec_hidden=(256, 1024))
+    from repro.data import jag as jag_mod
+    xs = jag_mod.sample_inputs(1024, 0)
+    sim = jag_mod.jag_simulate(xs, big_cfg.image_size)
+    x, y = sim["x"], jag_mod.flatten_outputs(sim)
+    init, train_step, metric = make_gan_steps(big_cfg, PAPER_OPT)
+    params, opt_state, hparams = init(0)
+    grad_bytes = sum(l.size * 4 for l in jax.tree.leaves(params))
+    steps_per_epoch = (4096 if quick else 16384) // PAPER_BATCH
+
+    rows = []
+    base_epoch = None
+    for n_gpu in (1, 2, 4, 8, 16):
+        b = max(1, PAPER_BATCH // n_gpu)
+        batch = {"x": jnp.asarray(x[:b]), "y": jnp.asarray(y[:b])}
+        st = [params, opt_state]
+
+        def step():
+            st[0], st[1], _ = train_step(st[0], st[1], batch, hparams)
+            return st[0]
+
+        t_step = timeit(step, warmup=2, iters=4 if quick else 10)
+        t_comm = allreduce_time(grad_bytes, n_gpu)
+        epoch = steps_per_epoch * (t_step + t_comm)
+        base_epoch = base_epoch or epoch
+        speedup = base_epoch / epoch
+        eff = speedup / n_gpu
+        rows.append((n_gpu, epoch, speedup, eff))
+        report.add(f"fig9/dp_gpus={n_gpu}", t_step * 1e6,
+                   f"epoch_s={epoch:.2f};speedup={speedup:.2f};"
+                   f"efficiency={eff:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    r = CsvReport()
+    run(r)
+    r.dump()

@@ -1,0 +1,73 @@
+"""Assemble the roofline table (EXPERIMENTS.md §Roofline) from the
+dry-run JSON reports in experiments/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load_reports(dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        stem = os.path.basename(path)[:-5]
+        # perf-iteration variants carry a __suffix in the filename
+        parts = stem.split("__")
+        r["variant"] = " [" + parts[3] + "]" if len(parts) > 3 else ""
+        out.append(r)
+    return out
+
+
+def table(reports: List[Dict], mesh: str = "1pod_16x16") -> str:
+    """Markdown roofline table for one mesh."""
+    hdr = ("| arch | shape | compute | memory | collective | bottleneck "
+           "| useful_flops | mfu@roofline | mfu@kernel | resident/chip |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in reports:
+        if not r.get("ok") or r.get("mesh") != mesh or "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        mem = r["memory"]
+        rk = r.get("roofline_kernel") or {}
+        kmfu = f"{rk['mfu']:.2%}" if rk.get("credited_tags") else "-"
+        lines.append(
+            f"| {r['arch']}{r.get('variant','')} | {r['shape']} "
+            f"| {rf['t_compute']*1e3:.1f}ms | {rf['t_memory']*1e3:.1f}ms "
+            f"| {rf['t_collective']*1e3:.1f}ms | {rf['bottleneck']} "
+            f"| {rf['useful_flops_ratio']:.2f} | {rf['mfu']:.2%} "
+            f"| {kmfu} "
+            f"| {mem.get('analytic_resident_bytes', 0)/2**30:.2f}G |")
+    return hdr + "\n".join(lines)
+
+
+def run(report, quick: bool = False):
+    reports = load_reports()
+    ok = [r for r in reports if r.get("ok")]
+    fail = [r for r in reports if not r.get("ok")]
+    for r in ok:
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        rk = r.get("roofline_kernel") or {}
+        kmfu = f";mfu_kernel={rk['mfu']:.4f}" if rk.get("credited_tags") \
+            else ""
+        variant = r.get("variant", "").strip(" []")
+        vtag = f"/{variant}" if variant else ""
+        report.add(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{vtag}",
+            rf["step_time"] * 1e6,
+            f"bottleneck={rf['bottleneck']};mfu={rf['mfu']:.4f};"
+            f"useful={rf['useful_flops_ratio']:.2f}{kmfu}")
+    report.add("roofline/cells_ok", float(len(ok)), f"failed={len(fail)}")
+    return ok, fail
+
+
+if __name__ == "__main__":
+    reports = load_reports()
+    print(table(reports, "1pod_16x16"))
+    print()
+    print(table(reports, "2pod_2x16x16"))

@@ -1,0 +1,155 @@
+"""Atomic, async-capable checkpointing of pytrees + population state.
+
+Fault-tolerance substrate (DESIGN.md §5): checkpoints are written to a
+temp directory and atomically renamed, so a node failure mid-write never
+corrupts the restore point.  ``save_async`` overlaps serialization with
+training (the paper's data-store philosophy applied to checkpoints).
+Elastic restore: a population checkpoint with K trainers can be loaded
+into K' != K trainers (best-ranked subset / cloned winners).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+Params = Any
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return f"k{p.key}"
+    if hasattr(p, "idx"):
+        return f"i{p.idx}"
+    return str(p)
+
+
+def save(path: str, tree, metadata: Optional[dict] = None):
+    """Atomic checkpoint write: <path>.tmp -> rename to <path>."""
+    tmp = path + ".tmp"
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    # bf16 has no numpy dtype; view as uint16 with a marker
+    store = {}
+    dtypes = {}
+    for k, v in flat.items():
+        if v.dtype == jax.numpy.bfloat16:
+            store[k] = v.view(np.uint16) if hasattr(v, "view") else \
+                np.asarray(v, np.float32)
+            dtypes[k] = "bfloat16"
+        else:
+            store[k] = v
+            dtypes[k] = str(v.dtype)
+    np.savez(tmp, __dtypes__=json.dumps(dtypes),
+             __meta__=json.dumps(metadata or {}), **store)
+    actual = tmp if os.path.exists(tmp) else tmp + ".npz"
+    os.replace(actual, path)
+
+
+def restore(path: str, like) -> Tuple[Any, dict]:
+    """Restore into the structure of `like` (a pytree template)."""
+    with np.load(path, allow_pickle=False) as z:
+        dtypes = json.loads(str(z["__dtypes__"]))
+        meta = json.loads(str(z["__meta__"]))
+        flat = {k: z[k] for k in z.files
+                if k not in ("__dtypes__", "__meta__")}
+    leaves_paths = jax.tree_util.tree_flatten_with_path(like)[0]
+    treedef = jax.tree_util.tree_structure(like)
+    new_leaves = []
+    for path_, leaf in leaves_paths:
+        key = _SEP.join(_path_str(p) for p in path_)
+        arr = flat[key]
+        if dtypes.get(key) == "bfloat16":
+            arr = arr.view(jax.numpy.bfloat16) if arr.dtype == np.uint16 \
+                else arr
+        new_leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype)
+                          if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta
+
+
+class AsyncCheckpointer:
+    """Overlap checkpoint writes with training."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, path: str, tree, metadata: Optional[dict] = None):
+        self.wait()
+        # snapshot to host before backgrounding (device buffers may mutate)
+        host_tree = jax.tree.map(np.asarray, tree)
+        self._thread = threading.Thread(
+            target=save, args=(path, host_tree, metadata), daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step_path(ckpt_dir: str) -> Optional[str]:
+    """Find the newest step checkpoint in a directory."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    cands = [f for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".ckpt")]
+    if not cands:
+        return None
+    best = max(cands, key=lambda f: int(f.split("_")[1].split(".")[0]))
+    return os.path.join(ckpt_dir, best)
+
+
+def save_population(ckpt_dir: str, step: int, pop_state: Dict[str, Any]):
+    """Population checkpoint: one file per trainer + a manifest —
+    trainers can checkpoint independently (no global barrier)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    manifest = {"step": step, "num_trainers": len(pop_state["trainers"]),
+                "round": pop_state["round"], "time": time.time()}
+    for i, tr in enumerate(pop_state["trainers"]):
+        save(os.path.join(ckpt_dir, f"step_{step}_trainer_{i}.ckpt"),
+             {"params": tr["params"], "opt_state": tr["opt_state"]},
+             {"hparams": tr["hparams"], "steps": tr["steps"],
+              "alive": tr["alive"]})
+    with open(os.path.join(ckpt_dir, f"step_{step}.manifest.tmp"), "w") as f:
+        json.dump(manifest, f)
+    os.replace(os.path.join(ckpt_dir, f"step_{step}.manifest.tmp"),
+               os.path.join(ckpt_dir, f"step_{step}.manifest"))
+
+
+def restore_population(ckpt_dir: str, step: int, like_trainer: dict,
+                       num_trainers: Optional[int] = None
+                       ) -> Dict[str, Any]:
+    """Elastic restore: load <= stored trainers, cloning cyclically if
+    the new population is larger."""
+    with open(os.path.join(ckpt_dir, f"step_{step}.manifest")) as f:
+        manifest = json.load(f)
+    k_stored = manifest["num_trainers"]
+    k = num_trainers or k_stored
+    trainers = []
+    for i in range(k):
+        src = i % k_stored
+        tree, meta = restore(
+            os.path.join(ckpt_dir, f"step_{step}_trainer_{src}.ckpt"),
+            like_trainer)
+        trainers.append({"params": tree["params"],
+                         "opt_state": tree["opt_state"],
+                         "hparams": meta["hparams"],
+                         "steps": meta["steps"], "alive": meta["alive"]})
+    return {"round": manifest["round"], "seed": 0, "scope": "full",
+            "trainers": trainers}

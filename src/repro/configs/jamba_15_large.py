@@ -1,0 +1,32 @@
+"""jamba-1.5-large-398b [hybrid] — arXiv:2403.19887 (Mamba+attn 1:7, MoE).
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, MoE 16e top-2.
+Block pattern: 1 attention : 7 mamba per 8-layer period; MoE every 2nd
+layer (jamba convention). Hybrid -> runs long_500k (attention KV only on
+every 8th layer; mamba state O(1)).
+"""
+from repro.configs.base import MambaConfig, ModelConfig, MoEConfig, replace
+
+ARCH_ID = "jamba-1.5-large-398b"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="hybrid",
+    num_layers=72,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=24576,
+    vocab_size=65536,
+    block_pattern="MMMMaMMM",       # attn at position 4 of each 8-layer period
+    moe=MoEConfig(num_experts=16, top_k=2, moe_period=2),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+)
+
+SMOKE = replace(
+    FULL, name=ARCH_ID + "-smoke",
+    num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=96,
+    vocab_size=256, block_pattern="MMaM",
+    moe=MoEConfig(num_experts=4, top_k=2, moe_period=2),
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+)

@@ -1,0 +1,28 @@
+"""musicgen-medium [audio] — arXiv:2306.05284 (decoder over EnCodec tokens).
+
+48L d_model=1536 24H (kv=24 = MHA) d_ff=6144 vocab=2048. BACKBONE ONLY:
+the EnCodec frontend is a stub; input_specs() provides token ids in the
+(folded) codebook-interleaved stream plus precomputed conditioning frames.
+"""
+from repro.configs.base import FrontendConfig, ModelConfig, replace
+
+ARCH_ID = "musicgen-medium"
+
+FULL = ModelConfig(
+    name=ARCH_ID,
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    frontend=FrontendConfig(kind="audio", num_codebooks=4),
+)
+
+SMOKE = replace(
+    FULL, name=ARCH_ID + "-smoke",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+    vocab_size=64,
+    frontend=FrontendConfig(kind="audio", num_codebooks=2),
+)

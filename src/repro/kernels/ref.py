@@ -1,0 +1,90 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Hkv, S, D). Dense softmax attention."""
+    B, H, Sq, D = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf) / math.sqrt(D)
+    if causal:
+        Sk = k.shape[2]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", w, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def mamba_scan_ref(dt: jax.Array, xc: jax.Array, bm: jax.Array,
+                   cm: jax.Array, a: jax.Array) -> jax.Array:
+    """Sequential selective-scan oracle.
+
+    dt/xc: (B,S,d); bm/cm: (B,S,N); a: (d,N) -> y: (B,S,d)."""
+    B, S, d = dt.shape
+    N = a.shape[1]
+
+    def step(h, inputs):
+        dt_t, xc_t, bm_t, cm_t = inputs              # (B,d),(B,d),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a)            # (B,d,N)
+        dbx = (dt_t * xc_t)[..., None] * bm_t[:, None, :]
+        h1 = da * h + dbx
+        y = jnp.einsum("bdn,bn->bd", h1, cm_t)
+        return h1, y
+
+    h0 = jnp.zeros((B, d, N), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, h0,
+        (dt.swapaxes(0, 1), xc.swapaxes(0, 1),
+         bm.swapaxes(0, 1), cm.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)
+
+
+def slstm_ref(gx: jax.Array, r_h: jax.Array, num_heads: int) -> jax.Array:
+    """Sequential sLSTM oracle (stabilized exponential gating).
+
+    gx: (B,S,4d) input gates [i|f|z|o]; r_h: (H, dh, 4dh) block-diagonal
+    recurrent weights -> h: (B,S,d)."""
+    B, S, d4 = gx.shape
+    d = d4 // 4
+    H = num_heads
+    dh = d // H
+
+    def step(state, g):
+        h0, c0, n0, m0 = state
+        rec = jnp.einsum("bhd,hde->bhe", h0.reshape(B, H, dh), r_h)
+        rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3) \
+                 .reshape(B, 4 * d)
+        gates = g + rec
+        it, ft, zt, ot = jnp.split(gates, 4, axis=-1)
+        lf = jax.nn.log_sigmoid(ft)
+        m1 = jnp.maximum(lf + m0, it)
+        ip = jnp.exp(it - m1)
+        fp = jnp.exp(lf + m0 - m1)
+        c1 = fp * c0 + ip * jnp.tanh(zt)
+        n1 = jnp.maximum(fp * n0 + ip, 1e-6)
+        h1 = jax.nn.sigmoid(ot) * c1 / n1
+        return (h1, c1, n1, m1), h1
+
+    z = jnp.zeros((B, d), jnp.float32)
+    state0 = (z, z, z, jnp.full((B, d), -1e9, jnp.float32))
+    _, hs = jax.lax.scan(step, state0, gx.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)

@@ -1,0 +1,462 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lowers the cell's step function (train_step / prefill_step /
+     decode_step) with FSDP/TP/EP/SP shardings from the logical rules,
+  3. compiles it — sharding mismatches, unsupported collectives or
+     compile-time OOM are FAILURES of the framework,
+  4. records memory_analysis / cost_analysis / collective bytes into a
+     JSON report consumed by benchmarks/roofline.py and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun
+  python -m repro.launch.dryrun --ltfb            # paper-technique cell
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MeshConfig, OptimizerConfig, replace
+from repro.configs.registry import (dryrun_cells, get_config, get_shape,
+                                    shapes_for)
+from repro.launch import specs as specs_lib
+from repro.launch.mesh import make_ltfb_mesh, make_production_mesh
+from repro.parallel import roofline
+from repro.parallel.sharding import tree_shardings, use_sharding
+from repro.train import steps as steps_lib
+
+
+def default_opt_for(cfg) -> OptimizerConfig:
+    """Adafactor for >=30B params (Adam moments would not fit HBM)."""
+    if cfg.param_count() >= 30e9:
+        return OptimizerConfig(name="adafactor")
+    return OptimizerConfig(name="adam")
+
+
+# sharding presets (perf-iteration levers, EXPERIMENTS.md §Perf):
+#  base — FSDP over data, TP/EP over model, SP on the residual stream
+#  dp   — pure data parallelism: batch over BOTH axes, weights replicated
+#         (right for <1B models where 16-way TP is pure collective waste)
+#  dp_fsdp — batch over both axes, weights FSDP over data (1-8B models)
+PRESETS = {
+    "base": {},
+    "dp": {"batch": ("pod", "data", "model"), "heads": None,
+           "kv_heads": None, "mlp_act": None, "experts_act": None,
+           "seq_sp": None, "state": None, "act_embed": None,
+           "embed": None, "vocab": None, "heads_w": None, "mlp": None,
+           "experts": None, "state_w": None, "kv_seq": None},
+    "dp_fsdp": {"batch": ("pod", "data", "model"), "heads": None,
+                "kv_heads": None, "mlp_act": None, "experts_act": None,
+                "seq_sp": None, "state": None, "act_embed": None,
+                "embed": ("data",), "vocab": ("model",),
+                "heads_w": None, "mlp": None,
+                "experts": ("model",), "state_w": None,
+                "kv_seq": ("model",)},
+    # serve — weights-stationary decode: pure TP over `model` (weights
+    # never gathered; per-token collectives are tiny activation
+    # all-reduces), batch DP over (pod, data), KV cache seq over `model`.
+    "serve": {"batch": ("pod", "data"), "seq_sp": None,
+              "embed": None, "vocab": "model", "heads_w": "model",
+              "mlp": "model", "experts": "model", "state_w": "model",
+              "kv_seq": "model"},
+}
+
+
+def mesh_label(multi_pod: bool) -> str:
+    return "2pod_2x16x16" if multi_pod else "1pod_16x16"
+
+
+def _sharded_bytes(shapes_tree, shardings_tree) -> int:
+    """Exact per-chip resident bytes of a sharded pytree."""
+    total = 0
+    for sds, sh in zip(jax.tree.leaves(shapes_tree),
+                       jax.tree.leaves(shardings_tree)):
+        shard_shape = sh.shard_shape(sds.shape)
+        n = sds.dtype.itemsize
+        for d in shard_shape:
+            n *= d
+        total += n
+    return total
+
+
+def _residual_bytes(cfg, shape, chips: int, seq_parallel: bool) -> int:
+    """Analytic activation-residual residency for remat='full': one saved
+    (B, S, d_model) input per layer, sharded over batch (+ seq if SP)."""
+    div = chips if seq_parallel else max(1, chips // 16)
+    per_layer = shape.global_batch * shape.seq_len * cfg.d_model * 2
+    return cfg.num_layers * per_layer // max(1, div)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rules: Optional[Dict[str, Any]] = None,
+             mesh_cfg: Optional[MeshConfig] = None,
+             preset: str = "base",
+             cfg_overrides: Optional[Dict[str, Any]] = None,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    rules = dict(PRESETS.get(preset, {}), **(rules or {}))
+    mesh_cfg = mesh_cfg or MeshConfig(remat="full")
+    if mesh_cfg.seq_parallel and preset == "base":
+        rules.setdefault("seq_sp", "model")
+    opt_cfg = default_opt_for(cfg)
+
+    t0 = time.perf_counter()
+    with mesh, use_sharding(mesh, **rules):
+        if shape.kind == "train":
+            state_sh, state_ax = specs_lib.state_specs(cfg, opt_cfg)
+            state_shardings = tree_shardings(mesh, state_ax, state_sh,
+                                             **rules)
+            batch_sh = specs_lib.train_input_specs(cfg, shape)
+            batch_shardings = tree_shardings(
+                mesh, specs_lib.batch_axes(batch_sh), batch_sh, **rules)
+            step = steps_lib.make_lm_train_step(cfg, opt_cfg, mesh_cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(state_shardings, batch_shardings),
+                             out_shardings=(state_shardings, None),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_sh, batch_sh)
+        elif shape.kind == "prefill":
+            p_sh, p_ax = specs_lib.param_specs(cfg)
+            p_shardings = tree_shardings(mesh, p_ax, p_sh, **rules)
+            batch_sh = specs_lib.prefill_input_specs(cfg, shape)
+            batch_shardings = tree_shardings(
+                mesh, specs_lib.batch_axes(batch_sh), batch_sh, **rules)
+            step = steps_lib.make_lm_prefill_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(p_shardings, batch_shardings))
+            lowered = jitted.lower(p_sh, batch_sh)
+        else:  # decode
+            p_sh, p_ax = specs_lib.param_specs(cfg)
+            p_shardings = tree_shardings(mesh, p_ax, p_sh, **rules)
+            tok_sh, cache_sh, cache_ax, idx_sh = \
+                specs_lib.decode_input_specs(cfg, shape)
+            cache_shardings = tree_shardings(mesh, cache_ax, cache_sh,
+                                             **rules)
+            tok_shardings = tree_shardings(
+                mesh, {"t": ("batch", None)}, {"t": tok_sh}, **rules)["t"]
+            step = steps_lib.make_lm_decode_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_shardings, tok_shardings, cache_shardings,
+                              None),
+                out_shardings=(None, cache_shardings),
+                donate_argnums=(2,))
+            lowered = jitted.lower(p_sh, tok_sh, cache_sh, idx_sh)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    report = roofline.analyze(
+        arch, shape_name, mesh_label(multi_pod), chips, cost, hlo,
+        roofline.model_flops_for(cfg, shape), mem)
+    elapsed = time.perf_counter() - t0
+
+    # analytic residency (TPU target): weights/opt-state/cache are exactly
+    # sharded; + remat residuals for training. The XLA-CPU temp arena is
+    # schedule-pessimistic (no TPU liveness-minimizing passes), so both
+    # numbers are recorded.
+    if shape.kind == "train":
+        analytic_state = _sharded_bytes(state_sh, state_shardings)
+        analytic_resident = analytic_state + _residual_bytes(
+            cfg, shape, chips, mesh_cfg.seq_parallel)
+    elif shape.kind == "prefill":
+        analytic_resident = _sharded_bytes(p_sh, p_shardings)
+    else:
+        analytic_resident = _sharded_bytes(p_sh, p_shardings) \
+            + _sharded_bytes(cache_sh, cache_shardings)
+
+    # "kernel-deployed" variant: tagged pure-JAX scan traffic replaced by
+    # the analytic HBM traffic of the corresponding Pallas kernels
+    # (kernels/flash_attention.py, kernels/slstm.py) — DESIGN.md §6.
+    credits = roofline.kernel_credit_bytes(cfg, shape, chips)
+    tagged = report.tag_bytes or {}
+    credited = sum(tagged.get(t, 0.0) for t in credits)
+    bytes_kernel = report.bytes_per_chip - credited \
+        + sum(v for t, v in credits.items() if tagged.get(t, 0.0) > 0)
+    t_memory_kernel = bytes_kernel / roofline.HBM_BW
+    # collective credit: manual-VJP kernels all-reduce weight grads once
+    coll_credits = roofline.kernel_credit_coll_bytes(cfg, shape, chips)
+    tagged_coll = report.tag_coll_bytes or {}
+    coll_kernel = report.coll_bytes_per_chip \
+        - sum(tagged_coll.get(t, 0.0) for t in coll_credits) \
+        + sum(v for t, v in coll_credits.items()
+              if tagged_coll.get(t, 0.0) > 0)
+    t_coll_kernel = coll_kernel / roofline.ICI_BW
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_label(multi_pod),
+        "chips": chips, "ok": True, "compile_seconds": elapsed,
+        "optimizer": opt_cfg.name,
+        "params": cfg.param_count(),
+        "params_active": cfg.param_count(active_only=True),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_bytes_per_device": report.peak_bytes_per_chip,
+            "analytic_resident_bytes": analytic_resident,
+            "fits_hbm": report.peak_bytes_per_chip <= roofline.HBM_PER_CHIP,
+            "analytic_fits_hbm":
+                analytic_resident <= 0.75 * roofline.HBM_PER_CHIP,
+        },
+        "roofline": report.to_dict(),
+        "roofline_kernel": {
+            "t_memory": t_memory_kernel,
+            "t_collective": t_coll_kernel,
+            "bytes_per_chip": bytes_kernel,
+            "coll_bytes_per_chip": coll_kernel,
+            "credited_tags": {t: tagged.get(t, 0.0) for t in credits},
+            "credited_coll_tags": {t: tagged_coll.get(t, 0.0)
+                                   for t in coll_credits},
+            "analytic_kernel_bytes": credits,
+            "step_time": max(report.t_compute, t_memory_kernel,
+                             t_coll_kernel),
+            "mfu": report.model_flops / (roofline.PEAK_FLOPS * max(
+                report.t_compute, t_memory_kernel, t_coll_kernel))
+            if max(report.t_compute, t_memory_kernel,
+                   t_coll_kernel) > 0 else 0.0,
+        },
+        "rules": {k: str(v) for k, v in (rules or {}).items()},
+        "remat": mesh_cfg.remat,
+    }
+    if verbose:
+        gb = 1024 ** 3
+        print(f"[{arch} | {shape_name} | {mesh_label(multi_pod)}] "
+              f"compile={elapsed:.1f}s")
+        print(f"  memory/device: args={mem.argument_size_in_bytes/gb:.2f}G "
+              f"temp={mem.temp_size_in_bytes/gb:.2f}G "
+              f"out={mem.output_size_in_bytes/gb:.2f}G  "
+              f"peak={report.peak_bytes_per_chip/gb:.2f}G "
+              f"fits_16G={result['memory']['fits_hbm']} "
+              f"analytic={analytic_resident/gb:.2f}G")
+        print(f"  roofline: compute={report.t_compute*1e3:.2f}ms "
+              f"memory={report.t_memory*1e3:.2f}ms "
+              f"collective={report.t_collective*1e3:.2f}ms "
+              f"-> bottleneck={report.bottleneck} "
+              f"(useful_flops={report.useful_flops_ratio:.2f}, "
+              f"mfu@roofline={report.mfu:.2%})")
+        print(f"  collectives: { {k: f'{v/gb:.2f}G' for k, v in (report.coll_detail or {}).items()} }")
+        if credits:
+            print(f"  kernel-deployed: memory={t_memory_kernel*1e3:.2f}ms "
+                  f"collective={t_coll_kernel*1e3:.2f}ms "
+                  f"mfu={result['roofline_kernel']['mfu']:.2%} "
+                  f"(credited { {k: f'{v/gb:.1f}G' for k, v in tagged.items() if v} })")
+    return result
+
+
+def run_ltfb_cell(scope: str = "generator", quantize: bool = False,
+                  verbose: bool = True) -> Dict[str, Any]:
+    """Dry-run the paper's technique itself: a 32-trainer LTFB tournament
+    step (model exchange + local eval + winner select) on a
+    ('trainer','model') mesh — collective-permute over trainers.
+
+    Variants (EXPERIMENTS.md §Perf cell 3):
+      scope='full'       — naive full-model exchange
+      scope='generator'  — the paper's optimization (discriminators local)
+      quantize=True      — beyond-paper int8 wire format
+    """
+    from repro.configs.icf_cyclegan import FULL as CCFG
+    from repro.core import ltfb
+    from repro.models import icf_cyclegan as cg
+
+    K = 32
+    mesh = make_ltfb_mesh(K, 16)
+    t0 = time.perf_counter()
+
+    def metric(params, batch):
+        return cg.discriminator_metric(params, CCFG, batch)
+
+    p_sh = jax.eval_shape(
+        lambda: jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (K,) + x.shape),
+            cg.init_cyclegan(CCFG, jax.random.PRNGKey(0))[0]))
+    B = 128 * 4   # tournament_batches * paper mini-batch
+    batch_sh = {"x": jax.ShapeDtypeStruct((K, B, CCFG.input_dim),
+                                          jnp.float32),
+                "y": jax.ShapeDtypeStruct((K, B, CCFG.output_dim),
+                                          jnp.float32)}
+
+    step = ltfb.make_ltfb_step(metric, K, mesh, axis="trainer",
+                               scope=scope, quantize=quantize)
+    lowered = step.lower(p_sh, batch_sh, jax.ShapeDtypeStruct((), jnp.int32))
+    compiled = lowered.compile()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = roofline.parse_collectives(hlo)
+    elapsed = time.perf_counter() - t0
+    variant = f"{scope}{'_int8' if quantize else ''}"
+    result = {
+        "arch": "icf-cyclegan-ltfb", "shape": f"tournament_k32_{variant}",
+        "mesh": "ltfb_32x16", "chips": mesh.devices.size, "ok": True,
+        "compile_seconds": elapsed,
+        "collective_bytes": coll.total_bytes,
+        "collectives": coll.bytes_by_op,
+        "counts": coll.count_by_op,
+        "exchange_seconds": coll.total_bytes / roofline.ICI_BW,
+        "flops": cost.get("flops", 0.0),
+        "memory": {"temp_bytes": mem.temp_size_in_bytes},
+    }
+    if verbose:
+        print(f"[LTFB tournament | K=32 | 512 chips | {variant}] "
+              f"compile={elapsed:.1f}s")
+        print(f"  exchange bytes/trainer: "
+              f"{coll.total_bytes / 2**20:.1f} MiB "
+              f"-> {result['exchange_seconds']*1e3:.2f} ms on ICI "
+              f"({coll.bytes_by_op})")
+    return result
+
+
+def run_pp_cell(verbose: bool = True) -> Dict[str, Any]:
+    """Pipeline-parallelism demo cell: a 4-stage x 8-DP x 8-TP (256-chip)
+    circular pipeline over transformer-block stages; reports the
+    collective-permute schedule and bubble fraction."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    import numpy as np
+
+    from repro.parallel.pipeline import (bubble_fraction,
+                                         make_pipelined_forward)
+
+    S, M, mb, d, dff = 4, 16, 8, 2048, 8192
+    devices = np.asarray(jax.devices()[:256]).reshape(S, 8, 8)
+    mesh = Mesh(devices, ("stage", "data", "model"))
+    t0 = time.perf_counter()
+
+    def stage_fn(params, h):
+        w1, w2 = params
+        return h + jax.nn.silu(h @ w1) @ w2
+
+    p_sh = (jax.ShapeDtypeStruct((S, d, dff), jnp.bfloat16),
+            jax.ShapeDtypeStruct((S, dff, d), jnp.bfloat16))
+    x_sh = jax.ShapeDtypeStruct((M, mb, 1024, d), jnp.bfloat16)
+
+    pipe = make_pipelined_forward(
+        stage_fn, mesh, S, "stage",
+        param_spec=(P("stage", None, "model"), P("stage", "model", None)),
+        x_spec=P(None, "data"))
+
+    def loss(params, x):
+        return jnp.mean(jnp.square(pipe(params, x)))
+
+    co = jax.jit(jax.grad(loss)).lower(p_sh, x_sh).compile()
+    coll = roofline.parse_collectives(co.as_text())
+    elapsed = time.perf_counter() - t0
+    result = {
+        "arch": "pp-demo-4stage", "shape": f"microbatches_{M}",
+        "mesh": "pp_4x8x8", "chips": 256, "ok": True,
+        "compile_seconds": elapsed,
+        "bubble_fraction": bubble_fraction(S, M),
+        "collectives": coll.bytes_by_op,
+        "counts": coll.count_by_op,
+    }
+    if verbose:
+        print(f"[PP demo | 4 stages x 8 DP x 8 TP | M={M}] "
+              f"compile={elapsed:.1f}s bubble={bubble_fraction(S, M):.1%}")
+        print(f"  collectives: {coll.bytes_by_op} ({coll.count_by_op})")
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ltfb", action="store_true")
+    ap.add_argument("--pp", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--remat", default="full")
+    ap.add_argument("--no-seq-parallel", action="store_true")
+    ap.add_argument("--preset", default="base", choices=sorted(PRESETS))
+    ap.add_argument("--suffix", default="",
+                    help="filename suffix for perf-iteration variants")
+    ap.add_argument("--moe-dispatch", default=None,
+                    choices=["einsum", "scatter"])
+    args = ap.parse_args(argv)
+    cfg_overrides = {}
+    if args.moe_dispatch:
+        cfg_overrides["moe.dispatch"] = args.moe_dispatch
+
+    cells = dryrun_cells()
+    if args.list:
+        for a, s in cells:
+            print(f"{a} {s}")
+        return 0
+
+    if args.ltfb:
+        for scope, quant in (("full", False), ("generator", False),
+                             ("generator", True)):
+            res = run_ltfb_cell(scope=scope, quantize=quant)
+            _save(args.out,
+                  f"ltfb_tournament_{scope}{'_int8' if quant else ''}", res)
+        return 0
+
+    if args.pp:
+        res = run_pp_cell()
+        _save(args.out, "pp_demo", res)
+        return 0
+
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+    if not cells:
+        print("no matching cells", file=sys.stderr)
+        return 1
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    mesh_cfg = MeshConfig(remat=args.remat,
+                          seq_parallel=not args.no_seq_parallel)
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            try:
+                res = run_cell(arch, shape, multi, mesh_cfg=mesh_cfg,
+                               preset=args.preset,
+                               cfg_overrides=cfg_overrides or None)
+            except Exception as e:
+                failures += 1
+                res = {"arch": arch, "shape": shape,
+                       "mesh": mesh_label(multi), "ok": False,
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]}
+                print(f"[{arch} | {shape} | {mesh_label(multi)}] FAILED: "
+                      f"{type(e).__name__}: {str(e)[:300]}")
+            _save(args.out,
+                  f"{arch}__{shape}__{mesh_label(multi)}{args.suffix}", res)
+    print(f"dry-run complete: {len(cells) * len(meshes) - failures}"
+          f"/{len(cells) * len(meshes)} cells OK")
+    return 1 if failures else 0
+
+
+def _save(out_dir: str, name: str, result: Dict[str, Any]):
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(result, f, indent=2, default=str)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

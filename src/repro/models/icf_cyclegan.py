@@ -1,0 +1,174 @@
+"""The paper's surrogate model: CycleGAN for ICF (Section II-D, Fig. 2).
+
+Components (all fully-connected, per the paper):
+  * multimodal autoencoder — encoder ``E: R^out -> R^20`` and decoder
+    ``Dec: R^20 -> R^out`` over the output bundle y = (15 scalars,
+    12 x 64x64 images) — *internal consistency* (joint prediction).
+  * forward model ``F: R^5 -> R^20`` into the AE latent.
+  * latent discriminator ``D: R^20 -> [0,1]`` — *physical consistency*
+    (adversarial: F(x) latents vs E(y) latents).
+  * inverse model ``G: R^20 -> R^5`` with ``G(F(x)) ~= x`` —
+    *self consistency* (cycle, MAE).
+
+Parameters are split into ``{"gen": ..., "disc": ...}`` so the LTFB GAN
+variant (paper Section III-C / Fig. 6) can exchange generators while
+keeping discriminators local.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.icf_cyclegan import CycleGANConfig
+from repro.models.layers import KeyGen, dense_init
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# MLP helper
+# ---------------------------------------------------------------------------
+
+
+def init_mlp_stack(keys: KeyGen, dims, dtype) -> Tuple[Params, Params]:
+    p = {"w": [], "b": []}
+    for i in range(len(dims) - 1):
+        p["w"].append(dense_init(keys(), dims[i], dims[i + 1], dtype))
+        p["b"].append(jnp.zeros((dims[i + 1],), dtype))
+    p["w"] = tuple(p["w"])
+    p["b"] = tuple(p["b"])
+    axes = {"w": tuple(("embed", "mlp") for _ in p["w"]),
+            "b": tuple(("mlp",) for _ in p["b"])}
+    return p, axes
+
+
+def mlp_apply(p: Params, x: jax.Array, final_act=None) -> jax.Array:
+    n = len(p["w"])
+    for i, (w, b) in enumerate(zip(p["w"], p["b"])):
+        x = x @ w + b
+        if i < n - 1:
+            x = jax.nn.leaky_relu(x, 0.2)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# CycleGAN init / apply
+# ---------------------------------------------------------------------------
+
+
+def init_cyclegan(cfg: CycleGANConfig, key: jax.Array) -> Tuple[Params, Params]:
+    keys = KeyGen(key)
+    dt = jnp.dtype(cfg.dtype)
+    d_out, z = cfg.output_dim, cfg.latent_dim
+    p: Params = {"gen": {}, "disc": {}}
+    a: Params = {"gen": {}, "disc": {}}
+    p["gen"]["fwd"], a["gen"]["fwd"] = init_mlp_stack(
+        keys, (cfg.input_dim, *cfg.fwd_hidden, z), dt)
+    p["gen"]["inv"], a["gen"]["inv"] = init_mlp_stack(
+        keys, (z, *cfg.inv_hidden, cfg.input_dim), dt)
+    p["gen"]["enc"], a["gen"]["enc"] = init_mlp_stack(
+        keys, (d_out, *cfg.enc_hidden, z), dt)
+    p["gen"]["dec"], a["gen"]["dec"] = init_mlp_stack(
+        keys, (z, *cfg.dec_hidden, d_out), dt)
+    p["disc"], a["disc"] = init_mlp_stack(
+        keys, (z, *cfg.disc_hidden, 1), dt)
+    return p, a
+
+
+def forward_model(gen: Params, x: jax.Array) -> jax.Array:
+    """F: experiment params (B,5) -> latent (B,20)."""
+    return mlp_apply(gen["fwd"], x)
+
+
+def inverse_model(gen: Params, zlat: jax.Array) -> jax.Array:
+    """G: latent -> experiment params."""
+    return mlp_apply(gen["inv"], zlat)
+
+
+def encode(gen: Params, y: jax.Array) -> jax.Array:
+    return mlp_apply(gen["enc"], y)
+
+
+def decode(gen: Params, zlat: jax.Array) -> jax.Array:
+    return mlp_apply(gen["dec"], zlat)
+
+
+def discriminate(disc: Params, zlat: jax.Array) -> jax.Array:
+    """D: latent -> logit (pre-sigmoid)."""
+    return mlp_apply(disc, zlat)[..., 0]
+
+
+def predict(gen: Params, x: jax.Array) -> jax.Array:
+    """Surrogate prediction: x -> output bundle (scalars + images)."""
+    return decode(gen, forward_model(gen, x))
+
+
+# ---------------------------------------------------------------------------
+# Losses (paper: MAE for consistency, adversarial on latent)
+# ---------------------------------------------------------------------------
+
+
+def _mae(a, b):
+    return jnp.mean(jnp.abs(a - b))
+
+
+def generator_loss(gen: Params, disc: Params, cfg: CycleGANConfig,
+                   batch: Dict[str, jax.Array]):
+    """batch: {'x': (B,5), 'y': (B, output_dim)}."""
+    x, y = batch["x"], batch["y"]
+    z_fake = forward_model(gen, x)
+    z_real = encode(gen, y)
+    y_hat = decode(gen, z_fake)
+    y_rec = decode(gen, z_real)
+    x_cyc = inverse_model(gen, z_fake)
+
+    l_recon = _mae(y_rec, y)                        # AE reconstruction
+    l_forward = _mae(y_hat, y)                      # internal consistency
+    l_latent = _mae(z_fake, jax.lax.stop_gradient(z_real))
+    l_cycle = _mae(x_cyc, x)                        # self consistency
+    # non-saturating GAN loss against the (frozen) local discriminator
+    logit_fake = discriminate(jax.lax.stop_gradient(disc), z_fake)
+    l_adv = jnp.mean(jax.nn.softplus(-logit_fake))
+
+    loss = (cfg.w_recon * l_recon + cfg.w_forward * (l_forward + l_latent)
+            + cfg.w_cycle * l_cycle + cfg.w_adv * l_adv)
+    metrics = {"recon": l_recon, "forward": l_forward, "cycle": l_cycle,
+               "adv_gen": l_adv, "latent": l_latent}
+    return loss, metrics
+
+
+def discriminator_loss(disc: Params, gen: Params, cfg: CycleGANConfig,
+                       batch: Dict[str, jax.Array]):
+    x, y = batch["x"], batch["y"]
+    z_fake = jax.lax.stop_gradient(forward_model(gen, x))
+    z_real = jax.lax.stop_gradient(encode(gen, y))
+    logit_real = discriminate(disc, z_real)
+    logit_fake = discriminate(disc, z_fake)
+    loss = jnp.mean(jax.nn.softplus(-logit_real)) \
+        + jnp.mean(jax.nn.softplus(logit_fake))
+    acc = 0.5 * (jnp.mean((logit_real > 0)) + jnp.mean((logit_fake < 0)))
+    return loss, {"disc_loss": loss, "disc_acc": acc}
+
+
+def validation_metric(params: Params, cfg: CycleGANConfig,
+                      batch: Dict[str, jax.Array]) -> jax.Array:
+    """Tournament / validation metric (lower = better): forward + inverse
+    loss on held-out data — the paper's generalization measure."""
+    gen = params["gen"]
+    x, y = batch["x"], batch["y"]
+    z = forward_model(gen, x)
+    return _mae(decode(gen, z), y) + _mae(inverse_model(gen, z), x)
+
+
+def discriminator_metric(params: Params, cfg: CycleGANConfig,
+                         batch: Dict[str, jax.Array]) -> jax.Array:
+    """GAN-LTFB tournament metric: how well a (possibly foreign) generator
+    fools the LOCAL discriminator on tournament data (lower = better,
+    i.e. mean softplus(-D(F(x)))) — paper Fig. 6(b)."""
+    logit = discriminate(params["disc"],
+                         forward_model(params["gen"], batch["x"]))
+    return jnp.mean(jax.nn.softplus(-logit))

@@ -1,0 +1,629 @@
+"""Core transformer building blocks (pure-functional JAX).
+
+Every ``init_*`` function returns ``(params, axes)`` where ``axes`` is a
+pytree of logical-axis tuples parallel to ``params`` (consumed by
+``repro.parallel.sharding.tree_shardings`` for FSDP/TP/EP placement).
+
+All forward functions are shape-polymorphic over batch/seq and annotate
+activations with ``constrain`` so GSPMD propagates DP/TP/SP shardings.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+class KeyGen:
+    """Sequential PRNG key dispenser."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+
+    def __call__(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    # GPT-style small init: keeps tied-head logits O(1) at initialization
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> Tuple[Params, Params]:
+    return {"scale": jnp.ones((d,), dtype)}, {"scale": (None,)}
+
+
+def rmsnorm(params: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int]) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x: (B, S, H, D); positions: (3, B, S) — (temporal, height, width)
+    components.  ``sections`` partitions the D/2 rotary frequencies among
+    the three components.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                               # (D/2,)
+    # section id per frequency
+    sec = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    assert sec.shape[0] == d // 2, (sections, d)
+    pos = positions.astype(jnp.float32)                        # (3,B,S)
+    pos_per_freq = jnp.take(pos, sec, axis=0)                  # (D/2,B,S)
+    angles = jnp.transpose(pos_per_freq, (1, 2, 0)) * freqs    # (B,S,D/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def default_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    return jnp.arange(seq, dtype=jnp.int32)[None, :] + offset \
+        + jnp.zeros((batch, 1), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + RoPE/M-RoPE + qk-norm + optional bias + KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(keys: KeyGen, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    p: Params = {
+        "wq": dense_init(keys(), d, cfg.q_dim, dt),
+        "wk": dense_init(keys(), d, cfg.kv_dim, dt),
+        "wv": dense_init(keys(), d, cfg.kv_dim, dt),
+        "wo": dense_init(keys(), cfg.q_dim, d, dt),
+    }
+    a: Params = {
+        "wq": ("embed", "heads_w"),
+        "wk": ("embed", "heads_w"),
+        "wv": ("embed", "heads_w"),
+        "wo": ("heads_w", "embed"),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+        a["bq"] = ("heads_w",)
+        a["bk"] = ("heads_w",)
+        a["bv"] = ("heads_w",)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+        a["q_norm"] = (None,)
+        a["k_norm"] = (None,)
+    return p, a
+
+
+def _project_qkv(params: Params, cfg: ModelConfig, x: jax.Array,
+                 positions: jax.Array):
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.num_heads, hd)
+    k = k.reshape(B, S, cfg.num_kv_heads, hd)
+    v = v.reshape(B, S, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm({"scale": params["q_norm"]}, q, cfg.norm_eps)
+        k = rmsnorm({"scale": params["k_norm"]}, k, cfg.norm_eps)
+    if cfg.use_mrope:
+        sec = cfg.frontend.mrope_sections
+        q = apply_mrope(q, positions, cfg.rope_theta, sec)
+        k = apply_mrope(k, positions, cfg.rope_theta, sec)
+    else:
+        if positions.ndim == 3:       # (3,B,S) given but plain rope
+            positions = positions[0]
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = constrain(k, "batch", "seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """Reference grouped-query attention. q: (B,S,H,D), k/v: (B,S,Hkv,D).
+    Materializes the (S, S) score matrix — short sequences only."""
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    q = q.reshape(B, S, Hkv, g, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(D)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+        scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, D)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, k_chunk: int = 1024) -> jax.Array:
+    """Flash-style attention: online softmax over KV chunks via lax.scan.
+
+    The pure-JAX twin of ``kernels/flash_attention.py`` — never
+    materializes the (S, S) score matrix in HBM (peak extra memory is one
+    (B, S, H, k_chunk) block), which is what makes prefill_32k lowerable
+    and is the memory-roofline optimization the Pallas kernel performs in
+    VMEM on real TPUs.
+    """
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    Sk = k.shape[1]
+    C = min(k_chunk, Sk)
+    while Sk % C:
+        C -= 1
+    n_chunks = Sk // C
+    scale = 1.0 / math.sqrt(D)
+    qg = (q * scale).reshape(B, S, Hkv, g, D).astype(jnp.float32)
+    kc = k.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+
+    def step(carry, inp):
+        acc, m, l = carry                     # (B,S,Hkv,g,D), (B,S,Hkv,g)x2
+        kb, vb, ci = inp                      # (B,C,Hkv,D), (B,C,Hkv,D), ()
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb.astype(jnp.float32))
+        if causal:
+            kv_pos = ci * C + jnp.arange(C, dtype=jnp.int32)
+            mask = q_pos[:, None] >= kv_pos[None, :]     # (S, C)
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, S, Hkv, g, D), jnp.float32)
+    m0 = jnp.full((B, S, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, g), jnp.float32)
+    with jax.named_scope("flash_attention"):
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0),
+            (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (training-memory-correct)
+#
+# Differentiating through the online-softmax scan would make scan-carry
+# residuals O(S * n_chunks); instead we save only (q, k, v, out, lse) and
+# run the textbook flash-attention backward as a second chunked scan —
+# exactly what the Pallas kernel does on TPU (kernels/flash_attention.py
+# is the forward; its backward twin shares this structure).
+# ---------------------------------------------------------------------------
+
+
+def _flash_fwd_scan(q, k, v, causal: bool, k_chunk: int):
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    Sk = k.shape[1]
+    C = min(k_chunk, Sk)
+    while Sk % C:
+        C -= 1
+    n_chunks = Sk // C
+    scale = 1.0 / math.sqrt(D)
+    qg = (q.astype(jnp.float32) * scale).reshape(B, S, Hkv, g, D)
+    kc = k.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+
+    def step(carry, inp):
+        acc, m, l = carry
+        kb, vb, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, kb.astype(jnp.float32))
+        if causal:
+            kv_pos = ci * C + jnp.arange(C, dtype=jnp.int32)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(jnp.isfinite(s), jnp.exp(s - m_safe[..., None]), 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p, vb.astype(jnp.float32))
+        return (acc_new, m_new, l_new), None
+
+    acc0 = jnp.zeros((B, S, Hkv, g, D), jnp.float32)
+    m0 = jnp.full((B, S, Hkv, g), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, S, Hkv, g), jnp.float32)
+    with jax.named_scope("flash_attention"):
+        (acc, m, l), _ = jax.lax.scan(
+            step, (acc0, m0, l0),
+            (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+        l = jnp.maximum(l, 1e-30)
+        out = (acc / l[..., None]).reshape(B, S, H, D).astype(q.dtype)
+    lse = jnp.where(jnp.isfinite(m), m + jnp.log(l), -jnp.inf)  # (B,S,h,g)
+    return out, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention_jax(q, k, v, causal: bool = True, k_chunk: int = 1024):
+    out, _ = _flash_fwd_scan(q, k, v, causal, k_chunk)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, k_chunk):
+    out, lse = _flash_fwd_scan(q, k, v, causal, k_chunk)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, k_chunk, res, dout):
+    q, k, v, out, lse = res
+    B, S, H, D = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    Sk = k.shape[1]
+    C = min(k_chunk, Sk)
+    while Sk % C:
+        C -= 1
+    n_chunks = Sk // C
+    scale = 1.0 / math.sqrt(D)
+    qg = q.astype(jnp.float32).reshape(B, S, Hkv, g, D)
+    og = out.astype(jnp.float32).reshape(B, S, Hkv, g, D)
+    dog = dout.astype(jnp.float32).reshape(B, S, Hkv, g, D)
+    delta = jnp.sum(og * dog, axis=-1)                    # (B,S,h,g)
+    kc = k.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    vc = v.reshape(B, n_chunks, C, Hkv, D).swapaxes(0, 1)
+    q_pos = jnp.arange(S, dtype=jnp.int32)
+
+    def step(dq, inp):
+        kb, vb, ci = inp
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qg * scale,
+                       kb.astype(jnp.float32))
+        if causal:
+            kv_pos = ci * C + jnp.arange(C, dtype=jnp.int32)
+            mask = q_pos[:, None] >= kv_pos[None, :]
+            s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        lse_safe = jnp.where(jnp.isfinite(lse), lse, 0.0)
+        p = jnp.where(jnp.isfinite(s),
+                      jnp.exp(s - lse_safe[..., None]), 0.0)  # (B,S,h,g,C)
+        dv_c = jnp.einsum("bqhgk,bqhgd->bkhd", p, dog)
+        dp = jnp.einsum("bqhgd,bkhd->bqhgk", dog, vb.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * scale
+        dq = dq + jnp.einsum("bqhgk,bkhd->bqhgd", ds,
+                             kb.astype(jnp.float32))
+        dk_c = jnp.einsum("bqhgk,bqhgd->bkhd", ds, qg)
+        return dq, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((B, S, Hkv, g, D), jnp.float32)
+    with jax.named_scope("flash_attention_bwd"):
+        dq, (dk_c, dv_c) = jax.lax.scan(
+            step, dq0, (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+    dk = dk_c.swapaxes(0, 1).reshape(B, Sk, Hkv, D).astype(k.dtype)
+    dv = dv_c.swapaxes(0, 1).reshape(B, Sk, Hkv, D).astype(v.dtype)
+    return (dq.reshape(B, S, H, D).astype(q.dtype), dk, dv)
+
+
+flash_attention_jax.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def causal_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     causal: bool = True, impl: str = "auto",
+                     k_chunk: int = 1024) -> jax.Array:
+    if impl == "dense" or (impl == "auto" and q.shape[1] < 4096):
+        return dense_attention(q, k, v, causal)
+    return flash_attention_jax(q, k, v, causal, k_chunk)
+
+
+def attention_block(params: Params, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    """Full-sequence causal attention (training / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = causal_attention(q, k, v, impl=cfg.attn_impl,
+                           k_chunk=cfg.attn_chunk)
+    out = constrain(out, "batch", "seq", "heads", "head_dim")
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    return constrain(out, "batch", "seq", "act_embed")
+
+
+def attention_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
+                      positions: jax.Array):
+    """Like attention_block but also returns the (K, V) cache."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    out = causal_attention(q, k, v, impl=cfg.attn_impl,
+                           k_chunk=cfg.attn_chunk)
+    out = out.reshape(B, S, cfg.q_dim) @ params["wo"]
+    cache = {
+        "k": constrain(k, "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": constrain(v, "batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+    return constrain(out, "batch", "seq", "act_embed"), cache
+
+
+def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                     cache: Params, index: jax.Array,
+                     positions: jax.Array):
+    """Single-token decode with a KV cache of static length S_max.
+
+    x: (B, 1, d); cache['k'/'v']: (B, S_max, Hkv, D); index: scalar int32
+    position at which to write the new KV.  Returns (out, new_cache).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
+                                            k_new.astype(cache["k"].dtype),
+                                            index, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
+                                            v_new.astype(cache["v"].dtype),
+                                            index, axis=1)
+    k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
+    v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
+    S_max = k.shape[1]
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    g = H // Hkv
+    qh = q.reshape(B, Hkv, g, D)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qh, k,
+                        preferred_element_type=jnp.float32) / math.sqrt(D)
+    valid = (jnp.arange(S_max, dtype=jnp.int32) <= index)[None, None, None]
+    scores = jnp.where(valid, scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
+
+
+def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
+                         dtype=None):
+    dt = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (batch, max_len, cfg.num_kv_heads, hd)
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    axes = {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+    return cache, axes
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(keys: KeyGen, cfg: ModelConfig, d_ff: Optional[int] = None
+             ) -> Tuple[Params, Params]:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    f = d_ff or cfg.d_ff
+    p = {
+        "wi": dense_init(keys(), d, f, dt),
+        "wg": dense_init(keys(), d, f, dt),
+        "wo": dense_init(keys(), f, d, dt),
+    }
+    a = {"wi": ("embed", "mlp"), "wg": ("embed", "mlp"),
+         "wo": ("mlp", "embed")}
+    return p, a
+
+
+def mlp_block(params: Params, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["wg"]) * (x @ params["wi"])
+    h = constrain(h, "batch", "seq", "mlp_act")
+    return constrain(h @ params["wo"], "batch", "seq", "act_embed")
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (shared + routed, fine-grained, capacity-based)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(keys: KeyGen, cfg: ModelConfig) -> Tuple[Params, Params]:
+    m = cfg.moe
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    d_e = m.d_expert or cfg.d_ff
+    E = m.num_experts
+
+    def expert_stack(d_in, d_out):
+        ks = keys()
+        flat = jax.random.normal(ks, (E, d_in, d_out), jnp.float32)
+        return (flat / math.sqrt(d_in)).astype(dt)
+
+    p: Params = {
+        "router": dense_init(keys(), d, E, jnp.dtype("float32")),
+        "wi": expert_stack(d, d_e),
+        "wg": expert_stack(d, d_e),
+        "wo": expert_stack(d_e, d),
+    }
+    a: Params = {
+        "router": ("embed", None),
+        "wi": ("experts", "embed", "mlp"),
+        "wg": ("experts", "embed", "mlp"),
+        "wo": ("experts", "mlp", "embed"),
+    }
+    if m.num_shared_experts:
+        sp, sa = init_mlp(keys, cfg, d_ff=d_e * m.num_shared_experts)
+        p["shared"] = sp
+        a["shared"] = sa
+    return p, a
+
+
+import os as _os
+# GShard-style dispatch group size (dispatch tensor volume scales
+# linearly with this; perf knob — see EXPERIMENTS.md §Perf)
+MOE_GROUP_TOKENS = int(_os.environ.get("REPRO_MOE_GROUP", "1024"))
+
+
+def moe_block(params: Params, cfg: ModelConfig, x: jax.Array,
+              dropless: bool = False
+              ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Capacity-based top-k MoE with GShard group dispatch.
+
+    Tokens are split into groups of ~MOE_GROUP_TOKENS; routing positions
+    and the dispatch/combine one-hot tensors are built per group, keeping
+    the dispatch cost O(T * k * C_group) instead of O(T^2).  Under EP
+    sharding (experts -> "model", groups -> "batch") the (g,e) einsums
+    lower to all-to-alls — the MoE communication pattern of the roofline.
+
+    ``dropless=True`` (decode/eval) sizes the buffers so no token is ever
+    dropped, making prefill/decode bit-consistent with full forward.
+    Returns (out, aux) with load-balancing and z losses.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    T = B * S
+    # pick a group size dividing T
+    Tg = min(T, MOE_GROUP_TOKENS)
+    while T % Tg:
+        Tg -= 1
+    G = T // Tg
+    xt = x.reshape(G, Tg, d)
+
+    # bf16 inputs, f32 accumulation: avoids materializing + gathering a
+    # full f32 copy of the activations just for routing
+    logits = jnp.einsum("gtd,de->gte", xt,
+                        params["router"].astype(xt.dtype),
+                        preferred_element_type=jnp.float32)    # (G,Tg,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)              # (G,Tg,k)
+    gate_vals = gate_vals / jnp.clip(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    if dropless:
+        capacity = Tg   # per-expert worst case (choices per token distinct)
+    else:
+        capacity = max(1, int(m.capacity_factor * Tg * k / E))
+    # position of each (token, choice) within its expert's buffer (per group)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)      # (G,Tg,k,E)
+    flat = onehot.reshape(G, Tg * k, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(G, Tg, k, E)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1)             # (G,Tg,k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    cdt = jnp.dtype(cfg.dtype)
+    if m.dispatch == "scatter":
+        # beyond-paper dispatch: scatter tokens straight into the expert
+        # buffers and gather them back — O(T*k*d) traffic, zero dispatch
+        # matmul flops (vs O(T*E*C) one-hot tensors + 2*T*d*E*C flops)
+        gi = jnp.broadcast_to(
+            jnp.arange(G, dtype=jnp.int32)[:, None, None], (G, Tg, k))
+        pos_c = jnp.where(keep, pos, capacity)         # C = drop slot
+        vals = jnp.broadcast_to(xt.astype(cdt)[:, :, None, :],
+                                (G, Tg, k, d))
+        expert_in = jnp.zeros((G, E, capacity + 1, d), cdt) \
+            .at[gi, gate_idx, pos_c].add(vals)[:, :, :capacity]
+        expert_in = constrain(expert_in, "batch", "experts_act", None,
+                              "act_embed")
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                                   params["wg"])) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["wi"])
+        h = constrain(h, "batch", "experts_act", None, "mlp_act")
+        expert_out = jnp.einsum("gecf,efd->gecd", h, params["wo"])
+        expert_out = constrain(expert_out, "batch", "experts_act", None,
+                               "act_embed")
+        pad = jnp.zeros((G, E, 1, d), cdt)
+        picked = jnp.concatenate([expert_out, pad], axis=2)[
+            gi, gate_idx, pos_c]                        # (G,Tg,k,d)
+        out = jnp.sum(picked * gate_vals.astype(cdt)[..., None], axis=2)
+    else:
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                                dtype=cdt)              # (G,Tg,k,C)
+        disp = jnp.einsum("gtke,gtkc->gtec", onehot.astype(cdt), pos_oh)
+        expert_in = jnp.einsum("gtd,gtec->gecd", xt.astype(cdt), disp)
+        expert_in = constrain(expert_in, "batch", "experts_act", None,
+                              "act_embed")
+
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", expert_in,
+                                   params["wg"])) \
+            * jnp.einsum("gecd,edf->gecf", expert_in, params["wi"])
+        h = constrain(h, "batch", "experts_act", None, "mlp_act")
+        expert_out = jnp.einsum("gecf,efd->gecd", h,
+                                params["wo"])           # (G,E,C,d)
+        expert_out = constrain(expert_out, "batch", "experts_act", None,
+                               "act_embed")
+
+        comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot.astype(cdt),
+                          pos_oh, gate_vals.astype(cdt))
+        out = jnp.einsum("gecd,gtec->gtd", expert_out, comb)
+
+    if m.num_shared_experts:
+        out = out + mlp_block(params["shared"], xt)
+
+    # aux losses (Switch-style load balance + z-loss)
+    density = jnp.mean(
+        jnp.max(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))
+    density_proxy = jnp.mean(probs, axis=(0, 1))
+    aux = {
+        "moe_load_balance": jnp.sum(density * density_proxy) * E,
+        "moe_z": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+    }
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,436 @@
+"""Decoder-LM composition: embeds -> scanned block stack -> logits.
+
+Handles every assigned architecture family through `ModelConfig`:
+  dense / moe   — attention + (SwiGLU | MoE) blocks
+  hybrid        — jamba-style mamba/attention interleave (+ periodic MoE)
+  ssm           — xLSTM mLSTM/sLSTM stacks (no FFN)
+  vlm / audio   — same backbone; modality frontends are stubs that feed
+                  precomputed embeddings (`batch["embeds"]`) / token ids.
+
+The layer stack is grouped into a repeating *period* (lcm of the block
+pattern and the MoE period); parameters are stacked over periods and the
+stack is driven by ``jax.lax.scan`` — this keeps HLO size and compile time
+independent of depth, and gives the FSDP all-gather/compute overlap
+pattern on the period boundary.
+
+Three entry points mirror the dry-run shapes:
+  ``lm_loss``      (train_*)    — next-token CE + MoE aux losses
+  ``lm_prefill``   (prefill_*)  — forward + cache construction
+  ``lm_decode``    (decode_*/long_*) — single token with carried cache
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models import xlstm as X
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+class LayerSpec(NamedTuple):
+    kind: str      # 'a' attention | 'M' mamba | 'm' mLSTM | 's' sLSTM
+    ffn: str       # 'dense' | 'moe' | 'none'
+    d_ff: int
+
+
+def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    specs = []
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        pat = cfg.xlstm.pattern
+        return tuple(LayerSpec(pat[i % len(pat)], "none", 0)
+                     for i in range(cfg.num_layers))
+    pat = cfg.block_pattern
+    for i in range(cfg.num_layers):
+        kind = pat[i % len(pat)]
+        if cfg.moe is not None and cfg.is_moe_layer(i):
+            ffn = "moe"
+            d_ff = 0
+        elif cfg.moe is not None and i < cfg.moe.first_k_dense:
+            ffn, d_ff = "dense", (cfg.moe.dense_d_ff or cfg.d_ff)
+        elif cfg.d_ff > 0:
+            ffn, d_ff = "dense", cfg.d_ff
+        else:
+            ffn, d_ff = "none", 0
+        specs.append(LayerSpec(kind, ffn, d_ff))
+    return tuple(specs)
+
+
+def _grouping(cfg: ModelConfig) -> Tuple[int, int, int]:
+    """Return (k0 prefix layers, period length R, num periods P)."""
+    specs = layer_specs(cfg)
+    k0 = cfg.moe.first_k_dense if cfg.moe is not None else 0
+    body = len(specs) - k0
+    pat_len = len(cfg.xlstm.pattern) if (cfg.family == "ssm" and cfg.xlstm) \
+        else len(cfg.block_pattern)
+    moe_p = cfg.moe.moe_period if (cfg.moe and cfg.moe.moe_period > 1) else 1
+    R = math.lcm(pat_len, moe_p)
+    assert body % R == 0, (cfg.name, body, R)
+    # periods must be homogeneous
+    for j in range(R):
+        kinds = {specs[k0 + p * R + j] for p in range(body // R)}
+        assert len(kinds) == 1, (cfg.name, j, kinds)
+    return k0, R, body // R
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(keys: L.KeyGen, cfg: ModelConfig, spec: LayerSpec):
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    p: Params = {}
+    a: Params = {}
+    p["ln1"], a["ln1"] = L.init_rmsnorm(d, dt)
+    if spec.kind == "a":
+        p["mixer"], a["mixer"] = L.init_attention(keys, cfg)
+    elif spec.kind == "M":
+        p["mixer"], a["mixer"] = S.init_mamba(keys, cfg)
+    elif spec.kind == "m":
+        p["mixer"], a["mixer"] = X.init_mlstm(keys, cfg)
+    elif spec.kind == "s":
+        p["mixer"], a["mixer"] = X.init_slstm(keys, cfg)
+    else:
+        raise ValueError(spec.kind)
+    if spec.ffn == "dense":
+        p["ln2"], a["ln2"] = L.init_rmsnorm(d, dt)
+        p["ffn"], a["ffn"] = L.init_mlp(keys, cfg, d_ff=spec.d_ff)
+    elif spec.ffn == "moe":
+        p["ln2"], a["ln2"] = L.init_rmsnorm(d, dt)
+        p["ffn"], a["ffn"] = L.init_moe(keys, cfg)
+    return p, a
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _push_axis(axes_tree, name):
+    return jax.tree.map(
+        lambda t: (name,) + t,
+        axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple)
+        and all(x is None or isinstance(x, str) for x in t))
+
+
+def init_lm(cfg: ModelConfig, key: jax.Array) -> Tuple[Params, Params]:
+    keys = L.KeyGen(key)
+    dt = jnp.dtype(cfg.dtype)
+    specs = layer_specs(cfg)
+    k0, R, P = _grouping(cfg)
+
+    p: Params = {"embed": L.embed_init(keys(), cfg.vocab_size, cfg.d_model, dt)}
+    a: Params = {"embed": ("vocab", "embed")}
+
+    if k0:
+        pref = [_init_block(keys, cfg, specs[i]) for i in range(k0)]
+        p["prefix"] = _stack([x[0] for x in pref])
+        a["prefix"] = _push_axis(pref[0][1], "layers")
+
+    body_p, body_a = [], []
+    for j in range(R):
+        per = [_init_block(keys, cfg, specs[k0 + pi * R + j])
+               for pi in range(P)]
+        body_p.append(_stack([x[0] for x in per]))
+        body_a.append(_push_axis(per[0][1], "period"))
+    p["body"] = tuple(body_p)
+    a["body"] = tuple(body_a)
+
+    p["final_norm"], a["final_norm"] = L.init_rmsnorm(cfg.d_model, dt)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(keys(), cfg.d_model, cfg.vocab_size, dt)
+        a["lm_head"] = ("embed", "vocab")
+    return p, a
+
+
+# ---------------------------------------------------------------------------
+# block apply (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _zero_aux():
+    return {"moe_load_balance": jnp.zeros((), jnp.float32),
+            "moe_z": jnp.zeros((), jnp.float32)}
+
+
+def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
+                 mode: str, cache=None, index=None):
+    """Returns (x, new_cache, aux)."""
+    aux = _zero_aux()
+    h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    new_cache = None
+    if spec.kind == "a":
+        if mode == "train":
+            mix = L.attention_block(bp["mixer"], cfg, h, positions)
+        elif mode == "prefill":
+            mix, new_cache = L.attention_prefill(bp["mixer"], cfg, h,
+                                                 positions)
+        else:
+            mix, new_cache = L.attention_decode(bp["mixer"], cfg, h, cache,
+                                                index, positions)
+    elif spec.kind == "M":
+        if mode == "train":
+            mix = S.mamba_block(bp["mixer"], cfg, h)
+        elif mode == "prefill":
+            mix, new_cache = S.mamba_prefill(bp["mixer"], cfg, h)
+        else:
+            mix, new_cache = S.mamba_decode(bp["mixer"], cfg, h, cache)
+    elif spec.kind == "m":
+        if mode == "decode":
+            mix, new_cache = X.mlstm_decode(bp["mixer"], cfg, h, cache)
+        else:
+            mix, new_cache = X.mlstm_block(bp["mixer"], cfg, h,
+                                           return_state=True)
+    elif spec.kind == "s":
+        if mode == "decode":
+            mix, new_cache = X.slstm_decode(bp["mixer"], cfg, h, cache)
+        else:
+            mix, new_cache = X.slstm_block(bp["mixer"], cfg, h,
+                                           return_state=True)
+    else:
+        raise ValueError(spec.kind)
+    x = x + mix
+    x = constrain(x, "batch", "seq_sp", "act_embed")
+    if spec.ffn != "none":
+        h2 = L.rmsnorm(bp["ln2"], x, cfg.norm_eps)
+        if spec.ffn == "moe":
+            f, moe_aux = L.moe_block(bp["ffn"], cfg, h2,
+                                     dropless=(mode != "train"))
+            aux = {k: aux[k] + moe_aux.get(k, 0.0) for k in aux}
+        else:
+            f = L.mlp_block(bp["ffn"], h2)
+        x = x + f
+        x = constrain(x, "batch", "seq_sp", "act_embed")
+    return x, new_cache, aux
+
+
+def _period_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    specs = layer_specs(cfg)
+    k0, R, _ = _grouping(cfg)
+    return tuple(specs[k0:k0 + R])
+
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    if remat == "dots_no_batch":
+        return jax.checkpoint(
+            fn,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # 'full'
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _embed_in(params, cfg: ModelConfig, batch: Dict[str, jax.Array]):
+    if "embeds" in batch:                 # vlm stub frontend
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    return constrain(x, "batch", "seq_sp", "act_embed")
+
+
+def _positions_of(batch, cfg: ModelConfig, B, S, index=None):
+    if "positions" in batch:
+        return batch["positions"]
+    if index is None:
+        return L.default_positions(B, S)
+    return jnp.full((B, 1), index, jnp.int32)
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"].T
+    else:
+        logits = x @ params["lm_head"]
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def lm_forward(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               remat: str = "none"):
+    """Full forward (training). Returns (logits, aux)."""
+    x = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions_of(batch, cfg, B, S)
+    pspecs = _period_specs(cfg)
+    specs = layer_specs(cfg)
+
+    def run_stack(x, stacked, spec_list):
+        # remat granularity is ONE BLOCK (not the whole period): the
+        # backward pass then holds a single block's recomputed
+        # activations at a time — this is what keeps the 72-layer 398B
+        # hybrid period under HBM.
+        def apply_one(sp):
+            def f(lp, xc):
+                return _apply_block(lp, cfg, sp, xc, positions, "train")
+            return _remat_wrap(f, remat)
+
+        fns = [apply_one(sp) for sp in spec_list]
+
+        def body(xc, layer_p):
+            aux_tot = _zero_aux()
+            if not isinstance(layer_p, tuple):
+                layer_p = (layer_p,)
+            for fn, lp in zip(fns, layer_p):
+                xc, _, aux = fn(lp, xc)
+                aux_tot = {k: aux_tot[k] + aux[k] for k in aux_tot}
+            return xc, aux_tot
+
+        x, auxs = jax.lax.scan(body, x, stacked)
+        return x, jax.tree.map(jnp.sum, auxs)
+
+    aux = _zero_aux()
+    if "prefix" in params:
+        # prefix layers are homogeneous by construction (first_k_dense)
+        x, a1 = run_stack(x, params["prefix"], (specs[0],))
+        aux = {k: aux[k] + a1[k] for k in aux}
+    x, a2 = run_stack(x, tuple(params["body"]), pspecs)
+    aux = {k: aux[k] + a2[k] for k in aux}
+    return _logits(params, cfg, x), aux
+
+
+def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+            remat: str = "none"):
+    """Next-token cross entropy + MoE aux. Returns (loss, metrics)."""
+    logits, aux = lm_forward(params, cfg, batch, remat)
+    labels = batch["labels"]
+    lg = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum((logz - gold) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    loss = ce
+    if cfg.moe is not None:
+        loss = loss + cfg.moe.router_aux_weight * aux["moe_load_balance"] \
+            + cfg.moe.router_z_weight * aux["moe_z"]
+    metrics = {"ce": ce, **aux}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                      max_len: int):
+    if spec.kind == "a":
+        return L.init_attention_cache(cfg, batch, max_len)
+    if spec.kind == "M":
+        return S.init_mamba_state(cfg, batch)
+    if spec.kind == "m":
+        return X.init_mlstm_state(cfg, batch)
+    if spec.kind == "s":
+        return X.init_slstm_state(cfg, batch)
+    raise ValueError(spec.kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Cache pytree mirroring the stacked param structure."""
+    specs = layer_specs(cfg)
+    k0, R, P = _grouping(cfg)
+    cache: Params = {}
+    axes: Params = {}
+    if k0:
+        per = [_init_block_cache(cfg, specs[i], batch, max_len)
+               for i in range(k0)]
+        cache["prefix"] = _stack([c for c, _ in per])
+        axes["prefix"] = _push_axis(per[0][1], "layers")
+    body_c, body_a = [], []
+    for j in range(R):
+        per = [_init_block_cache(cfg, specs[k0 + pi * R + j], batch, max_len)
+               for pi in range(P)]
+        body_c.append(_stack([c for c, _ in per]))
+        body_a.append(_push_axis(per[0][1], "period"))
+    cache["body"] = tuple(body_c)
+    axes["body"] = tuple(body_a)
+    return cache, axes
+
+
+def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
+               remat: str = "none"):
+    """Process the full prompt; returns (last-token logits, cache)."""
+    x = _embed_in(params, cfg, batch)
+    B, S, _ = x.shape
+    positions = _positions_of(batch, cfg, B, S)
+    pspecs = _period_specs(cfg)
+    specs = layer_specs(cfg)
+
+    def run_stack(x, stacked, spec_list):
+        def body(xc, layer_p):
+            if not isinstance(layer_p, tuple):
+                layer_p = (layer_p,)
+            caches = []
+            for sp, lp in zip(spec_list, layer_p):
+                xc, c, _ = _apply_block(lp, cfg, sp, xc, positions, "prefill")
+                caches.append(c)
+            return xc, tuple(caches)
+
+        body = _remat_wrap(body, remat)
+        return jax.lax.scan(body, x, stacked)
+
+    caches: Params = {}
+    if "prefix" in params:
+        x, pc = run_stack(x, params["prefix"], (specs[0],))
+        caches["prefix"] = pc[0]
+    x, bc = run_stack(x, tuple(params["body"]), pspecs)
+    caches["body"] = bc
+    logits = _logits(params, cfg, x[:, -1:])
+    return logits, caches
+
+
+def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
+              cache: Params, index: jax.Array,
+              positions: Optional[jax.Array] = None):
+    """One decode step. tokens: (B, 1) int32; index: scalar int32 write
+    position (= current KV length). Returns (logits, new_cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", "act_embed")
+    B = x.shape[0]
+    if positions is None:
+        if cfg.use_mrope:
+            # text decode: all three M-RoPE components advance together
+            positions = jnp.full((3, B, 1), index, jnp.int32)
+        else:
+            positions = jnp.full((B, 1), index, jnp.int32)
+    pspecs = _period_specs(cfg)
+    specs = layer_specs(cfg)
+
+    def run_stack(x, stacked, cache_stacked, spec_list):
+        def body(xc, inp):
+            layer_p, layer_c = inp
+            if not isinstance(layer_p, tuple):
+                layer_p = (layer_p,)
+                layer_c = (layer_c,)
+            new_caches = []
+            for sp, lp, lc in zip(spec_list, layer_p, layer_c):
+                xc, nc, _ = _apply_block(lp, cfg, sp, xc, positions,
+                                         "decode", cache=lc, index=index)
+                new_caches.append(nc)
+            return xc, tuple(new_caches)
+
+        return jax.lax.scan(body, x, (stacked, cache_stacked))
+
+    new_cache: Params = {}
+    if "prefix" in params:
+        x, pc = run_stack(x, params["prefix"], cache["prefix"], (specs[0],))
+        new_cache["prefix"] = pc[0]
+    x, bc = run_stack(x, tuple(params["body"]), tuple(cache["body"]), pspecs)
+    new_cache["body"] = bc
+    logits = _logits(params, cfg, x)
+    return logits, new_cache

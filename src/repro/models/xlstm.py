@@ -1,0 +1,313 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory) and sLSTM.
+
+TPU adaptation: the mLSTM is computed in the *chunkwise-parallel* form —
+quadratic attention-like mixing inside fixed-size chunks plus a recurrent
+carry ``(C, n, m)`` across chunks (exactly the formulation that maps onto
+MXU matmuls), instead of the fused CUDA recurrent kernel.  The sLSTM is a
+``lax.scan`` recurrence (it is sequential by construction; the paper's
+GPU kernel parallelizes over batch/heads which XLA also does here).
+
+Both blocks expose decode steps carrying O(1) state — this is what makes
+the ``long_500k`` shape runnable for this family.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.models.layers import KeyGen, dense_init
+from repro.parallel.sharding import constrain
+
+Params = Dict[str, Any]
+
+
+def _xcfg(cfg: ModelConfig) -> XLSTMConfig:
+    return cfg.xlstm or XLSTMConfig()
+
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    xc = _xcfg(cfg)
+    dm = int(xc.proj_factor_mlstm * cfg.d_model)
+    H = cfg.num_heads
+    dm -= dm % (H * 2)  # keep head dim even and divisible
+    return dm, H, dm // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(keys: KeyGen, cfg: ModelConfig) -> Tuple[Params, Params]:
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    dm, H, DH = _mlstm_dims(cfg)
+    p: Params = {
+        "up": dense_init(keys(), d, 2 * dm, dt),
+        "wq": dense_init(keys(), dm, dm, dt),
+        "wk": dense_init(keys(), dm, dm, dt),
+        "wv": dense_init(keys(), dm, dm, dt),
+        "w_if": dense_init(keys(), dm, 2 * H, jnp.dtype("float32")),
+        "b_if": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "down": dense_init(keys(), dm, d, dt),
+    }
+    a: Params = {
+        "up": ("embed", "mlp"), "wq": ("mlp", "state_w"),
+        "wk": ("mlp", "state_w"), "wv": ("mlp", "state_w"),
+        "w_if": ("mlp", None), "b_if": (None,),
+        "down": ("mlp", "embed"),
+    }
+    return p, a
+
+
+def _mlstm_qkvif(params: Params, cfg: ModelConfig, x: jax.Array):
+    """x: (B,S,d) -> q,k,v: (B,H,S,DH); li,lf: (B,H,S) (log-gates)."""
+    B, S, _ = x.shape
+    dm, H, DH = _mlstm_dims(cfg)
+    xz = x @ params["up"]
+    xm, z = jnp.split(xz, 2, axis=-1)                      # (B,S,dm) each
+    xm = constrain(xm, "batch", "seq", "mlp_act")
+
+    def heads(w):
+        return (xm @ w).reshape(B, S, H, DH).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(params["wq"]), heads(params["wk"]), heads(params["wv"])
+    gates = (xm.astype(jnp.float32) @ params["w_if"]) + params["b_if"]
+    li, lf_raw = jnp.split(gates, 2, axis=-1)              # (B,S,H)
+    li = li.transpose(0, 2, 1)
+    lf = jax.nn.log_sigmoid(lf_raw).transpose(0, 2, 1)     # (B,H,S)
+    return q, k, v, li, lf, z
+
+
+def _mlstm_chunk(q, k, v, li, lf, state):
+    """One chunk of the stabilized chunkwise mLSTM.
+
+    q/k/v: (B,H,Q,DH) float32; li/lf: (B,H,Q); state=(C,n,m):
+    C (B,H,DH,DH), n (B,H,DH), m (B,H).  Returns (h, new_state).
+    """
+    B, H, Q, DH = q.shape
+    C0, n0, m0 = state
+    csum = jnp.cumsum(lf, axis=-1)                           # (B,H,Q)
+    # intra-chunk log-weights: D[t,s] = csum_t - csum_s + li_s (s<=t)
+    Dtil = csum[..., :, None] - csum[..., None, :] + li[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    Dtil = jnp.where(mask, Dtil, -jnp.inf)
+    b = csum + m0[..., None]                                 # carry-in decay
+    m_new = jnp.maximum(jnp.max(Dtil, axis=-1), b)           # (B,H,Q)
+    W = jnp.exp(Dtil - m_new[..., None])                     # (B,H,Q,Q)
+    a = jnp.exp(b - m_new)                                   # (B,H,Q)
+
+    scale = 1.0 / math.sqrt(DH)
+    qk = jnp.einsum("bhtd,bhsd->bhts", q, k) * scale         # (B,H,Q,Q)
+    num = jnp.einsum("bhts,bhsd->bhtd", W * qk, v) \
+        + a[..., None] * jnp.einsum("bhde,bhtd->bhte", C0, q * scale)
+    # denominator: n_t^T q_t with n_t = decayed n0 + sum_s w[t,s] k_s
+    den = jnp.einsum("bhts,bhsd,bhtd->bht", W, k * scale, q) \
+        + a * jnp.einsum("bhd,bhtd->bht", n0, q * scale)
+    den = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    h = num / den[..., None]                                 # (B,H,Q,DH)
+
+    # end-of-chunk state
+    g_end = csum[..., -1]                                    # (B,H)
+    m_end = jnp.maximum(g_end + m0,
+                        jnp.max(g_end[..., None] - csum + li, axis=-1))
+    w_end = jnp.exp(g_end[..., None] - csum + li - m_end[..., None])
+    C1 = jnp.exp(g_end + m0 - m_end)[..., None, None] * C0 \
+        + jnp.einsum("bhs,bhsd,bhse->bhde", w_end, k, v)
+    n1 = jnp.exp(g_end + m0 - m_end)[..., None] * n0 \
+        + jnp.einsum("bhs,bhsd->bhd", w_end, k)
+    return h, (C1, n1, m_end)
+
+
+def mlstm_block(params: Params, cfg: ModelConfig, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence chunkwise mLSTM. x: (B,S,d)."""
+    B, S, d = x.shape
+    xc = _xcfg(cfg)
+    dm, H, DH = _mlstm_dims(cfg)
+    q, k, v, li, lf, z = _mlstm_qkvif(params, cfg, x)
+    q, k, v = (t.astype(jnp.float32) for t in (q, k, v))
+
+    Q = min(xc.chunk_size, S)
+    pad = (-S) % Q
+    if pad:
+        q, k, v = (jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                   for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, 0), (0, pad)), constant_values=-1e9)
+        lf = jnp.pad(lf, ((0, 0), (0, 0), (0, pad)))
+    Sp = S + pad
+    nch = Sp // Q
+
+    def to_chunks(t):
+        return t.reshape(B, H, nch, Q, *t.shape[3:]).swapaxes(0, 2) \
+                .swapaxes(1, 2)  # (nch, B, H, Q, ...)
+
+    qs, ks, vs = to_chunks(q), to_chunks(k), to_chunks(v)
+    lis, lfs = to_chunks(li[..., None])[..., 0], to_chunks(lf[..., None])[..., 0]
+
+    state = init_mlstm_state(cfg, B)[0]
+    state = (state["C"], state["n"], state["m"])
+
+    def step(st, inp):
+        cq, ck, cv, cli, clf = inp
+        h, st = _mlstm_chunk(cq, ck, cv, cli, clf, st)
+        return st, h
+
+    # checkpointed body: backward saves only the (C, n, m) carry per chunk
+    with jax.named_scope("mlstm_chunkwise"):
+        st, hs = jax.lax.scan(jax.checkpoint(step), state,
+                              (qs, ks, vs, lis, lfs))
+    h = hs.swapaxes(1, 2).swapaxes(0, 2).reshape(B, H, Sp, DH)[:, :, :S]
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, dm).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down"]
+    out = constrain(out, "batch", "seq", "act_embed")
+    if not return_state:
+        return out
+    return out, {"C": st[0], "n": st[1], "m": st[2]}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    _, H, DH = _mlstm_dims(cfg)
+    state = {
+        "C": jnp.zeros((batch, H, DH, DH), jnp.float32),
+        "n": jnp.zeros((batch, H, DH), jnp.float32),
+        "m": jnp.full((batch, H), -1e9, jnp.float32),
+    }
+    axes = {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads")}
+    return state, axes
+
+
+def mlstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 state: Params):
+    """Single-token stabilized mLSTM recurrence. x: (B,1,d)."""
+    B = x.shape[0]
+    dm, H, DH = _mlstm_dims(cfg)
+    q, k, v, li, lf, z = _mlstm_qkvif(params, cfg, x)
+    q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,DH)
+    li, lf = li[..., 0], lf[..., 0]                                # (B,H)
+    C0, n0, m0 = state["C"], state["n"], state["m"]
+    m1 = jnp.maximum(lf + m0, li)
+    fp = jnp.exp(lf + m0 - m1)
+    ip = jnp.exp(li - m1)
+    scale = 1.0 / math.sqrt(DH)
+    C1 = fp[..., None, None] * C0 + ip[..., None, None] \
+        * jnp.einsum("bhd,bhe->bhde", k, v)
+    n1 = fp[..., None] * n0 + ip[..., None] * k
+    num = jnp.einsum("bhde,bhd->bhe", C1, q * scale)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n1, q * scale)),
+                      jnp.exp(-m1))
+    h = (num / den[..., None]).reshape(B, 1, dm).astype(x.dtype)
+    h = h * jax.nn.silu(z)
+    out = h @ params["down"]
+    return constrain(out, "batch", "seq", "act_embed"), \
+        {"C": C1, "n": n1, "m": m1}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(keys: KeyGen, cfg: ModelConfig) -> Tuple[Params, Params]:
+    """sLSTM: per the paper, the recurrent weights are BLOCK-DIAGONAL per
+    head (r: (H, dh, 4*dh)) — 1/H the flops/bytes of a dense recurrence
+    and small enough to stay VMEM-resident in a fused TPU kernel."""
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    xc = _xcfg(cfg)
+    df = int(xc.proj_factor_slstm * d)
+    H = cfg.num_heads
+    dh = d // H
+    p: Params = {
+        "w_x": dense_init(keys(), d, 4 * d, jnp.dtype("float32")),
+        "r_h": (jax.random.normal(keys(), (H, dh, 4 * dh), jnp.float32)
+                / (dh ** 0.5)),
+        "bias": jnp.zeros((4 * d,), jnp.float32),
+        "up_g": dense_init(keys(), d, df, dt),
+        "up_v": dense_init(keys(), d, df, dt),
+        "down": dense_init(keys(), df, d, dt),
+    }
+    a: Params = {
+        "w_x": ("embed", None), "r_h": ("heads", None, None),
+        "bias": (None,),
+        "up_g": ("embed", "mlp"), "up_v": ("embed", "mlp"),
+        "down": ("mlp", "embed"),
+    }
+    return p, a
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    state = {k: jnp.zeros((batch, d), jnp.float32) for k in "hcn"}
+    state["m"] = jnp.full((batch, d), -1e9, jnp.float32)
+    axes = {k: ("batch", "state") for k in ("h", "c", "n", "m")}
+    return state, axes
+
+
+def _slstm_cell(params: Params, cfg: ModelConfig, state, gx):
+    """One recurrence step from precomputed input gates gx = W_x x + b.
+
+    gx: (B, 4d) f32.  The recurrent contribution uses the per-head
+    block-diagonal r_h: (H, dh, 4dh).  Stabilized exponential gating."""
+    H = cfg.num_heads
+    d = cfg.d_model
+    dh = d // H
+    h0, c0, n0, m0 = state["h"], state["c"], state["n"], state["m"]
+    B = h0.shape[0]
+    rec = jnp.einsum("bhd,hde->bhe", h0.reshape(B, H, dh),
+                     params["r_h"])                     # (B, H, 4*dh)
+    # regroup per-head gates to the (B, 4d) [i|f|z|o] layout
+    rec = rec.reshape(B, H, 4, dh).transpose(0, 2, 1, 3).reshape(B, 4 * d)
+    gates = gx + rec
+    it, ft, zt, ot = jnp.split(gates, 4, axis=-1)
+    lf = jax.nn.log_sigmoid(ft)
+    m1 = jnp.maximum(lf + m0, it)
+    ip = jnp.exp(it - m1)
+    fp = jnp.exp(lf + m0 - m1)
+    c1 = fp * c0 + ip * jnp.tanh(zt)
+    n1 = jnp.maximum(fp * n0 + ip, 1e-6)
+    h1 = jax.nn.sigmoid(ot) * c1 / n1
+    return h1, {"h": h1, "c": c1, "n": n1, "m": m1}
+
+
+def slstm_block(params: Params, cfg: ModelConfig, x: jax.Array,
+                return_state: bool = False):
+    """Sequential sLSTM over S, then gated FFN. x: (B,S,d).
+
+    The input-side gate projections for ALL timesteps are one batched
+    matmul outside the scan (the only per-step work left is the small
+    block-diagonal recurrence — which a fused TPU kernel keeps in VMEM).
+    """
+    B, S, d = x.shape
+    state, _ = init_slstm_state(cfg, B)
+    gx = x.astype(jnp.float32) @ params["w_x"] + params["bias"]  # (B,S,4d)
+
+    def step(st, g):
+        h, st = _slstm_cell(params, cfg, st, g)
+        return st, h
+
+    with jax.named_scope("slstm_cell"):
+        st, hs = jax.lax.scan(jax.checkpoint(step), state,
+                              gx.swapaxes(0, 1))
+    h = hs.swapaxes(0, 1).astype(x.dtype)                   # (B,S,d)
+    out = (jax.nn.gelu(h @ params["up_g"]) * (h @ params["up_v"])) \
+        @ params["down"]
+    out = constrain(out, "batch", "seq", "act_embed")
+    if not return_state:
+        return out
+    return out, st
+
+
+def slstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 state: Params):
+    gx = x[:, 0].astype(jnp.float32) @ params["w_x"] + params["bias"]
+    h, st = _slstm_cell(params, cfg, state, gx)
+    h = h[:, None].astype(x.dtype)
+    out = (jax.nn.gelu(h @ params["up_g"]) * (h @ params["up_v"])) \
+        @ params["down"]
+    return constrain(out, "batch", "seq", "act_embed"), st

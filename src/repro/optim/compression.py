@@ -1,0 +1,72 @@
+"""Int8 error-feedback gradient compression for the cross-pod (DCN) axis.
+
+Beyond-paper distributed-optimization trick (DESIGN.md §2): within a pod,
+gradients reduce over fast ICI; *across* pods, bandwidth is the scarce
+resource, so the cross-pod reduction exchanges int8-quantized gradients
+via ``lax.ppermute`` (1 byte/element on the wire instead of 2–4) and
+accumulates the quantization error into an error-feedback buffer that is
+re-injected the next step — preserving convergence (error-feedback SGD).
+
+For a 2-pod mesh a single ppermute IS the all-reduce; for P pods a
+recursive-doubling ladder of log2(P) ppermutes is generated (with
+re-quantization at each rung, absorbed by the same feedback buffer).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum_pod(grads: Params, error: Params, axis: str = "pod",
+                        num_pods: int = 2) -> Tuple[Params, Params]:
+    """Cross-pod gradient mean with int8 wire format + error feedback.
+
+    MUST run inside shard_map with `axis` in scope.  Returns
+    (mean_grads, new_error).  Wire volume: 1 byte/element/rung vs 4
+    (f32 all-reduce) or 2 (bf16).
+    """
+    steps = max(1, num_pods.bit_length() - 1)
+
+    def one(g, e):
+        acc = g.astype(jnp.float32) + e
+        total = acc
+        err = jnp.zeros_like(acc)
+        for r in range(steps):
+            q, s = quantize_int8(total)
+            err = err + (total - dequantize_int8(q, s))
+            perm = [(i, i ^ (1 << r)) for i in range(num_pods)]
+            q_o = jax.lax.ppermute(q, axis, perm)
+            s_o = jax.lax.ppermute(s, axis, perm)
+            total = dequantize_int8(q, s) + dequantize_int8(q_o, s_o)
+        return total / num_pods, err
+
+    out = jax.tree.map(one, grads, error)
+    mean = jax.tree.map(lambda o: o[0], out,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    new_err = jax.tree.map(lambda o: o[1], out,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    return mean, new_err
+
+
+def compression_ratio(dtype=jnp.float32) -> float:
+    return jnp.dtype(dtype).itemsize / jnp.dtype(jnp.int8).itemsize

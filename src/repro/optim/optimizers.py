@@ -1,0 +1,193 @@
+"""Optimizers (pure-JAX, no external deps): Adam/AdamW, Adafactor, SGD.
+
+The paper trains with Adam, lr=1e-3 (Section IV).  Adafactor (factored
+second moment) is provided for the 398B-parameter configs where full
+Adam moments would not fit HBM; ``moment_dtype`` halves optimizer memory
+when set to bfloat16.  Optimizer state mirrors the parameter sharding
+(ZeRO: FSDP-sharded params imply FSDP-sharded moments).
+
+All updates use flatten/unflatten (not multi-output tree_map) because
+model param trees contain tuple internal nodes (scan period stacks).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+Params = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], Any]
+    update: Callable[..., Tuple[Params, Any]]   # (grads, state, params, lr)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+def lr_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """warmup + {constant|cosine|linear} decay."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    if cfg.schedule == "cosine":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        decay = 0.5 * (1 + jnp.cos(math.pi * frac))
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps)
+                        / max(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+        decay = 1.0 - frac
+    else:
+        decay = 1.0
+    return cfg.lr * warm * decay
+
+
+def _map_zip(fn, *trees):
+    """Like tree_map over N trees returning a TUPLE of result trees
+    (safe for trees whose internal nodes are tuples/dicts)."""
+    flat, treedef = jax.tree.flatten(trees[0])
+    others = [treedef.flatten_up_to(t) for t in trees[1:]]
+    results = [fn(*leaves) for leaves in zip(flat, *others)]
+    n_out = len(results[0])
+    return tuple(jax.tree.unflatten(treedef, [r[i] for r in results])
+                 for i in range(n_out))
+
+
+# ---------------------------------------------------------------------------
+# Adam / AdamW
+# ---------------------------------------------------------------------------
+
+
+def make_adam(cfg: OptimizerConfig) -> Optimizer:
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr=None):
+        lr_ = cfg.lr if lr is None else lr
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        b1, b2 = cfg.b1, cfg.b2
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+            mh = m32 / bc1
+            vh = v32 / bc2
+            delta = lr_ * mh / (jnp.sqrt(vh) + cfg.eps)
+            if cfg.weight_decay:
+                delta = delta + lr_ * cfg.weight_decay \
+                    * p.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - delta).astype(p.dtype),
+                    m32.astype(mdt), v32.astype(mdt))
+
+        new_p, new_m, new_v = _map_zip(upd, grads, state["m"], state["v"],
+                                       params)
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments; for the 398B configs)
+# ---------------------------------------------------------------------------
+
+
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return (jnp.zeros(p.shape[:-1], jnp.float32),
+                        jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return (jnp.zeros(p.shape, jnp.float32),
+                    jnp.zeros((1,), jnp.float32))   # unused pad slot
+        vr, vc = _map_zip(leaf, params)
+        return {"vr": vr, "vc": vc, "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr=None):
+        lr_ = cfg.lr if lr is None else lr
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-0.8)           # Adafactor decay schedule
+        eps = 1e-30
+
+        def upd(g, vr, vc, p):
+            g32 = g.astype(jnp.float32)
+            if p.ndim >= 2:
+                nvr = beta * vr + (1 - beta) * jnp.mean(g32 * g32, axis=-1)
+                nvc = beta * vc + (1 - beta) * jnp.mean(g32 * g32, axis=-2)
+                denom = jnp.maximum(
+                    jnp.mean(nvr, axis=-1, keepdims=True), eps)
+                v = (nvr[..., None] * nvc[..., None, :]) / denom[..., None]
+            else:
+                nvr = beta * vr + (1 - beta) * g32 * g32
+                nvc = vc
+                v = nvr
+            u = g32 / jnp.sqrt(v + 1e-12)
+            rms = jnp.sqrt(jnp.mean(u ** 2) + 1e-12)   # update clipping d=1
+            u = u / jnp.maximum(1.0, rms)
+            return ((p.astype(jnp.float32) - lr_ * u).astype(p.dtype),
+                    nvr, nvc)
+
+        new_p, new_vr, new_vc = _map_zip(upd, grads, state["vr"],
+                                         state["vc"], params)
+        return new_p, {"vr": new_vr, "vc": new_vc, "step": step}
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# SGD (+momentum)
+# ---------------------------------------------------------------------------
+
+
+def make_sgd(cfg: OptimizerConfig, momentum: float = 0.9) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr=None):
+        lr_ = cfg.lr if lr is None else lr
+
+        def upd(g, m, p):
+            m32 = momentum * m + g.astype(jnp.float32)
+            return ((p.astype(jnp.float32) - lr_ * m32).astype(p.dtype),
+                    m32)
+
+        new_p, new_m = _map_zip(upd, grads, state["mom"], params)
+        return new_p, {"mom": new_m, "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.name in ("adam", "adamw"):
+        return make_adam(cfg)
+    if cfg.name == "adafactor":
+        return make_adafactor(cfg)
+    if cfg.name == "sgd":
+        return make_sgd(cfg)
+    raise ValueError(cfg.name)

@@ -1,0 +1,234 @@
+"""Roofline analysis from compiled dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch x shape x mesh), all in seconds:
+
+  compute    = HLO_FLOPs   / (chips * PEAK_FLOPS)
+  memory     = HLO_bytes   / (chips * HBM_BW)
+  collective = coll_bytes  / (chips * ICI_BW)
+
+``cost_analysis()`` of an SPMD-partitioned executable reports *per-device*
+flops/bytes but counts ``while`` (scan) bodies ONCE — so all three terms
+are rebuilt from the optimized HLO text by
+:mod:`repro.parallel.hlo_analysis`, which applies loop trip-count
+multipliers (validated against ``cost_analysis()`` on unrolled models in
+tests).  Collective bytes sum operand sizes over all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.parallel.hlo_analysis import analyze_hlo
+
+PEAK_FLOPS = 197e12      # bf16 per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+HBM_PER_CHIP = 16 * 1024 ** 3   # v5e: 16 GiB
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# instruction definition:  %name = dtype[dims]{layout} opcode(...)
+_DEF_RE = re.compile(
+    r"%?([\w\.\-]+)\s*=\s*\(?([a-z0-9]+)\[([\d,]*)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Collective operand bytes (trip-count corrected, via hlo_analysis)."""
+    hc = analyze_hlo(hlo_text)
+    return CollectiveStats({k: int(v) for k, v in hc.coll_by_op.items()},
+                           dict(hc.coll_count))
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    model_flops: float                 # 6*N*D (active N for MoE)
+    peak_bytes_per_chip: float = 0.0   # from memory_analysis
+    coll_detail: Optional[Dict[str, int]] = None
+    tag_bytes: Optional[Dict[str, float]] = None   # kernel-taggable traffic
+    tag_coll_bytes: Optional[Dict[str, float]] = None
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's max(terms)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs, both per-chip (catches remat waste)."""
+        return self.model_flops / self.flops_per_chip \
+            if self.flops_per_chip else 0.0
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization at the roofline step time (per chip)."""
+        if self.step_time == 0:
+            return 0.0
+        return self.model_flops / (PEAK_FLOPS * self.step_time)
+
+    def to_dict(self):
+        d = dict(self.__dict__)
+        d.update(bottleneck=self.bottleneck, step_time=self.step_time,
+                 useful_flops_ratio=self.useful_flops_ratio, mfu=self.mfu)
+        return d
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: Dict[str, float], hlo_text: str,
+            model_flops: float, memory_stats=None) -> RooflineReport:
+    hc = analyze_hlo(hlo_text)   # trip-count-corrected per-chip costs
+    flops = hc.flops
+    byts = hc.bytes
+    coll_bytes = hc.coll_bytes
+    peak_bytes = 0.0
+    if memory_stats is not None:
+        peak_bytes = (memory_stats.argument_size_in_bytes
+                      + memory_stats.output_size_in_bytes
+                      + memory_stats.temp_size_in_bytes
+                      - memory_stats.alias_size_in_bytes)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_chip=flops, bytes_per_chip=byts,
+        coll_bytes_per_chip=coll_bytes,
+        t_compute=flops / PEAK_FLOPS,
+        t_memory=byts / HBM_BW,
+        t_collective=coll_bytes / ICI_BW,
+        model_flops=model_flops / chips,   # per-chip share of useful work
+        peak_bytes_per_chip=peak_bytes,
+        coll_detail={k: int(v) for k, v in hc.coll_by_op.items()},
+        tag_bytes={k: float(v) for k, v in hc.tag_bytes.items()},
+        tag_coll_bytes={k: float(v) for k, v in hc.tag_coll_bytes.items()},
+    )
+
+
+def kernel_credit_bytes(cfg, shape, chips: int) -> Dict[str, float]:
+    """Analytic per-chip HBM traffic of the Pallas kernels that replace
+    the tagged pure-JAX scan implementations when deployed on TPU
+    (kernels/flash_attention.py, kernels/slstm.py; mLSTM chunkwise).
+
+    fwd traffic = kernel inputs + outputs; training multiplies by ~3.5x
+    (backward reads q,k,v,out,dout and writes gradients + the remat
+    re-read).  Decode shapes never hit these paths (cache attention /
+    single-step recurrences), so credits apply to train/prefill only.
+    """
+    if shape.kind == "decode":
+        return {}
+    mult = 3.5 if shape.kind == "train" else 1.0
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    out: Dict[str, float] = {}
+    kinds = cfg.layer_kinds() if cfg.family != "ssm" or cfg.xlstm is None \
+        else tuple(cfg.xlstm.pattern[i % len(cfg.xlstm.pattern)]
+                   for i in range(cfg.num_layers))
+    n_attn = sum(1 for k in kinds if k == "a")
+    n_slstm = sum(1 for k in kinds if k == "s")
+    n_mlstm = sum(1 for k in kinds if k == "m")
+    if n_attn and S >= 4096:   # chunked/flash path only kicks in there
+        qkvo = (2 * B * S * cfg.num_heads * hd
+                + 2 * B * S * cfg.num_kv_heads * hd) * 2
+        out["flash_attention"] = mult * n_attn * qkvo / chips
+    if n_slstm:
+        d = cfg.d_model
+        gx_h = B * S * (4 * d + d) * 4
+        out["slstm_cell"] = mult * n_slstm * gx_h / chips
+    if n_mlstm:
+        from repro.models.xlstm import _mlstm_dims
+        dm, H, DH = _mlstm_dims(cfg)
+        qkvo = 4 * B * S * dm * 4
+        out["mlstm_chunkwise"] = mult * n_mlstm * qkvo / chips
+    n_mamba = sum(1 for k in kinds if k == "M")
+    if n_mamba and cfg.mamba is not None:
+        d_in = cfg.mamba.expand * cfg.d_model
+        N = cfg.mamba.d_state
+        # kernels/mamba_scan.py: read dt+xc, write y (+ small B/C mats)
+        traffic = (3 * B * S * d_in + 2 * B * S * N) * 4
+        out["mamba_scan"] = mult * n_mamba * traffic / chips
+    return out
+
+
+def kernel_credit_coll_bytes(cfg, shape, chips: int) -> Dict[str, float]:
+    """Collective credit for kernel deployments: a manual-VJP kernel
+    accumulates weight gradients LOCALLY and emits one all-reduce of the
+    layer's parameters per step, instead of the per-timestep/per-chunk
+    partial-gradient all-reduces XLA emits for the scan formulation
+    (observed: 4096 x 2.4 MB per sLSTM layer).  Replacement = one f32
+    gradient all-reduce of that layer type's params."""
+    if shape.kind != "train" or cfg.xlstm is None:
+        return {}
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    xc = cfg.xlstm
+    kinds = tuple(xc.pattern[i % len(xc.pattern)]
+                  for i in range(cfg.num_layers))
+    df_s = int(xc.proj_factor_slstm * d)
+    slstm_params = d * 4 * d + H * dh * 4 * dh + 2 * d * df_s + df_s * d
+    from repro.models.xlstm import _mlstm_dims
+    dm, _, _ = _mlstm_dims(cfg)
+    mlstm_params = d * 2 * dm + 3 * dm * dm + dm * 2 * H + dm * d
+    return {
+        "slstm_cell": kinds.count("s") * slstm_params * 4.0,
+        "mlstm_chunkwise": kinds.count("m") * mlstm_params * 4.0,
+    }
+
+
+def model_flops_for(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); D = tokens.
+    Train counts fwd+bwd (the 6 factor); prefill/decode are forward-only
+    (2*N*D), decode D = batch tokens (one step)."""
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence per step
+    return 2.0 * n_active * shape.global_batch

@@ -1,0 +1,66 @@
+"""Batched serving engine: prefill + KV-cache decode.
+
+``decode_shapes``/``long_*`` dry-run cells lower exactly the
+``engine.decode_step`` function.  ``generate`` is the host-driven loop
+used by the serving example (greedy or temperature sampling over batched
+requests).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 1024):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda p, b: lm.lm_prefill(p, cfg, b))
+        self._decode = jax.jit(
+            lambda p, t, c, i: lm.lm_decode(p, cfg, t, c, i),
+            donate_argnums=(2,))
+
+    def _pad_cache(self, cache, batch: int):
+        full, _ = lm.init_cache(self.cfg, batch, self.max_len)
+
+        def fit(dst, src):
+            if dst.shape == src.shape:
+                return src
+            pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
+            return jnp.pad(src, pad)
+
+        return jax.tree.map(fit, full, cache)
+
+    def generate(self, tokens: jax.Array, steps: int,
+                 temperature: float = 0.0,
+                 key: Optional[jax.Array] = None) -> jax.Array:
+        """tokens: (B, S_prompt) int32 -> (B, S_prompt + steps)."""
+        B, S = tokens.shape
+        assert S + steps <= self.max_len
+        logits, cache = self._prefill(self.params, {"tokens": tokens})
+        cache = self._pad_cache(cache, B)
+        out = [tokens]
+        cur = self._sample(logits[:, -1], temperature, key, 0)
+        for i in range(steps):
+            out.append(cur)
+            if i == steps - 1:
+                break
+            logits, cache = self._decode(self.params, cur, cache,
+                                         jnp.int32(S + i))
+            cur = self._sample(logits[:, -1], temperature, key, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits, temperature, key, i):
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# smoke tests and benches must see 1 CPU device (the dry-run entrypoint
+# sets its own XLA_FLAGS before importing jax) — ensure src is importable
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,114 @@
+"""Checkpoint/restore + fault tolerance + elastic restore tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.configs.base import OptimizerConfig
+from repro.configs.icf_cyclegan import SMOKE as CCFG
+from repro.models import icf_cyclegan as cg
+from repro.train.steps import make_gan_steps
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": (jnp.ones((4,), jnp.bfloat16),
+                  {"c": jnp.array(3, jnp.int32)})}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = _tree()
+    path = str(tmp_path / "t.ckpt")
+    ckpt.save(path, tree, {"step": 7})
+    restored, meta = ckpt.restore(path, tree)
+    assert meta["step"] == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_atomic_write_never_leaves_partial(tmp_path):
+    path = str(tmp_path / "t.ckpt")
+    ckpt.save(path, _tree())
+    assert os.path.exists(path)
+    assert not os.path.exists(path + ".tmp")
+    assert not os.path.exists(path + ".tmp.npz")
+
+
+def test_async_checkpointer(tmp_path):
+    path = str(tmp_path / "async.ckpt")
+    ac = ckpt.AsyncCheckpointer()
+    ac.save(path, _tree(), {"step": 1})
+    ac.wait()
+    restored, meta = ckpt.restore(path, _tree())
+    assert meta["step"] == 1
+
+
+def test_population_checkpoint_and_elastic_restore(tmp_path):
+    init, train_step, metric = make_gan_steps(CCFG, OptimizerConfig())
+    trainers = []
+    for i in range(3):
+        p, o, h = init(i)
+        trainers.append({"params": p, "opt_state": o, "hparams": h,
+                         "steps": 5 * i, "alive": True})
+    state = {"round": 2, "seed": 0, "scope": "generator",
+             "trainers": trainers}
+    ckpt.save_population(str(tmp_path), 100, state)
+
+    like = {"params": trainers[0]["params"],
+            "opt_state": trainers[0]["opt_state"]}
+    # same-size restore
+    restored = ckpt.restore_population(str(tmp_path), 100, like)
+    assert restored["round"] == 2
+    assert len(restored["trainers"]) == 3
+    # ELASTIC: restore into 5 trainers (cyclic cloning)
+    bigger = ckpt.restore_population(str(tmp_path), 100, like,
+                                     num_trainers=5)
+    assert len(bigger["trainers"]) == 5
+    a0 = jax.tree.leaves(bigger["trainers"][0]["params"])[0]
+    a3 = jax.tree.leaves(bigger["trainers"][3]["params"])[0]
+    np.testing.assert_array_equal(np.asarray(a0, np.float32),
+                                  np.asarray(a3, np.float32))
+    # ELASTIC: shrink to 2
+    smaller = ckpt.restore_population(str(tmp_path), 100, like,
+                                      num_trainers=2)
+    assert len(smaller["trainers"]) == 2
+
+
+def test_restart_continues_training_identically(tmp_path):
+    """Fault-tolerance core property: save -> crash -> restore produces
+    bit-identical continuation."""
+    init, train_step, metric = make_gan_steps(CCFG, OptimizerConfig())
+    params, opt_state, h = init(0)
+    batch = {"x": jax.random.uniform(KEY, (16, CCFG.input_dim)),
+             "y": jax.random.uniform(KEY, (16, CCFG.output_dim))}
+    for _ in range(3):
+        params, opt_state, _ = train_step(params, opt_state, batch, h)
+    path = str(tmp_path / "mid.ckpt")
+    ckpt.save(path, {"params": params, "opt_state": opt_state})
+    # continue original
+    p1, o1 = params, opt_state
+    for _ in range(2):
+        p1, o1, _ = train_step(p1, o1, batch, h)
+    # "crash", restore, continue
+    restored, _ = ckpt.restore(path, {"params": params,
+                                      "opt_state": opt_state})
+    p2, o2 = restored["params"], restored["opt_state"]
+    for _ in range(2):
+        p2, o2, _ = train_step(p2, o2, batch, h)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_path(tmp_path):
+    assert ckpt.latest_step_path(str(tmp_path)) is None
+    ckpt.save(str(tmp_path / "step_10.ckpt"), _tree())
+    ckpt.save(str(tmp_path / "step_200.ckpt"), _tree())
+    assert ckpt.latest_step_path(str(tmp_path)).endswith("step_200.ckpt")

@@ -1,0 +1,74 @@
+"""Architecture configs must match the assigned literature specs exactly."""
+import pytest
+
+from repro.configs.registry import ARCHS, get_config
+
+SPEC = {
+    # arch: (L, d_model, H, kv, d_ff, vocab)
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+    "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+    "qwen3-0.6b": (28, 1024, 16, 8, 3072, 151936),
+    "qwen2.5-3b": (36, 2048, 16, 2, 11008, 151936),
+    "granite-8b": (36, 4096, 32, 8, 14336, 49152),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+}
+
+MOE_SPEC = {
+    "phi3.5-moe-42b-a6.6b": (16, 2, 0),
+    "deepseek-moe-16b": (64, 6, 2),
+    "jamba-1.5-large-398b": (16, 2, 0),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(SPEC))
+def test_full_config_matches_spec(arch):
+    cfg = get_config(arch)
+    L, d, H, kv, ff, V = SPEC[arch]
+    assert cfg.num_layers == L
+    assert cfg.d_model == d
+    assert cfg.num_heads == H
+    assert cfg.num_kv_heads == kv
+    assert cfg.d_ff == ff
+    assert cfg.vocab_size == V
+
+
+@pytest.mark.parametrize("arch", sorted(MOE_SPEC))
+def test_moe_config_matches_spec(arch):
+    cfg = get_config(arch)
+    E, k, shared = MOE_SPEC[arch]
+    assert cfg.moe.num_experts == E
+    assert cfg.moe.top_k == k
+    assert cfg.moe.num_shared_experts == shared
+
+
+def test_family_tags():
+    fam = {a: get_config(a).family for a in SPEC}
+    assert fam["phi3.5-moe-42b-a6.6b"] == "moe"
+    assert fam["xlstm-125m"] == "ssm"
+    assert fam["qwen2-vl-7b"] == "vlm"
+    assert fam["jamba-1.5-large-398b"] == "hybrid"
+    assert fam["musicgen-medium"] == "audio"
+    assert fam["granite-8b"] == "dense"
+
+
+def test_arch_details():
+    assert get_config("qwen3-0.6b").qk_norm
+    assert get_config("qwen3-0.6b").resolved_head_dim == 128
+    assert get_config("codeqwen1.5-7b").qkv_bias
+    assert get_config("qwen2.5-3b").qkv_bias
+    assert get_config("qwen2-vl-7b").use_mrope
+    cfg = get_config("jamba-1.5-large-398b")
+    kinds = cfg.layer_kinds()
+    # 1:7 attention:mamba interleave
+    assert kinds.count("a") * 7 == kinds.count("M")
+    ds = get_config("deepseek-moe-16b")
+    assert ds.moe.first_k_dense == 1 and ds.moe.dense_d_ff == 10944
+    # smoke configs are same-family but small
+    for a in SPEC:
+        sm = get_config(a, smoke=True)
+        assert sm.family == get_config(a).family
+        assert sm.param_count() < 0.01 * max(get_config(a).param_count(), 1)

@@ -1,0 +1,158 @@
+"""LTFB algorithm tests: pairing properties (hypothesis), tournament
+semantics, generator-scope exchange, and the mesh-native butterfly step
+on 8 simulated devices (subprocess)."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import ltfb
+
+
+@given(st.integers(2, 64), st.integers(0, 1000), st.integers(0, 10))
+@settings(max_examples=60, deadline=None)
+def test_random_pairing_is_involution(k, round_idx, seed):
+    p = ltfb.random_pairing(k, round_idx, seed)
+    assert p.shape == (k,)
+    # involution: partner of my partner is me
+    assert np.all(p[p] == np.arange(k))
+    # at most one self-pair when k is even... (odd k has >= 1)
+    selfs = int(np.sum(p == np.arange(k)))
+    assert selfs == (k % 2)
+
+
+@given(st.integers(1, 6), st.integers(0, 20))
+@settings(max_examples=40, deadline=None)
+def test_butterfly_pairing_is_involution_and_cycles(log_k, round_idx):
+    k = 2 ** log_k
+    p = ltfb.butterfly_pairing(k, round_idx)
+    assert np.all(p[p] == np.arange(k))
+    assert not np.any(p == np.arange(k))  # never self-pairs
+    # over log2(k) rounds, the union of pairings connects everyone
+    reached = {0}
+    for r in range(log_k):
+        pr = ltfb.butterfly_pairing(k, r)
+        reached |= {int(pr[i]) for i in list(reached)}
+    assert reached == set(range(k))
+
+
+def test_random_pairing_respects_dead_trainers():
+    alive = [True, False, True, True, False, True]
+    p = ltfb.random_pairing(6, 3, 0, alive)
+    assert p[1] == 1 and p[4] == 4          # dead trainers self-pair
+    assert np.all(p[p] == np.arange(6))
+
+
+def test_host_tournament_keeps_better_model():
+    # population of scalar "models"; metric = distance to 3.0 on local data
+    pop = [{"w": np.float32(i)} for i in range(4)]
+
+    def metric(idx, params):
+        return abs(float(params["w"]) - 3.0)
+
+    partner = np.array([1, 0, 3, 2])
+    winners, log = ltfb.host_tournament(pop, metric, partner, "full")
+    assert float(winners[0]["w"]) == 1.0     # 1 beats 0
+    assert float(winners[1]["w"]) == 1.0
+    assert float(winners[2]["w"]) == 3.0     # 3 beats 2
+    assert float(winners[3]["w"]) == 3.0
+
+
+def test_generator_scope_keeps_discriminator_local():
+    pop = [{"gen": {"w": np.float32(i)}, "disc": {"d": np.float32(10 + i)}}
+           for i in range(2)]
+
+    def metric(idx, params):
+        return abs(float(params["gen"]["w"]) - 1.0)
+
+    winners, _ = ltfb.host_tournament(pop, metric, np.array([1, 0]),
+                                      "generator")
+    # trainer 0 adopts gen of trainer 1 but keeps its own discriminator
+    assert float(winners[0]["gen"]["w"]) == 1.0
+    assert float(winners[0]["disc"]["d"]) == 10.0
+    assert float(winners[1]["disc"]["d"]) == 11.0
+
+
+def test_split_merge_scope_roundtrip():
+    params = {"gen": {"a": 1}, "disc": {"b": 2}}
+    ex, loc = ltfb.split_scope(params, "generator")
+    assert ex == {"a": 1}
+    merged = ltfb.merge_scope({"a": 9}, loc, "generator")
+    assert merged == {"gen": {"a": 9}, "disc": {"b": 2}}
+
+
+MULTIDEV_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import ltfb
+
+K = 8
+mesh = Mesh(np.asarray(jax.devices()).reshape(K, 1), ("trainer", "model"))
+
+def metric(params, batch):
+    return jnp.mean(jnp.abs(params["w"] - batch["t"]))
+
+params = {"w": jnp.arange(K, dtype=jnp.float32).reshape(K, 1)}
+batch = {"t": jnp.full((K, 4), 3.0)}
+step = ltfb.make_ltfb_step(metric, K, mesh, axis="trainer", scope="full")
+p = params
+for r in range(6):
+    p, ml, mo = step(p, batch, jnp.int32(r))
+assert np.all(np.asarray(p["w"]).ravel() == 3.0), np.asarray(p["w"])
+print("OK")
+"""
+
+
+def test_mesh_native_butterfly_propagates_best(tmp_path):
+    env = {"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    import os
+    full_env = dict(os.environ)
+    full_env.update(env)
+    r = subprocess.run([sys.executable, "-c", MULTIDEV_SCRIPT],
+                       capture_output=True, text=True, env=full_env,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout
+
+
+QUANTIZED_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.core import ltfb
+
+K = 8
+mesh = Mesh(np.asarray(jax.devices()).reshape(K, 1), ("trainer", "model"))
+
+def metric(params, batch):
+    return jnp.mean(jnp.abs(params["w"] - batch["t"]))
+
+params = {"w": jnp.arange(K, dtype=jnp.float32).reshape(K, 1) * 10.0}
+batch = {"t": jnp.full((K, 4), 30.0)}
+step = ltfb.make_ltfb_step(metric, K, mesh, axis="trainer", scope="full",
+                           quantize=True)
+p = params
+for r in range(6):
+    p, ml, mo = step(p, batch, jnp.int32(r))
+w = np.asarray(p["w"]).ravel()
+# int8-quantized exchange: winner propagates within quantization error
+assert np.all(np.abs(w - 30.0) < 0.5), w
+print("OK")
+"""
+
+
+def test_quantized_exchange_propagates_within_tolerance():
+    import os
+    env = dict(os.environ)
+    env.update({"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+                "PYTHONPATH": "src"})
+    r = subprocess.run([sys.executable, "-c", QUANTIZED_SCRIPT],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "OK" in r.stdout

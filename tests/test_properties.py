@@ -1,0 +1,96 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models.layers import chunked_attention, dense_attention
+
+KEY = jax.random.PRNGKey(11)
+
+
+@given(
+    B=st.integers(1, 3),
+    S=st.integers(2, 96),
+    Hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 4]),
+    D=st.sampled_from([8, 16, 32]),
+    chunk=st.sampled_from([7, 16, 33, 64]),
+    causal=st.booleans(),
+)
+@settings(max_examples=25, deadline=None)
+def test_chunked_attention_equals_dense(B, S, Hkv, g, D, chunk, causal):
+    H = Hkv * g
+    ks = jax.random.split(jax.random.fold_in(KEY, S * H + D), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    a = dense_attention(q, k, v, causal)
+    b = chunked_attention(q, k, v, causal, k_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+@given(n=st.integers(8, 512), K=st.integers(1, 8), dim=st.integers(0, 4))
+@settings(max_examples=40, deadline=None)
+def test_silo_partition_covers_disjointly(n, K, dim):
+    from benchmarks.common import silo_partition
+    rng = np.random.default_rng(0)
+    x = rng.random((n, 5)).astype(np.float32)
+    silos = silo_partition(x, K, key_dim=dim)
+    flat = np.concatenate(silos)
+    assert sorted(flat.tolist()) == list(range(n))
+    # silos are ordered along the key dimension
+    for a, b in zip(silos[:-1], silos[1:]):
+        if len(a) and len(b):
+            assert x[a, dim].max() <= x[b, dim].min() + 1e-6
+
+
+@given(seed=st.integers(0, 100), n=st.integers(1, 2000))
+@settings(max_examples=20, deadline=None)
+def test_halton_inputs_in_unit_cube(seed, n):
+    from repro.data.jag import sample_inputs
+    x = sample_inputs(n, seed)
+    assert x.shape == (n, 5)
+    assert np.all(x >= 0.0) and np.all(x < 1.0)
+    if n >= 500:
+        # low-discrepancy: each octant of the first 3 dims is populated
+        cells = (x[:, :3] > 0.5).astype(int)
+        codes = cells @ np.array([4, 2, 1])
+        assert len(np.unique(codes)) == 8
+
+
+@given(st.integers(1, 6))
+@settings(max_examples=6, deadline=None)
+def test_moe_dropless_routes_all_tokens(k):
+    """With dropless capacity, the MoE output must equal the gate-weighted
+    sum of expert outputs for EVERY token (nothing dropped)."""
+    import dataclasses
+    from repro.configs.registry import get_config
+    from repro.configs.base import replace
+    from repro.models.layers import KeyGen, init_moe, moe_block
+
+    cfg = dataclasses.replace(get_config("phi3.5-moe-42b-a6.6b", smoke=True),
+                              dtype="float32")
+    cfg = replace(cfg, **{"moe.top_k": min(k, cfg.moe.num_experts)})
+    p, _ = init_moe(KeyGen(KEY), cfg)
+    x = jax.random.normal(jax.random.fold_in(KEY, k),
+                          (1, 16, cfg.d_model), jnp.float32)
+    out, _ = moe_block(p, cfg, x, dropless=True)
+    # brute-force per-token reference over all experts
+    xt = x.reshape(-1, cfg.d_model)
+    logits = xt @ np.asarray(p["router"], np.float32)
+    probs = jax.nn.softmax(jnp.asarray(logits), axis=-1)
+    gv, gi = jax.lax.top_k(probs, cfg.moe.top_k)
+    gv = gv / jnp.sum(gv, axis=-1, keepdims=True)
+
+    def expert(e, t):
+        h = jax.nn.silu(xt[t] @ p["wg"][e]) * (xt[t] @ p["wi"][e])
+        return h @ p["wo"][e]
+
+    ref = np.zeros_like(np.asarray(xt))
+    for t in range(xt.shape[0]):
+        for j in range(cfg.moe.top_k):
+            ref[t] += float(gv[t, j]) * np.asarray(expert(int(gi[t, j]), t))
+    np.testing.assert_allclose(np.asarray(out).reshape(ref.shape), ref,
+                               atol=1e-4)
