@@ -1,12 +1,10 @@
 """Shared benchmark plumbing: dataset construction, timing, CSV output."""
 from __future__ import annotations
 
-import os
 import time
-from typing import Callable, Dict, List
+from typing import Callable, List
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import OptimizerConfig
@@ -29,6 +27,17 @@ def make_jag_arrays(n: int, seed: int = 0):
     xs = jag.sample_inputs(n, seed)
     sim = jag.jag_simulate(xs, BENCH_CCFG.image_size)
     return sim["x"], jag.flatten_outputs(sim)
+
+
+def make_jag_bundles(root: str, n: int, samples_per_file: int = 512,
+                     seed: int = 0) -> List[str]:
+    """On-disk bundle manifest at the benchmark image size (reuses an
+    existing manifest of the right length when present)."""
+    files = jag.list_bundles(root)
+    if len(files) == (n + samples_per_file - 1) // samples_per_file:
+        return files
+    return jag.write_bundles(root, n, samples_per_file,
+                             image_size=BENCH_CCFG.image_size, seed=seed)
 
 
 def timeit(fn: Callable, warmup: int = 2, iters: int = 10) -> float:

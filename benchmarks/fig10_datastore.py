@@ -9,7 +9,6 @@ during epoch 1 (dynamic) or a parallel preload (preload).
 """
 from __future__ import annotations
 
-import os
 import tempfile
 import time
 

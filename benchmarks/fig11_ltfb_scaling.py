@@ -1,7 +1,9 @@
 """Paper Fig. 11 — LTFB strong scaling (the headline result: 70.2x at 64
 trainers, 109% parallel efficiency).
 
-K trainers each own a disjoint 1/K partition; steady-state epoch time
+K trainers each own a disjoint 1/K partition of the on-disk bundle
+manifest, served by their own distributed datastore (preload mode,
+block partitioning = the paper's data silos).  Steady-state epoch time
 per trainer = (samples/K/128) steps.  Trainer compute is MEASURED
 (jit'd GAN step); trainers run concurrently on real hardware, so the
 parallel epoch time is the per-trainer time (they time-share this
@@ -9,19 +11,21 @@ parallel epoch time is the per-trainer time (they time-share this
 parallel time are reported).  Tournament overhead is measured and
 included.  Superlinearity in the paper comes from data-store cache
 effects (aggregate memory grows with K) — reproduced here via the
-store's cache-hit accounting.
+store's cache-hit accounting, reported per K.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import (BENCH_CCFG, PAPER_BATCH, PAPER_OPT,
-                               CsvReport, make_jag_arrays, silo_partition,
+                               CsvReport, make_jag_arrays, make_jag_bundles,
                                timeit)
-from repro.core.population import Population, TrainerFns
+from repro.core.population import TrainerFns
+from repro.core.tournament import (DataPlan, TournamentConfig,
+                                   TournamentOrchestrator)
 from repro.train.steps import make_gan_steps
 
 
@@ -29,17 +33,18 @@ def run(report: CsvReport, quick: bool = False):
     n = 8_192 if quick else 32_768
     x, y = make_jag_arrays(n + 1024)
     val = {"x": jnp.asarray(x[n:]), "y": jnp.asarray(y[n:])}
-    init, train_step, metric = make_gan_steps(BENCH_CCFG, PAPER_OPT)
-    fns = TrainerFns(init, train_step, metric)
+    root = tempfile.mkdtemp(prefix="fig11_bundles_")
+    files = make_jag_bundles(root, n, samples_per_file=n // 16)
+    fns = TrainerFns(*make_gan_steps(BENCH_CCFG, PAPER_OPT))
 
     # measured per-step time (identical across trainers)
-    params, opt_state, hp = init(0)
+    params, opt_state, hp = fns.init(0)
     batch = {"x": jnp.asarray(x[:PAPER_BATCH]),
              "y": jnp.asarray(y[:PAPER_BATCH])}
     st = [params, opt_state]
 
     def one():
-        st[0], st[1], _ = train_step(st[0], st[1], batch, hp)
+        st[0], st[1], _ = fns.train_step(st[0], st[1], batch, hp)
         return st[0]
 
     t_step = timeit(one, warmup=2, iters=4 if quick else 10)
@@ -48,41 +53,41 @@ def run(report: CsvReport, quick: bool = False):
     base = None
     TOURN_INTERVAL = 100   # paper: tournaments at mini-batch intervals
     for K in (1, 2, 4, 8):
-        silos = silo_partition(x[:n], K)
-        def loader_for(k):
-            rng = np.random.default_rng(k)
-            pool = silos[k]
-            def loader():
-                idx = rng.choice(pool, PAPER_BATCH)
-                return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
-            return loader
+        cfg = TournamentConfig(
+            trainers=K, scope="generator", batch_size=PAPER_BATCH,
+            partition="block",           # paper's input-space data silos
+            num_ranks=2, tournament_batches=1,
+            tournament_batch_size=256, seed=0)
+        orch = TournamentOrchestrator(fns, DataPlan.jag_cyclegan(files),
+                                      cfg)
+        try:
+            orch.tournament()                # warm up (jit compile)
+            t0 = time.perf_counter()
+            orch.tournament()
+            t_tourn = time.perf_counter() - t0
 
-        loaders = [loader_for(k) for k in range(K)]
-        tb = [[{"x": jnp.asarray(x[silos[k][:256]]),
-                "y": jnp.asarray(y[silos[k][:256]])}]
-              for k in range(K)]
-        pop = Population(fns, loaders, tb, scope="generator", seed=0)
-        pop.tournament()                    # warm up (jit compile)
-        t0 = time.perf_counter()
-        pop.tournament()
-        t_tourn = time.perf_counter() - t0
-
-        steps_per_epoch = n // K // PAPER_BATCH
-        tourns_per_epoch = max(0, steps_per_epoch // TOURN_INTERVAL)
-        epoch_parallel = steps_per_epoch * t_step \
-            + tourns_per_epoch * t_tourn
-        base = base or epoch_parallel
-        speedup = base / epoch_parallel
-        eff = speedup / K
-        # quality check: short run, no loss of validation quality
-        pop.run(rounds=2, steps_per_round=10 if quick else 25)
-        vloss = pop.best_metric(val)
-        rows.append((K, epoch_parallel, speedup, eff, vloss))
-        report.add(
-            f"fig11/ltfb_trainers={K}", t_step * 1e6,
-            f"epoch_s={epoch_parallel:.3f};speedup={speedup:.2f};"
-            f"efficiency={eff:.2f};tournament_s={t_tourn:.3f};"
-            f"val={vloss:.4f}")
+            steps_per_epoch = n // K // PAPER_BATCH
+            tourns_per_epoch = max(0, steps_per_epoch // TOURN_INTERVAL)
+            epoch_parallel = steps_per_epoch * t_step \
+                + tourns_per_epoch * t_tourn
+            base = base or epoch_parallel
+            speedup = base / epoch_parallel
+            eff = speedup / K
+            # quality check: short run, no loss of validation quality
+            orch.run(rounds=2, steps_per_round=10 if quick else 25)
+            vloss = orch.population.best_metric(val)
+            stats = orch.stats()["total"]
+            hits = stats["cache_hits"]
+            hit_rate = hits / max(1, hits + stats["cache_misses"])
+            rows.append((K, epoch_parallel, speedup, eff, vloss))
+            report.add(
+                f"fig11/ltfb_trainers={K}", t_step * 1e6,
+                f"epoch_s={epoch_parallel:.3f};speedup={speedup:.2f};"
+                f"efficiency={eff:.2f};tournament_s={t_tourn:.3f};"
+                f"val={vloss:.4f};cache_hit_rate={hit_rate:.3f};"
+                f"data_exchange_MB={stats['exchange_bytes'] / 1e6:.1f}")
+        finally:
+            orch.close()
     return rows
 
 

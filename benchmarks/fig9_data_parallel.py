@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (BENCH_CCFG, PAPER_BATCH, PAPER_OPT,
-                               CsvReport, make_jag_arrays, timeit)
+from benchmarks.common import (PAPER_BATCH, PAPER_OPT, CsvReport,
+                               timeit)
 from repro.train.steps import make_gan_steps
 
 # comm model: V100 4-GPU NVLink node + EDR IB across nodes (paper's Lassen)

@@ -1,23 +1,27 @@
 """LTFB tournament training with fault tolerance + elastic rescale.
 
-Runs 4 LTFB trainers (generator-only exchange, local discriminators) on
-disjoint data partitions, kills one trainer mid-run, recovers it from
-the population's best model, then elastically grows the population to 6
-trainers — the full paper Section III-C lifecycle.
+The full paper Section III lifecycle through the unified orchestrator:
+4 LTFB trainers (generator-only exchange, local discriminators), each
+fed from its own distributed-datastore partition of an on-disk JAG
+bundle manifest, with background prefetch and tournament evaluation
+overlapped with the model exchange.  One trainer is killed mid-run,
+recovered from the population's best model, then the population is
+elastically grown to 6 trainers (re-partitioning the datastore and
+cloning tournament winners).
 
   PYTHONPATH=src python examples/ltfb_tournament.py
 """
 import os
 import sys
+import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax.numpy as jnp
-import numpy as np
-
 from repro.configs.base import OptimizerConfig
 from repro.configs.icf_cyclegan import CycleGANConfig
-from repro.core.population import Population, TrainerFns
+from repro.core.population import TrainerFns
+from repro.core.tournament import (DataPlan, TournamentConfig,
+                                   TournamentOrchestrator)
 from repro.data import jag
 from repro.train.steps import make_gan_steps
 
@@ -26,58 +30,52 @@ CCFG = CycleGANConfig(image_size=16, enc_hidden=(256, 64),
 N, BATCH = 12_000, 128
 
 
-def make_parts(x, y, K):
-    def loader_for(k):
-        rng = np.random.default_rng(500 + k)
-        pool = np.arange(k, N, K)
-        def loader():
-            idx = rng.choice(pool, BATCH)
-            return {"x": jnp.asarray(x[idx]), "y": jnp.asarray(y[idx])}
-        return loader
-    loaders = [loader_for(k) for k in range(K)]
-    tourn = [[{"x": jnp.asarray(x[np.arange(k, N, K)[:256]]),
-               "y": jnp.asarray(y[np.arange(k, N, K)[:256]])}]
-             for k in range(K)]
-    return loaders, tourn
-
-
 def main():
-    xs = jag.sample_inputs(N + 1024, seed=0)
-    sim = jag.jag_simulate(xs, CCFG.image_size)
-    x, y = sim["x"], jag.flatten_outputs(sim)
-    val = {"x": jnp.asarray(x[N:]), "y": jnp.asarray(y[N:])}
+    root = tempfile.mkdtemp(prefix="ltfb_example_")
+    files = jag.write_bundles(root, N, samples_per_file=1000,
+                              image_size=CCFG.image_size, seed=0)
+    print(f"dataset: {len(files)} bundles in {root}")
 
-    init, train_step, metric = make_gan_steps(
-        CCFG, OptimizerConfig(name="adam", lr=1e-3))
-    fns = TrainerFns(init, train_step, metric)
+    fns = TrainerFns(*make_gan_steps(
+        CCFG, OptimizerConfig(name="adam", lr=1e-3)))
+    cfg = TournamentConfig(trainers=4, scope="generator",
+                           batch_size=BATCH, num_ranks=2,
+                           tournament_batch_size=256, seed=0)
+    orch = TournamentOrchestrator(fns, DataPlan.jag_cyclegan(files), cfg)
+    pop = orch.population
+    try:
+        print("== 3 LTFB rounds, 4 trainers ==")
+        for r in range(3):
+            orch.train_round(40)
+            log = orch.tournament()
+            lrs = ["%.2e" % t.hparams["lr"] for t in pop.trainers]
+            print(f"round {r}: exchanged={log['exchanged']} "
+                  f"best_val={pop.best_metric(orch.val_batch):.4f} "
+                  f"lrs={lrs}")
 
-    loaders, tourn = make_parts(x, y, 4)
-    pop = Population(fns, loaders, tourn, scope="generator", seed=0)
+        print("== node failure: trainer 2 down ==")
+        orch.fail(2)
+        orch.train_round(40)
+        log = orch.tournament()          # straggler-tolerant pairing
+        print(f"with failure: exchanged={log['exchanged']} "
+              f"best_val={pop.best_metric(orch.val_batch):.4f}")
+        orch.recover(2)
+        print("trainer 2 recovered from population best")
 
-    print("== 3 LTFB rounds, 4 trainers ==")
-    for r in range(3):
-        pop.train_round(40)
-        log = pop.tournament()
-        lrs = ["%.2e" % t.hparams["lr"] for t in pop.trainers]
-        print(f"round {r}: exchanged={log['exchanged']} "
-              f"best_val={pop.best_metric(val):.4f} lrs={lrs}")
+        print("== elastic rescale to 6 trainers ==")
+        orch.rescale(6)                  # re-partitions the datastore
+        orch.train_round(40)
+        orch.tournament()
+        print(f"after rescale: K={len(pop.trainers)} "
+              f"best_val={pop.best_metric(orch.val_batch):.4f}")
 
-    print("== node failure: trainer 2 down ==")
-    pop.fail(2)
-    pop.train_round(40)
-    log = pop.tournament()          # straggler-tolerant pairing
-    print(f"with failure: exchanged={log['exchanged']} "
-          f"best_val={pop.best_metric(val):.4f}")
-    pop.recover(2, from_best_of=val)
-    print("trainer 2 recovered from population best")
-
-    print("== elastic rescale to 6 trainers ==")
-    loaders6, tourn6 = make_parts(x, y, 6)
-    pop.resize(6, loaders6, tourn6, clone_batch=val)
-    pop.train_round(40)
-    pop.tournament()
-    print(f"after rescale: K={len(pop.trainers)} "
-          f"best_val={pop.best_metric(val):.4f}")
+        st = orch.stats()
+        wins = [d["wins"] for d in st["per_trainer"]]
+        print(f"datastore: cache_hits={int(st['total']['cache_hits'])} "
+              f"exchange_MB={st['total']['exchange_bytes'] / 1e6:.2f}; "
+              f"tournament win counts={wins}")
+    finally:
+        orch.close()
 
 
 if __name__ == "__main__":

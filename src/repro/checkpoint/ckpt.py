@@ -11,10 +11,9 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import numpy as np
@@ -120,16 +119,29 @@ def save_population(ckpt_dir: str, step: int, pop_state: Dict[str, Any]):
     trainers can checkpoint independently (no global barrier)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     manifest = {"step": step, "num_trainers": len(pop_state["trainers"]),
-                "round": pop_state["round"], "time": time.time()}
+                "round": pop_state["round"], "time": time.time(),
+                "seed": pop_state.get("seed", 0),
+                "scope": pop_state.get("scope", "full")}
     for i, tr in enumerate(pop_state["trainers"]):
         save(os.path.join(ckpt_dir, f"step_{step}_trainer_{i}.ckpt"),
              {"params": tr["params"], "opt_state": tr["opt_state"]},
              {"hparams": tr["hparams"], "steps": tr["steps"],
-              "alive": tr["alive"]})
+              "alive": tr["alive"], "wins": tr.get("wins", 0),
+              "adoptions": tr.get("adoptions", 0)})
     with open(os.path.join(ckpt_dir, f"step_{step}.manifest.tmp"), "w") as f:
         json.dump(manifest, f)
     os.replace(os.path.join(ckpt_dir, f"step_{step}.manifest.tmp"),
                os.path.join(ckpt_dir, f"step_{step}.manifest"))
+
+
+def latest_population_step(ckpt_dir: str) -> Optional[int]:
+    """Newest population-checkpoint step in a directory (None if empty)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[len("step_"):-len(".manifest")])
+             for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".manifest")]
+    return max(steps) if steps else None
 
 
 def restore_population(ckpt_dir: str, step: int, like_trainer: dict,
@@ -150,6 +162,10 @@ def restore_population(ckpt_dir: str, step: int, like_trainer: dict,
         trainers.append({"params": tree["params"],
                          "opt_state": tree["opt_state"],
                          "hparams": meta["hparams"],
-                         "steps": meta["steps"], "alive": meta["alive"]})
-    return {"round": manifest["round"], "seed": 0, "scope": "full",
+                         "steps": meta["steps"], "alive": meta["alive"],
+                         "wins": meta.get("wins", 0),
+                         "adoptions": meta.get("adoptions", 0)})
+    return {"round": manifest["round"],
+            "seed": manifest.get("seed", 0),
+            "scope": manifest.get("scope", "full"),
             "trainers": trainers}

@@ -9,7 +9,7 @@ spirit and are config-driven here.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Tuple
 
 ARCH_ID = "icf-cyclegan"

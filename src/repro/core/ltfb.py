@@ -23,7 +23,6 @@ GANs (``exchange_scope``), per the paper's GAN extension.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -182,20 +181,29 @@ def make_ltfb_step(metric_fn: MetricFn, num_trainers: int,
         return (_unsqueeze0(new_params), jnp.reshape(m_local, (1,)),
                 jnp.reshape(m_other, (1,)))
 
-    shard_fn = jax.shard_map(
+    from repro.parallel.sharding import shard_map_compat
+
+    shard_fn = shard_map_compat(
         body, mesh=mesh,
         in_specs=(param_specs if param_specs is not None else in_spec,
                   batch_specs if batch_specs is not None else in_spec,
                   P()),
         out_specs=(param_specs if param_specs is not None else in_spec,
-                   in_spec, in_spec),
-        check_vma=False)
+                   in_spec, in_spec))
     return jax.jit(shard_fn)
 
 
 # ---------------------------------------------------------------------------
 # Host-side tournament (population trainer / benchmarks)
 # ---------------------------------------------------------------------------
+
+
+def tree_nbytes(tree) -> int:
+    """Byte size of a pytree from array metadata (exchange-volume
+    accounting) — never copies device buffers to host."""
+    return int(sum(leaf.nbytes if hasattr(leaf, "nbytes")
+                   else np.asarray(leaf).nbytes
+                   for leaf in jax.tree.leaves(tree)))
 
 
 def host_tournament(population: List[Params], metrics_eval: Callable,
@@ -208,7 +216,8 @@ def host_tournament(population: List[Params], metrics_eval: Callable,
     """
     K = len(population)
     winners: List[Params] = [None] * K
-    log = {"exchanged": 0, "kept_local": 0, "metrics": []}
+    log = {"exchanged": 0, "kept_local": 0, "metrics": [],
+           "exchange_bytes": 0}
     for i in range(K):
         j = int(partner[i])
         if j == i:
@@ -218,6 +227,7 @@ def host_tournament(population: List[Params], metrics_eval: Callable,
         exch_j, _ = split_scope(population[j], scope)
         _, local_i = split_scope(population[i], scope)
         cand = merge_scope(exch_j, local_i, scope)
+        log["exchange_bytes"] += tree_nbytes(exch_j)
         m_local = float(metrics_eval(i, population[i]))
         m_other = float(metrics_eval(i, cand))
         if m_other < m_local:
@@ -225,6 +235,54 @@ def host_tournament(population: List[Params], metrics_eval: Callable,
             log["exchanged"] += 1
         else:
             winners[i] = population[i]
+            log["kept_local"] += 1
+        log["metrics"].append((i, j, m_local, m_other))
+    return winners, log
+
+
+def host_tournament_async(population: List[Params], metrics_eval: Callable,
+                          partner: np.ndarray, scope: str = "full",
+                          executor=None
+                          ) -> Tuple[List[Params], Dict[str, Any]]:
+    """Tournament round with evaluation overlapped with the exchange.
+
+    The paper's non-blocking sendrecv: each trainer evaluates its OWN
+    model on the held-out tournament set while the partner's model is in
+    flight.  Here the local-metric evaluations are submitted to
+    ``executor`` *before* the exchange (split/merge + byte accounting)
+    runs, then the received-candidate evaluations are submitted, so the
+    two phases overlap instead of strictly alternating per trainer.
+    """
+    if executor is None:
+        return host_tournament(population, metrics_eval, partner, scope)
+    K = len(population)
+    log = {"exchanged": 0, "kept_local": 0, "metrics": [],
+           "exchange_bytes": 0}
+    active = [i for i in range(K) if int(partner[i]) != i]
+    # phase 1: local evals in flight while the exchange happens
+    local_f = {i: executor.submit(metrics_eval, i, population[i])
+               for i in active}
+    cands: Dict[int, Params] = {}
+    for i in active:
+        j = int(partner[i])
+        exch_j, _ = split_scope(population[j], scope)
+        _, local_i = split_scope(population[i], scope)
+        cands[i] = merge_scope(exch_j, local_i, scope)
+        log["exchange_bytes"] += tree_nbytes(exch_j)
+    # phase 2: received-candidate evals
+    other_f = {i: executor.submit(metrics_eval, i, cands[i]) for i in active}
+    winners = list(population)
+    for i in range(K):
+        j = int(partner[i])
+        if j == i:
+            log["kept_local"] += 1
+            continue
+        m_local = float(local_f[i].result())
+        m_other = float(other_f[i].result())
+        if m_other < m_local:
+            winners[i] = cands[i]
+            log["exchanged"] += 1
+        else:
             log["kept_local"] += 1
         log["metrics"].append((i, j, m_local, m_other))
     return winners, log

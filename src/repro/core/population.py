@@ -51,6 +51,8 @@ class TrainerState:
     alive: bool = True
     steps: int = 0
     train_seconds: float = 0.0
+    wins: int = 0           # pairwise comparisons this trainer's model won
+    adoptions: int = 0      # times this trainer adopted a partner's model
     history: List[float] = field(default_factory=list)
 
 
@@ -97,21 +99,32 @@ class Population:
                 for b in self.trainers[idx].tournament_batches]
         return float(np.mean(vals))
 
-    def tournament(self) -> Dict[str, Any]:
+    def tournament(self, executor=None) -> Dict[str, Any]:
+        """One tournament round.
+
+        With ``executor`` (a ``concurrent.futures`` executor), metric
+        evaluation is overlapped with the partner exchange
+        (:func:`repro.core.ltfb.host_tournament_async`).
+        """
         alive = [t.alive for t in self.trainers]
         partner = ltfb.random_pairing(len(self.trainers), self.round,
                                       self.seed, alive)
         pop = [t.params for t in self.trainers]
-        winners, log = ltfb.host_tournament(pop, self._metric_on, partner,
-                                            self.scope)
+        winners, log = ltfb.host_tournament_async(
+            pop, self._metric_on, partner, self.scope, executor)
+        for i, j, m_local, m_other in log["metrics"]:
+            winner_idx = j if m_other < m_local else i
+            self.trainers[winner_idx].wins += 1
         for i, t in enumerate(self.trainers):
             adopted = winners[i] is not t.params
             t.params = winners[i]
-            if adopted and self.perturb_hparams:
-                f = self.perturb_factor if self.rng.random() < 0.5 \
-                    else 1.0 / self.perturb_factor
-                t.hparams = {k: v * f if k == "lr" else v
-                             for k, v in t.hparams.items()}
+            if adopted:
+                t.adoptions += 1
+                if self.perturb_hparams:
+                    f = self.perturb_factor if self.rng.random() < 0.5 \
+                        else 1.0 / self.perturb_factor
+                    t.hparams = {k: v * f if k == "lr" else v
+                                 for k, v in t.hparams.items()}
         self.round += 1
         log["partner"] = partner.tolist()
         return log
@@ -187,7 +200,8 @@ class Population:
             "scope": self.scope,
             "trainers": [
                 {"params": t.params, "opt_state": t.opt_state,
-                 "hparams": t.hparams, "steps": t.steps, "alive": t.alive}
+                 "hparams": t.hparams, "steps": t.steps, "alive": t.alive,
+                 "wins": t.wins, "adoptions": t.adoptions}
                 for t in self.trainers],
         }
 
@@ -201,3 +215,5 @@ class Population:
             t.hparams = dict(s["hparams"])
             t.steps = int(s["steps"])
             t.alive = bool(s["alive"])
+            t.wins = int(s.get("wins", 0))
+            t.adoptions = int(s.get("adoptions", 0))

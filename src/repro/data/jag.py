@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import math
 import os
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 import numpy as np
 
@@ -156,3 +156,11 @@ def write_bundles(root: str, num_samples: int, samples_per_file: int = 1000,
 def read_bundle(path: str) -> Dict[str, np.ndarray]:
     with np.load(path) as z:
         return {k: z[k] for k in z.files}
+
+
+def list_bundles(root: str) -> List[str]:
+    """Existing bundle manifest under `root` (sorted; [] if none)."""
+    if not os.path.isdir(root):
+        return []
+    return sorted(os.path.join(root, f) for f in os.listdir(root)
+                  if f.startswith("jag_") and f.endswith(".npz"))

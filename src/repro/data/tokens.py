@@ -7,7 +7,8 @@ ModelConfig, including the VLM/audio stub frontends.
 """
 from __future__ import annotations
 
-from typing import Dict
+import os
+from typing import Dict, List
 
 import numpy as np
 
@@ -55,3 +56,51 @@ def train_batch(cfg: ModelConfig, batch: int, seq: int, seed: int = 0
     out["tokens"] = toks[:, :-1]
     out["labels"] = toks[:, 1:]
     return out
+
+
+# ---------------------------------------------------------------------------
+# Bundled token shards (LM analogue of the JAG sample bundles) — on-disk
+# files so the distributed DataStore can partition / preload / exchange
+# LM data exactly like the scientific bundles.
+# ---------------------------------------------------------------------------
+
+
+def shard_path(root: str, i: int) -> str:
+    return os.path.join(root, f"tokens_{i:05d}.npz")
+
+
+def write_token_shards(root: str, num_samples: int, seq_len: int,
+                       vocab: int, samples_per_file: int = 256,
+                       seed: int = 0) -> List[str]:
+    """Write `num_samples` (seq_len+1)-token rows into bundle files.
+
+    Each row holds input tokens and next-token labels in one array
+    (split by :func:`lm_shard_batch` at batch-assembly time).
+    """
+    os.makedirs(root, exist_ok=True)
+    stream = token_stream(num_samples * (seq_len + 1), vocab, seed)
+    rows = stream.reshape(num_samples, seq_len + 1)
+    paths = []
+    for fi in range(0, num_samples, samples_per_file):
+        path = shard_path(root, fi // samples_per_file)
+        np.savez(path, tokens=rows[fi:fi + samples_per_file])
+        paths.append(path)
+    return paths
+
+
+def read_token_shard(path: str) -> Dict[str, np.ndarray]:
+    with np.load(path) as z:
+        return {"tokens": z["tokens"]}
+
+
+def list_token_shards(root: str) -> List[str]:
+    if not os.path.isdir(root):
+        return []
+    return sorted(os.path.join(root, f) for f in os.listdir(root)
+                  if f.startswith("tokens_") and f.endswith(".npz"))
+
+
+def lm_shard_batch(batch: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """DataStore batch (stacked shard rows) -> LM train batch."""
+    rows = batch["tokens"]
+    return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}

@@ -67,12 +67,27 @@ class DataStore:
         self.samples_per_file = len(first[self._keys[0]])
         self.stats.file_opens += 1
         self.stats.bytes_read += sum(v.nbytes for v in first.values())
+        last = None
+        if len(self.files) > 1:
+            # sample-id -> file arithmetic assumes uniform bundles; a
+            # short final bundle would index past its end — fail loudly
+            last = reader(self.files[-1])
+            self.stats.file_opens += 1
+            self.stats.bytes_read += sum(v.nbytes for v in last.values())
+            n_last = len(last[self._keys[0]])
+            if n_last != self.samples_per_file:
+                raise ValueError(
+                    f"non-uniform bundle manifest: {self.files[-1]} has "
+                    f"{n_last} samples, expected {self.samples_per_file} "
+                    "— write num_samples as a multiple of "
+                    "samples_per_file or drop the short bundle")
         self.num_samples = self.samples_per_file * len(self.files)
         # rank-owned caches: rank -> {sample_id: {key: np.ndarray}}
         self._cache: List[Dict[int, dict]] = [dict() for _ in range(num_ranks)]
-        self._file_cache_tmp = {0: first} if mode != "none" else {}
-        if mode != "none" and 0 in self._file_cache_tmp:
+        if mode != "none":
             self._adopt_file(0, first)
+            if last is not None:
+                self._adopt_file(len(self.files) - 1, last)
 
     # -- ownership ---------------------------------------------------------
     def owner_of_file(self, file_idx: int) -> int:
@@ -158,12 +173,19 @@ class DataStore:
 
 class PrefetchLoader:
     """Background-thread batch assembly (the paper's non-blocking shuffle
-    overlap).  ``depth`` is the double-buffering depth."""
+    overlap).  ``depth`` is the double-buffering depth.
+
+    ``consumer_rank`` selects which simulated rank assembles each batch:
+    a fixed int, or ``None`` to rotate ranks per step (each rank takes
+    its turn consuming, so owner->consumer exchange volume accrues the
+    way it does across the trainer's real ranks).
+    """
 
     def __init__(self, store: DataStore, batch_size: int, depth: int = 2,
-                 epoch: int = 0):
+                 epoch: int = 0, consumer_rank: Optional[int] = 0):
         self.store = store
         self.batch_size = batch_size
+        self.consumer_rank = consumer_rank
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._epoch = epoch
@@ -178,7 +200,10 @@ class PrefetchLoader:
             if step and step % spe == 0:
                 self._epoch += 1
                 perm = self.store.epoch_permutation(self._epoch)
-            batch = self.store.get_batch(perm, step, self.batch_size)
+            rank = self.consumer_rank if self.consumer_rank is not None \
+                else step % self.store.num_ranks
+            batch = self.store.get_batch(perm, step, self.batch_size,
+                                         consumer_rank=rank)
             while not self._stop.is_set():
                 try:
                     self._q.put(batch, timeout=0.1)
@@ -201,7 +226,30 @@ class PrefetchLoader:
 
 
 def partition_files(files: Sequence[str], num_trainers: int,
-                    trainer_idx: int) -> List[str]:
-    """LTFB data partitioning: trainer k owns files[k::num_trainers]
-    (disjoint, load-balanced; paper Section III-C)."""
-    return list(files[trainer_idx::num_trainers])
+                    trainer_idx: int, strategy: str = "stride") -> List[str]:
+    """LTFB data partitioning (disjoint, load-balanced; paper §III-C).
+
+    ``stride``: trainer k owns files[k::num_trainers] (interleaved —
+    every trainer samples the whole exploration order).
+    ``block``: trainer k owns a contiguous chunk — since bundles are
+    written in parameter-space exploration order this approximates the
+    paper's data-silo scenario (each trainer sees one region of input
+    space, and tournaments propagate the encoded partitions).
+    """
+    if strategy == "stride":
+        return list(files[trainer_idx::num_trainers])
+    if strategy == "block":
+        n = len(files)
+        lo = trainer_idx * n // num_trainers
+        hi = (trainer_idx + 1) * n // num_trainers
+        return list(files[lo:hi])
+    raise ValueError(f"unknown partition strategy {strategy!r}")
+
+
+def aggregate_stats(stores: Sequence[DataStore]) -> Dict[str, float]:
+    """Sum StoreStats across a population of per-trainer stores."""
+    total: Dict[str, float] = collections.defaultdict(float)
+    for s in stores:
+        for k, v in s.stats.as_dict().items():
+            total[k] += v
+    return dict(total)

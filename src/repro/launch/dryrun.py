@@ -29,8 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MeshConfig, OptimizerConfig, replace
-from repro.configs.registry import (dryrun_cells, get_config, get_shape,
-                                    shapes_for)
+from repro.configs.registry import dryrun_cells, get_config, get_shape
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_ltfb_mesh, make_production_mesh
 from repro.parallel import roofline
@@ -255,7 +254,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
               f"-> bottleneck={report.bottleneck} "
               f"(useful_flops={report.useful_flops_ratio:.2f}, "
               f"mfu@roofline={report.mfu:.2%})")
-        print(f"  collectives: { {k: f'{v/gb:.2f}G' for k, v in (report.coll_detail or {}).items()} }")
+        coll = {k: f"{v/gb:.2f}G"
+                for k, v in (report.coll_detail or {}).items()}
+        print(f"  collectives: {coll}")
         if credits:
             print(f"  kernel-deployed: memory={t_memory_kernel*1e3:.2f}ms "
                   f"collective={t_coll_kernel*1e3:.2f}ms "

@@ -94,7 +94,7 @@ def train_lm(args):
 def train_cyclegan(args):
     """The paper's model: delegates to the quickstart pipeline."""
     from repro.configs.base import OptimizerConfig
-    from repro.configs.icf_cyclegan import SMOKE, FULL, CycleGANConfig
+    from repro.configs.icf_cyclegan import CycleGANConfig
     from repro.data import jag
     from repro.train.steps import make_gan_steps
 

@@ -12,7 +12,7 @@ model param trees contain tuple internal nodes (scan period stacks).
 from __future__ import annotations
 
 import math
-from typing import Any, Callable, Dict, NamedTuple, Tuple
+from typing import Any, Callable, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ with DP/TP rules applying inside each stage as usual.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -99,8 +99,9 @@ def make_pipelined_forward(stage_fn: Callable, mesh: Mesh,
         out = pipeline_apply(params, x_mb, stage_fn, num_stages, axis)
         return out
 
-    return jax.shard_map(
+    from repro.parallel.sharding import shard_map_compat
+
+    return shard_map_compat(
         body, mesh=mesh,
         in_specs=(p_spec, x_spec if x_spec is not None else P()),
-        out_specs=P(),
-        check_vma=False)
+        out_specs=P())

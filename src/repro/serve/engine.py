@@ -7,8 +7,7 @@ requests).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,11 +8,9 @@ dry-run lowers for every (arch x shape) cell.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import MeshConfig, ModelConfig, OptimizerConfig
 from repro.configs.icf_cyclegan import CycleGANConfig
@@ -62,6 +60,30 @@ def make_lm_eval_metric(cfg: ModelConfig) -> Callable:
         return loss
 
     return metric
+
+
+def make_lm_population_fns(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                           mesh_cfg: Optional[MeshConfig] = None):
+    """(init, train_step, metric) adapter so LM architectures plug into
+    the LTFB population/tournament orchestrator exactly like the GAN.
+
+    The LM step drives its own lr schedule from the optimizer step
+    count; the hparams dict carries the base lr for PBT bookkeeping but
+    perturbations do not rewire the compiled schedule.
+    """
+    step_fn = jax.jit(make_lm_train_step(cfg, opt_cfg, mesh_cfg))
+    metric = jax.jit(make_lm_eval_metric(cfg))
+
+    def init(seed: int):
+        state, _ = init_lm_state(cfg, opt_cfg, jax.random.PRNGKey(seed))
+        return state["params"], state["opt_state"], {"lr": opt_cfg.lr}
+
+    def train_step(params, opt_state, batch, hparams):
+        new_state, metrics = step_fn(
+            {"params": params, "opt_state": opt_state}, batch)
+        return new_state["params"], new_state["opt_state"], metrics
+
+    return init, train_step, metric
 
 
 def make_lm_prefill_step(cfg: ModelConfig) -> Callable:

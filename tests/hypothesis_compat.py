@@ -1,0 +1,32 @@
+"""Import shim so mixed test modules collect without hypothesis.
+
+``from hypothesis_compat import given, settings, st`` — with hypothesis
+installed these are the real objects; in a bare environment ``@given``
+marks just the property tests as skipped while the rest of the module
+still runs (``pip install -e .[test]`` for full coverage).
+"""
+import pytest
+
+try:
+    from hypothesis import given, settings  # noqa: F401
+    from hypothesis import strategies as st  # noqa: F401
+except ImportError:
+    def given(*args, **kwargs):
+        def deco(fn):
+            return pytest.mark.skip(
+                reason="hypothesis not installed "
+                       "(pip install -e .[test])")(fn)
+        return deco
+
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _StrategyStub:
+        def __getattr__(self, name):
+            def strategy(*args, **kwargs):
+                return None
+            return strategy
+
+    st = _StrategyStub()

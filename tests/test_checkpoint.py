@@ -4,12 +4,10 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import ckpt
 from repro.configs.base import OptimizerConfig
 from repro.configs.icf_cyclegan import SMOKE as CCFG
-from repro.models import icf_cyclegan as cg
 from repro.train.steps import make_gan_steps
 
 KEY = jax.random.PRNGKey(0)

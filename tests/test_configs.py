@@ -1,7 +1,7 @@
 """Architecture configs must match the assigned literature specs exactly."""
 import pytest
 
-from repro.configs.registry import ARCHS, get_config
+from repro.configs.registry import get_config
 
 SPEC = {
     # arch: (L, d_model, H, kv, d_ff, vocab)

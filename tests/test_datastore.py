@@ -1,11 +1,9 @@
 """Distributed data store tests (paper §III-B): population modes, epoch
 shuffling, exchange accounting, prefetch overlap, partitioning."""
-import os
-
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.data import jag
 from repro.datastore.store import DataStore, PrefetchLoader, partition_files

@@ -4,12 +4,9 @@ on 8 simulated devices (subprocess)."""
 import subprocess
 import sys
 
-import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.core import ltfb
 

@@ -16,7 +16,7 @@ from repro.configs.base import MeshConfig, OptimizerConfig, replace
 from repro.configs.registry import LM_ARCH_IDS, get_config
 from repro.data.tokens import train_batch
 from repro.models.lm import (init_cache, init_lm, lm_decode, lm_forward,
-                             lm_loss, lm_prefill)
+                             lm_prefill)
 from repro.train.steps import init_lm_state, make_lm_train_step
 
 KEY = jax.random.PRNGKey(0)

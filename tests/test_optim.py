@@ -3,8 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+from hypothesis_compat import given, settings, st
 
 from repro.configs.base import OptimizerConfig
 from repro.optim import compression as comp
@@ -90,9 +90,10 @@ def body(gb, eb):
                                          "pod", 2)
     return mean["g"][None], err["g"][None]
 
-f = jax.jit(jax.shard_map(body, mesh=mesh,
+from repro.parallel.sharding import shard_map_compat
+f = jax.jit(shard_map_compat(body, mesh=mesh,
             in_specs=(P("pod"), P("pod")),
-            out_specs=(P("pod"), P("pod")), check_vma=False))
+            out_specs=(P("pod"), P("pod"))))
 mean_ref = np.asarray(jnp.mean(g, axis=0))
 out, err = f(g, e)
 out = np.asarray(out)

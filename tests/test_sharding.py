@@ -3,14 +3,10 @@ import os
 import subprocess
 import sys
 
-import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.parallel.sharding import (DEFAULT_RULES, ShardingRules,
-                                     constrain, tree_shardings,
-                                     use_sharding)
+from repro.parallel.sharding import constrain
 
 
 def test_constrain_is_noop_without_context():

@@ -4,7 +4,6 @@ The full LTFB pipeline: synthetic JAG -> bundled files -> distributed
 data store -> CycleGAN trainers -> tournament -> validation; plus the
 serving engine and the checkpoint/restart lifecycle.
 """
-import os
 
 import jax
 import jax.numpy as jnp
