@@ -1,0 +1,99 @@
+"""Fig. 14 (beyond-paper) — continuous vs. static batching at serve time.
+
+The ROADMAP north star is a production system answering surrogate /
+LM queries at scale; this benchmark measures the scheduling policy that
+gets there.  One mixed-length request trace is served twice through the
+SAME compiled prefill/decode kernels and the SAME preallocated KV-cache
+pool (:mod:`repro.serve.scheduler`):
+
+  * ``static``      — classic batch inference: fill the pool, pad to the
+    batch's worst case, run until EVERY request in the batch finishes,
+    only then admit the next batch.
+  * ``continuous``  — token-budget admission interleaved with decode:
+    a finished request's slot is re-filled on the next step.
+
+Reported per policy: wall-clock tokens/s, time-to-first-token
+(mean/p95), decode steps, and useful-tokens-per-slot-step (the decode
+utilization static batching wastes on its stragglers).
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import CsvReport
+from repro.configs.registry import get_config
+from repro.data.tokens import token_stream
+from repro.models.lm import init_lm
+from repro.serve.scheduler import Request, Scheduler
+
+# mixed-length trace: short chats + long documents, interleaved so a
+# static batch always contains at least one straggler
+PROMPT_LENS = (8, 24, 8, 48, 16, 8)
+MAX_NEW = (12, 48, 12, 24, 48, 12)
+
+
+def build_trace(cfg, n_requests: int, seed: int = 0):
+    stream = token_stream(n_requests * max(PROMPT_LENS), cfg.vocab_size,
+                          seed=seed)
+    reqs, off = [], 0
+    for i in range(n_requests):
+        p = PROMPT_LENS[i % len(PROMPT_LENS)]
+        reqs.append(Request(rid=i,
+                            prompt=np.asarray(stream[off:off + p], np.int32),
+                            max_new=MAX_NEW[i % len(MAX_NEW)]))
+        off += p
+    return reqs
+
+
+def serve_once(cfg, params, reqs, policy: str, slots: int, max_len: int):
+    sched = Scheduler(cfg, params, num_slots=slots, max_len=max_len,
+                      policy=policy)
+    for r in reqs:
+        sched.submit(Request(rid=r.rid, prompt=r.prompt,
+                             max_new=r.max_new))
+    sched.run()
+    return sched
+
+
+def run(report: CsvReport, quick: bool = False):
+    cfg = get_config("qwen3-0.6b", smoke=True)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    n = 12 if quick else 24
+    slots = 4
+    max_len = max(p + m for p, m in zip(PROMPT_LENS, MAX_NEW))
+    reqs = build_trace(cfg, n)
+
+    # warm the jit caches so the comparison is pure scheduling policy
+    serve_once(cfg, params, build_trace(cfg, min(n, len(PROMPT_LENS))),
+               "continuous", slots, max_len)
+
+    out = {}
+    for policy in ("static", "continuous"):
+        sched = serve_once(cfg, params, reqs, policy, slots, max_len)
+        d = sched.stats.as_dict()
+        out[policy] = d
+        util = d["decode_tokens"] / max(d["decode_slot_steps"], 1)
+        print(f"# fig14 {policy}: {d['tokens_per_s']:.1f} tok/s "
+              f"ttft_mean={d['ttft_mean_s'] * 1e3:.0f}ms "
+              f"ttft_p95={d['ttft_p95_s'] * 1e3:.0f}ms "
+              f"decode_steps={d['decode_steps']} util={util:.2f}")
+        report.add(f"fig14_{policy}_tok_per_s",
+                   1e6 / max(d["tokens_per_s"], 1e-9),
+                   f"tok/s={d['tokens_per_s']:.1f}")
+        report.add(f"fig14_{policy}_ttft_mean",
+                   d["ttft_mean_s"] * 1e6,
+                   f"p95={d['ttft_p95_s'] * 1e6:.0f}us")
+
+    speedup = out["continuous"]["tokens_per_s"] / \
+        max(out["static"]["tokens_per_s"], 1e-9)
+    print(f"# fig14 continuous/static tokens/s speedup: {speedup:.2f}x")
+    report.add("fig14_continuous_speedup", speedup * 100,
+               f"{speedup:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    r = CsvReport()
+    run(r, quick=True)
+    r.dump()

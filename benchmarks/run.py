@@ -20,7 +20,7 @@ def main(argv=None) -> int:
     from benchmarks.common import CsvReport
     from benchmarks import (fig9_data_parallel, fig10_datastore,
                             fig11_ltfb_scaling, fig12_quality,
-                            fig13_kindependent, roofline)
+                            fig13_kindependent, fig14_serving, roofline)
 
     suites = {
         "fig9": fig9_data_parallel.run,
@@ -28,6 +28,7 @@ def main(argv=None) -> int:
         "fig11": fig11_ltfb_scaling.run,
         "fig12": fig12_quality.run,
         "fig13": fig13_kindependent.run,
+        "fig14": fig14_serving.run,
         "roofline": roofline.run,
     }
     if args.only:

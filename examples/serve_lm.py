@@ -1,57 +1,53 @@
-"""Serve a small LM with batched requests through the KV-cache engine.
+"""Serve a small LM through the continuous-batching scheduler.
 
-Uses the qwen3-family smoke config (the same code path the decode_32k /
-long_500k dry-run cells lower at production scale): prefill a batch of
-prompts, then greedy-decode continuations.
+A mixed-length batch of prompts flows through the request queue: the
+scheduler admits requests by token budget into a shared preallocated
+KV-cache pool, interleaves prefill of new requests with batched decode
+of in-flight ones, and frees slots per-request on completion — compare
+with the static (pad-to-max) baseline by passing --policy static.
 
-  PYTHONPATH=src python examples/serve_lm.py [--tokens 48]
+  PYTHONPATH=src python examples/serve_lm.py [--tokens 24]
 """
 import argparse
 import os
 import sys
-import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.registry import get_config
-from repro.data.tokens import token_stream
+from repro.launch.serve import build_requests, parse_lens
 from repro.models.lm import init_lm
-from repro.serve.engine import Engine
+from repro.serve.scheduler import Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=48)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-lens", default="8,16,24")
+    ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--policy", default="continuous",
+                    choices=("continuous", "static"))
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
     print(f"arch={cfg.name} (reduced config, {cfg.param_count()/1e6:.1f}M "
-          f"params), batch={args.batch}")
+          f"params), slots={args.slots} policy={args.policy}")
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
-    engine = Engine(cfg, params, max_len=args.prompt_len + args.tokens)
 
-    prompts = jnp.asarray(
-        token_stream(args.batch * args.prompt_len, cfg.vocab_size, seed=1)
-        .reshape(args.batch, args.prompt_len))
-    t0 = time.time()
-    out = engine.generate(prompts, steps=args.tokens)
-    dt = time.time() - t0
-    total_new = args.batch * args.tokens
-    print(f"generated {total_new} tokens in {dt:.2f}s "
-          f"({total_new/dt:.1f} tok/s incl. compile)")
-    # steady-state decode rate
-    t0 = time.time()
-    out = engine.generate(prompts, steps=args.tokens)
-    dt = time.time() - t0
-    print(f"steady state: {total_new/dt:.1f} tok/s")
+    lens = parse_lens(args.prompt_lens)
+    max_len = max(lens) + args.tokens
+    sched = Scheduler(cfg, params, num_slots=args.slots, max_len=max_len,
+                      policy=args.policy)
+    for r in build_requests(cfg, args.requests, lens, args.tokens, seed=1):
+        sched.submit(r)
+    results = sched.run()
+    sched.stats.report()
     print("sample continuation (token ids):",
-          list(map(int, out[0, args.prompt_len:args.prompt_len + 12])))
+          list(map(int, results[0][:12])))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,202 @@
+"""Serving launcher: continuous-batching inference over tournament winners.
+
+Serves the models ``launch/ltfb.py`` trains.  Two workloads behind one
+CLI:
+
+  * **lm** (any registered LM arch) — a mixed-length synthetic request
+    trace through the continuous-batching scheduler
+    (:mod:`repro.serve.scheduler`): token-budget admission, slot-based
+    prefill/decode interleave, per-request completion.
+  * **surrogate** (``--arch icf-cyclegan``) — batched ICF-surrogate
+    queries through :mod:`repro.serve.surrogate`.
+
+With ``--ckpt-dir`` pointing at an LTFB population checkpoint the
+launcher serves the tournament winner (exporting ``winner_step_<n>.ckpt``
+if needed) and, with ``--watch-every N``, hot-swaps newer winners
+between scheduler steps — serving follows training live.
+
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke --requests 8
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --ckpt-dir /tmp/pop --watch-every 4
+  python -m repro.launch.serve --arch icf-cyclegan --smoke --queries 32
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.registry import ARCHS, get_config
+from repro.data.tokens import token_stream
+from repro.serve.registry import ModelRegistry
+from repro.serve.scheduler import Request, Scheduler
+
+
+def parse_lens(spec: str) -> List[int]:
+    return [int(x) for x in spec.split(",") if x]
+
+
+def build_requests(cfg, requests: int, prompt_lens: List[int],
+                   max_new: int, eos_id: Optional[int] = None,
+                   temperature: float = 0.0, seed: int = 0
+                   ) -> List[Request]:
+    """Deterministic mixed-length trace: prompt lengths cycle through
+    `prompt_lens`, token ids from the synthetic stream."""
+    lens = list(prompt_lens)
+    stream = token_stream(sum(lens[i % len(lens)] for i in
+                              range(requests)) + requests,
+                          cfg.vocab_size, seed=seed)
+    reqs, off = [], 0
+    for i in range(requests):
+        n = lens[i % len(lens)]
+        reqs.append(Request(
+            rid=i, prompt=np.asarray(stream[off:off + n], np.int32),
+            max_new=max_new, eos_id=eos_id, temperature=temperature,
+            seed=None if temperature <= 0 else seed + i))
+        off += n
+    return reqs
+
+
+def make_registry(args, like_params, metric_fn=None,
+                  val_batch=None) -> Optional[ModelRegistry]:
+    if not args.ckpt_dir:
+        return None
+    return ModelRegistry(args.ckpt_dir, like_params, metric_fn=metric_fn,
+                         val_batch=val_batch, auto_export=True)
+
+
+def run_lm(args) -> Dict[str, object]:
+    from repro.models.lm import init_lm
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    params, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
+    registry = make_registry(args, params)
+    if registry is not None:
+        params = registry.load()
+        print(f"[serve] winner: step={registry.step} "
+              f"trainer={registry.info.get('trainer')} "
+              f"wins={registry.info.get('wins')}")
+    max_len = args.max_len or max(
+        parse_lens(args.prompt_lens)) + args.max_new
+    sched = Scheduler(
+        cfg, params, num_slots=args.slots, max_len=max_len,
+        block_size=args.block_size, num_blocks=args.num_blocks,
+        policy=args.policy, max_prefills_per_step=args.prefill_per_step,
+        registry=registry, watch_every=args.watch_every)
+    reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
+                          args.max_new, eos_id=args.eos_id,
+                          temperature=args.temperature, seed=args.seed)
+    print(f"[serve] arch={cfg.name} workload=lm policy={args.policy} "
+          f"slots={args.slots} max_len={max_len} "
+          f"block_size={args.block_size} requests={len(reqs)} "
+          f"max_new={args.max_new}")
+    for r in reqs:
+        try:
+            sched.submit(r)
+        except ValueError as e:     # counted in the rejected stat
+            print(f"[serve] rejected request {r.rid}: {e}")
+    results = sched.run()
+    sched.stats.report()
+    pd = sched.pool.as_dict()
+    print(f"[serve] pool: slots={pd['num_slots']} "
+          f"blocks_used_high_water={pd['high_water_blocks']}/"
+          f"{pd['num_blocks']} block_allocs={pd['block_allocs']} "
+          f"block_frees={pd['block_frees']}")
+    if registry is not None:
+        print(f"[serve] registry: serving_step={registry.step} "
+              f"hot_swaps={sched.stats.hot_swaps}")
+    sample = results[reqs[0].rid]
+    print("[serve] sample continuation (token ids):",
+          list(map(int, sample[:12])))
+    return {"stats": sched.stats.as_dict(), "pool": pd,
+            "registry_step": registry.step if registry else None,
+            "results": results}
+
+
+def run_surrogate(args) -> Dict[str, object]:
+    from repro.configs.icf_cyclegan import FULL, SMOKE
+    from repro.data import jag
+    from repro.models.icf_cyclegan import init_cyclegan
+    from repro.serve.surrogate import SurrogateEngine
+
+    ccfg = SMOKE if args.smoke else FULL
+    params, _ = init_cyclegan(ccfg, jax.random.PRNGKey(args.seed))
+    registry = make_registry(args, params)
+    if registry is not None:
+        params = registry.load()
+        print(f"[serve] winner: step={registry.step} "
+              f"trainer={registry.info.get('trainer')} "
+              f"wins={registry.info.get('wins')}")
+    eng = SurrogateEngine(ccfg, params, max_batch=args.slots * 16,
+                          bucket=8, registry=registry,
+                          watch_every=args.watch_every)
+    print(f"[serve] arch={ccfg.name} workload=surrogate "
+          f"queries={args.queries} query_batch={args.query_batch} "
+          f"max_batch={eng.max_batch}")
+    xs = jag.sample_inputs(args.queries * args.query_batch, args.seed)
+    for i in range(args.queries):
+        eng.submit(i, xs[i * args.query_batch:(i + 1) * args.query_batch])
+    results = eng.run()
+    eng.stats.report()
+    if registry is not None:
+        print(f"[serve] registry: serving_step={registry.step} "
+              f"hot_swaps={eng.stats.hot_swaps}")
+    return {"stats": eng.stats.as_dict(),
+            "registry_step": registry.step if registry else None,
+            "results": results}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Continuous-batching inference over tournament "
+                    "winners")
+    ap.add_argument("--arch", default="qwen3-0.6b", choices=sorted(ARCHS))
+    ap.add_argument("--workload", default=None,
+                    choices=("lm", "surrogate"),
+                    help="default: surrogate for icf-cyclegan, else lm")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="LTFB population checkpoint dir to serve the "
+                         "tournament winner from")
+    ap.add_argument("--watch-every", type=int, default=0,
+                    help="poll for newer winners every N steps (0 = off)")
+    # scheduler
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="cache pool length (0 = fit the trace)")
+    ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="page-pool size (default: slots*max_len worth)")
+    ap.add_argument("--policy", default="continuous",
+                    choices=("continuous", "static"))
+    ap.add_argument("--prefill-per-step", type=int, default=1)
+    # lm trace
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-lens", default="8,16,24",
+                    help="comma list; requests cycle through these")
+    ap.add_argument("--eos-id", type=int, default=None)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # surrogate trace
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--query-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    workload = args.workload or \
+        ("surrogate" if args.arch == "icf-cyclegan" else "lm")
+    if workload == "surrogate":
+        run_surrogate(args)
+    else:
+        if args.arch == "icf-cyclegan":
+            raise SystemExit("lm workload needs an LM arch")
+        run_lm(args)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -416,17 +416,28 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
     """Single-token decode with a KV cache of static length S_max.
 
     x: (B, 1, d); cache['k'/'v']: (B, S_max, Hkv, D); index: scalar int32
-    position at which to write the new KV.  Returns (out, new_cache).
+    write position (= current KV length), or an int32 (B,) vector of
+    per-row write positions (continuous batching: each cache row belongs
+    to a different request at a different length).  Returns
+    (out, new_cache).
     """
     B, S1, _ = x.shape
     assert S1 == 1
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"],
-                                            k_new.astype(cache["k"].dtype),
-                                            index, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"],
-                                            v_new.astype(cache["v"].dtype),
-                                            index, axis=1)
+    index = jnp.asarray(index, jnp.int32)
+    if index.ndim == 0:
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
+    else:
+        # per-row write: scatter one (Hkv, D) row per batch element —
+        # O(B*Hkv*D) traffic, independent of the pool's max_len
+        rows = jnp.arange(B, dtype=jnp.int32)
+        k = cache["k"].at[rows, index].set(
+            k_new[:, 0].astype(cache["k"].dtype))
+        v = cache["v"].at[rows, index].set(
+            v_new[:, 0].astype(cache["v"].dtype))
     k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
     v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
     S_max = k.shape[1]
@@ -435,7 +446,11 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
     qh = q.reshape(B, Hkv, g, D)
     scores = jnp.einsum("bhgd,bkhd->bhgk", qh, k,
                         preferred_element_type=jnp.float32) / math.sqrt(D)
-    valid = (jnp.arange(S_max, dtype=jnp.int32) <= index)[None, None, None]
+    pos = jnp.arange(S_max, dtype=jnp.int32)
+    if index.ndim == 0:
+        valid = (pos <= index)[None, None, None]
+    else:
+        valid = (pos[None, :] <= index[:, None])[:, None, None, :]
     scores = jnp.where(valid, scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)

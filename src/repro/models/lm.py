@@ -363,8 +363,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 
 
 def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-               remat: str = "none"):
-    """Process the full prompt; returns (last-token logits, cache)."""
+               remat: str = "none", last_pos: Optional[jax.Array] = None):
+    """Process the full prompt; returns (last-token logits, cache).
+
+    ``last_pos`` (int32 (B,), optional) selects the hidden state each
+    row's logits are read from instead of position ``S - 1`` — the
+    serving scheduler right-pads prompts to a shape bucket and reads
+    logits at each request's true last token.
+    """
     x = _embed_in(params, cfg, batch)
     B, S, _ = x.shape
     positions = _positions_of(batch, cfg, B, S)
@@ -390,7 +396,14 @@ def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
         caches["prefix"] = pc[0]
     x, bc = run_stack(x, tuple(params["body"]), pspecs)
     caches["body"] = bc
-    logits = _logits(params, cfg, x[:, -1:])
+    if last_pos is None:
+        sel = x[:, -1:]
+    else:
+        idx = jnp.broadcast_to(
+            jnp.asarray(last_pos, jnp.int32)[:, None, None],
+            (x.shape[0], 1, x.shape[2]))
+        sel = jnp.take_along_axis(x, idx, axis=1)
+    logits = _logits(params, cfg, sel)
     return logits, caches
 
 
@@ -398,16 +411,21 @@ def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
               cache: Params, index: jax.Array,
               positions: Optional[jax.Array] = None):
     """One decode step. tokens: (B, 1) int32; index: scalar int32 write
-    position (= current KV length). Returns (logits, new_cache)."""
+    position (= current KV length), or an int32 (B,) vector of per-row
+    write positions (continuous batching: each batch row is a different
+    request at a different length). Returns (logits, new_cache)."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, "batch", "seq", "act_embed")
     B = x.shape[0]
+    index = jnp.asarray(index, jnp.int32)
     if positions is None:
+        idx_col = index[:, None] if index.ndim else \
+            jnp.full((B, 1), index, jnp.int32)
         if cfg.use_mrope:
             # text decode: all three M-RoPE components advance together
-            positions = jnp.full((3, B, 1), index, jnp.int32)
+            positions = jnp.broadcast_to(idx_col[None], (3, B, 1))
         else:
-            positions = jnp.full((B, 1), index, jnp.int32)
+            positions = idx_col
     pspecs = _period_specs(cfg)
     specs = layer_specs(cfg)
 

@@ -1,9 +1,10 @@
 """Batched serving engine: prefill + KV-cache decode.
 
 ``decode_shapes``/``long_*`` dry-run cells lower exactly the
-``engine.decode_step`` function.  ``generate`` is the host-driven loop
-used by the serving example (greedy or temperature sampling over batched
-requests).
+``engine.decode_step`` function.  ``generate`` is a host-driven loop
+over ONE uniform-length batch (greedy or temperature sampling); for
+request-level scheduling — queueing, continuous batching, slot reuse,
+hot-swap — use :class:`repro.serve.scheduler.Scheduler`.
 """
 from __future__ import annotations
 
@@ -26,17 +27,18 @@ class Engine:
         self._decode = jax.jit(
             lambda p, t, c, i: lm.lm_decode(p, cfg, t, c, i),
             donate_argnums=(2,))
+        # full-length cache templates, allocated ONCE per batch size and
+        # reused across generate() calls (never donated); continuous
+        # batching across requests lives in repro.serve.scheduler
+        self._cache_templates: dict = {}
+        self._fit = jax.jit(
+            lambda full, cache: jax.tree.map(_fit_leaf, full, cache))
 
     def _pad_cache(self, cache, batch: int):
-        full, _ = lm.init_cache(self.cfg, batch, self.max_len)
-
-        def fit(dst, src):
-            if dst.shape == src.shape:
-                return src
-            pad = [(0, d - s) for d, s in zip(dst.shape, src.shape)]
-            return jnp.pad(src, pad)
-
-        return jax.tree.map(fit, full, cache)
+        if batch not in self._cache_templates:
+            self._cache_templates[batch] = \
+                lm.init_cache(self.cfg, batch, self.max_len)[0]
+        return self._fit(self._cache_templates[batch], cache)
 
     def generate(self, tokens: jax.Array, steps: int,
                  temperature: float = 0.0,
@@ -58,8 +60,20 @@ class Engine:
         return jnp.concatenate(out, axis=1)
 
     def _sample(self, logits, temperature, key, i):
-        if temperature <= 0.0 or key is None:
+        if temperature > 0.0 and key is None:
+            raise ValueError(
+                "temperature > 0 requires a PRNG key (refusing to "
+                "silently fall back to greedy)")
+        if temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(
             k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+def _fit_leaf(dst, src):
+    """Write `src` into the start of `dst` (zero template row)."""
+    if dst.shape == src.shape:
+        return src
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
+                                        (0,) * dst.ndim)

@@ -1,0 +1,206 @@
+"""Block/paged KV-cache management for the serving subsystem.
+
+Two cooperating pieces:
+
+``BlockManager``
+    Logical page accounting in units of ``block_size`` tokens over a
+    fixed page pool — admission by token budget, per-request block
+    tables, free-list reuse, and high-water-mark stats.  This is the
+    vLLM-style bookkeeping layer: a request is admitted only when its
+    full reservation (prompt + max new tokens) fits in free pages, so
+    the scheduler never has to preempt mid-stream.
+
+``CachePool``
+    The physical cache: ONE preallocated ``lm.init_cache`` pytree of
+    ``num_slots`` rows x ``max_len`` tokens, shared by every request for
+    the lifetime of the server (this replaces the old
+    ``Engine._pad_cache`` path that re-allocated a full-length cache per
+    ``generate`` call).  A finished request's slot row is simply handed
+    to the next request; ``insert`` overwrites the whole row with the
+    newcomer's prefilled cache (zero-padded to ``max_len``), so no stale
+    state survives slot reuse.
+
+Emulation note: pages are stored contiguously inside a request's slot
+row rather than scattered across the pool (the dense
+``attention_decode`` path indexes caches by position, not by page
+table).  The BlockManager still governs admission and accounting, which
+is the part the scheduler and the fig14 benchmark measure.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+def blocks_for(n_tokens: int, block_size: int) -> int:
+    """Pages needed to hold `n_tokens` cache entries."""
+    return max(1, -(-int(n_tokens) // int(block_size)))
+
+
+@dataclass
+class BlockManager:
+    """Token-budget page accounting over a fixed pool of cache blocks."""
+
+    num_blocks: int
+    block_size: int
+    _free: List[int] = field(default_factory=list)
+    _tables: Dict[Any, List[int]] = field(default_factory=dict)
+    high_water: int = 0
+    allocs: int = 0
+    frees: int = 0
+
+    def __post_init__(self):
+        self._free = list(range(self.num_blocks))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_blocks(self) -> int:
+        return self.num_blocks - len(self._free)
+
+    def table(self, rid) -> List[int]:
+        return list(self._tables[rid])
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return blocks_for(n_tokens, self.block_size) <= len(self._free)
+
+    def allocate(self, rid, n_tokens: int) -> List[int]:
+        """Reserve pages for `n_tokens`; raises if rid is live or the
+        pool cannot cover the reservation."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid!r} already holds blocks")
+        need = blocks_for(n_tokens, self.block_size)
+        if need > len(self._free):
+            raise RuntimeError(
+                f"out of cache blocks: need {need}, free {len(self._free)}")
+        got = [self._free.pop() for _ in range(need)]
+        self._tables[rid] = got
+        self.allocs += need
+        self.high_water = max(self.high_water, self.used_blocks)
+        return list(got)
+
+    def extend(self, rid, n_tokens: int) -> List[int]:
+        """Grow a live reservation to cover `n_tokens` total."""
+        have = self._tables[rid]
+        need = blocks_for(n_tokens, self.block_size) - len(have)
+        if need <= 0:
+            return []
+        if need > len(self._free):
+            raise RuntimeError(
+                f"out of cache blocks: need {need}, free {len(self._free)}")
+        got = [self._free.pop() for _ in range(need)]
+        have.extend(got)
+        self.allocs += need
+        self.high_water = max(self.high_water, self.used_blocks)
+        return got
+
+    def free(self, rid) -> int:
+        """Release a request's pages back to the pool."""
+        blocks = self._tables.pop(rid)
+        self._free.extend(blocks)
+        self.frees += len(blocks)
+        return len(blocks)
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"num_blocks": self.num_blocks,
+                "block_size": self.block_size,
+                "used_blocks": self.used_blocks,
+                "high_water_blocks": self.high_water,
+                "block_allocs": self.allocs, "block_frees": self.frees}
+
+
+def _insert_row(dst: jax.Array, src: jax.Array, slot) -> jax.Array:
+    """Write `src` (leading (layers, 1, ...)) into pool row `slot`.
+
+    Every cache leaf is (layers, batch, *state); attention leaves carry
+    a kv_seq axis shorter than the pool's max_len at prefill time — pad
+    with zeros so the whole row is overwritten (slot reuse must not
+    leak the previous occupant's cache).
+    """
+    if src.shape[2:] != dst.shape[2:]:
+        pad = [(0, 0), (0, 0)] + [(0, d - s)
+                                  for d, s in zip(dst.shape[2:], src.shape[2:])]
+        src = jnp.pad(src, pad)
+    start = (0, jnp.asarray(slot, jnp.int32)) + (0,) * (dst.ndim - 2)
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+
+# the pool is donated: the caller always rebinds CachePool.cache to the
+# result, so the update happens in place instead of copying the whole
+# preallocated pool on every request admission
+@partial(jax.jit, donate_argnums=(0,))
+def _insert_tree(pool, src, slot):
+    return jax.tree.map(lambda d, s: _insert_row(d, s, slot), pool, src)
+
+
+class CachePool:
+    """One preallocated decode cache shared by all requests.
+
+    ``cache`` holds `num_slots` rows of `max_len` tokens (allocated once
+    at construction via :func:`repro.models.lm.init_cache`); slot and
+    page lifetime are managed here so the scheduler only deals in
+    request ids.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
+                 block_size: int = 16, num_blocks: Optional[int] = None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.blocks = BlockManager(
+            num_blocks if num_blocks is not None
+            else num_slots * blocks_for(max_len, block_size),
+            block_size)
+        self.cache, _ = lm.init_cache(cfg, num_slots, max_len)
+        self._free_slots = list(range(num_slots))
+        self._slot_of: Dict[Any, int] = {}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Room for a request reserving `n_tokens` (prompt + max new)?"""
+        return bool(self._free_slots) and n_tokens <= self.max_len \
+            and self.blocks.can_allocate(n_tokens)
+
+    def admit(self, rid, n_tokens: int) -> int:
+        """Claim a slot + pages for `rid`; returns the slot index."""
+        if not self._free_slots:
+            raise RuntimeError("no free cache slots")
+        if n_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {n_tokens} tokens > pool max_len "
+                f"{self.max_len}")
+        self.blocks.allocate(rid, n_tokens)
+        slot = self._free_slots.pop()
+        self._slot_of[rid] = slot
+        return slot
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+    def insert(self, rid, prefill_cache) -> None:
+        """Overwrite `rid`'s slot row with a (batch=1) prefilled cache."""
+        self.cache = _insert_tree(self.cache, prefill_cache,
+                                  jnp.int32(self._slot_of[rid]))
+
+    def release(self, rid) -> int:
+        """Free `rid`'s slot + pages; returns the freed slot index."""
+        slot = self._slot_of.pop(rid)
+        self._free_slots.append(slot)
+        self.blocks.free(rid)
+        return slot
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"num_slots": self.num_slots, "max_len": self.max_len,
+                "free_slots": self.free_slots, **self.blocks.as_dict()}

@@ -1,0 +1,117 @@
+"""Serving metrics: throughput / latency / queue accounting.
+
+Mirrors the exchange-byte accounting style of ``core/tournament.py``:
+counters accumulate while the scheduler runs, ``as_dict`` produces the
+unified summary, and ``report`` prints the ``[serve]`` lines the CLI
+and the fig14 benchmark consume.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency on the hot path)."""
+    if not xs:
+        return float("nan")
+    ys = sorted(xs)
+    k = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+    return ys[k]
+
+
+@dataclass
+class ServeStats:
+    slots: int = 0
+    submitted: int = 0
+    completed: int = 0
+    rejected: int = 0
+    prefills: int = 0
+    prefill_tokens: int = 0        # true prompt tokens processed
+    padded_prefill_tokens: int = 0  # incl. bucket padding (waste measure)
+    decode_steps: int = 0
+    decode_tokens: int = 0         # useful generated tokens
+    decode_slot_steps: int = 0     # slots * steps actually computed
+    hot_swaps: int = 0
+    steps: int = 0
+    queue_depth_sum: int = 0
+    queue_depth_max: int = 0
+    slot_busy_sum: int = 0
+    ttft: List[float] = field(default_factory=list)
+    latency: List[float] = field(default_factory=list)
+    started: Optional[float] = None
+    finished: Optional[float] = None
+
+    # -- lifecycle ---------------------------------------------------------
+    def start(self):
+        if self.started is None:
+            self.started = time.perf_counter()
+
+    def stop(self):
+        self.finished = time.perf_counter()
+
+    @property
+    def wall(self) -> float:
+        if self.started is None:
+            return 0.0
+        end = self.finished if self.finished is not None \
+            else time.perf_counter()
+        return max(end - self.started, 1e-9)
+
+    # -- per-step sampling -------------------------------------------------
+    def sample_step(self, queue_depth: int, busy_slots: int):
+        self.steps += 1
+        self.queue_depth_sum += queue_depth
+        self.queue_depth_max = max(self.queue_depth_max, queue_depth)
+        self.slot_busy_sum += busy_slots
+
+    # -- summary -----------------------------------------------------------
+    def as_dict(self) -> Dict[str, float]:
+        wall = self.wall
+        occ = self.slot_busy_sum / max(self.steps * max(self.slots, 1), 1)
+        return {
+            "slots": self.slots,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "prefills": self.prefills,
+            "prefill_tokens": self.prefill_tokens,
+            "padded_prefill_tokens": self.padded_prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "decode_tokens": self.decode_tokens,
+            "decode_slot_steps": self.decode_slot_steps,
+            "hot_swaps": self.hot_swaps,
+            "wall_s": wall,
+            "requests_per_s": self.completed / wall,
+            "tokens_per_s": self.decode_tokens / wall,
+            "ttft_mean_s": (sum(self.ttft) / len(self.ttft))
+            if self.ttft else float("nan"),
+            "ttft_p95_s": percentile(self.ttft, 95),
+            "latency_mean_s": (sum(self.latency) / len(self.latency))
+            if self.latency else float("nan"),
+            "latency_p95_s": percentile(self.latency, 95),
+            "queue_depth_mean": self.queue_depth_sum / max(self.steps, 1),
+            "queue_depth_max": self.queue_depth_max,
+            "slot_occupancy": occ,
+        }
+
+    def report(self, log: Callable[[str], None] = print,
+               prefix: str = "[serve]"):
+        d = self.as_dict()
+        log(f"{prefix} requests: submitted={d['submitted']} "
+            f"completed={d['completed']} rejected={d['rejected']} "
+            f"hot_swaps={d['hot_swaps']}")
+        log(f"{prefix} throughput: {d['requests_per_s']:.2f} req/s "
+            f"{d['tokens_per_s']:.1f} tok/s "
+            f"(decode_steps={d['decode_steps']} "
+            f"useful/slot-step="
+            f"{d['decode_tokens'] / max(d['decode_slot_steps'], 1):.2f})")
+        log(f"{prefix} latency: ttft_mean={d['ttft_mean_s'] * 1e3:.1f}ms "
+            f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms "
+            f"e2e_mean={d['latency_mean_s'] * 1e3:.1f}ms "
+            f"e2e_p95={d['latency_p95_s'] * 1e3:.1f}ms")
+        log(f"{prefix} occupancy: slots={d['slots']} "
+            f"busy={d['slot_occupancy'] * 100:.0f}% "
+            f"queue_mean={d['queue_depth_mean']:.1f} "
+            f"queue_max={d['queue_depth_max']}")

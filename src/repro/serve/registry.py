@@ -1,0 +1,159 @@
+"""Population-aware model loading: serve the tournament winner.
+
+Bridges training and serving: ``launch/ltfb.py`` checkpoints its whole
+population through :mod:`repro.checkpoint.ckpt`
+(``step_<n>_trainer_<i>.ckpt`` + ``step_<n>.manifest``); this module
+
+  * **exports a winner** from a population step — by tournament metric
+    on a validation batch when one is supplied, else by the win counts
+    the tournament recorded in each trainer's checkpoint metadata — to
+    a self-contained ``winner_step_<n>.ckpt``;
+  * **hot-swaps** newer winners into a running server: a
+    :class:`ModelRegistry` polled between scheduler steps reloads when
+    a newer winner file (or, with ``auto_export``, a newer population
+    step) appears, so serving follows training live.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+Params = Any
+
+_WINNER_RE = re.compile(r"^winner_step_(\d+)\.ckpt$")
+
+
+def winner_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"winner_step_{step}.ckpt")
+
+
+def latest_winner_step(ckpt_dir: str) -> Optional[int]:
+    """Newest exported-winner step in a checkpoint dir (None if none)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _WINNER_RE.match(f))]
+    return max(steps) if steps else None
+
+
+def load_population_params(ckpt_dir: str, step: int, like_params: Params
+                           ) -> Tuple[List[Params], List[dict]]:
+    """All trainer params (+ checkpoint metadata) of one population step.
+
+    Only the ``params`` subtree is materialized — trainer checkpoints
+    also hold optimizer state, which serving never needs.
+    """
+    import json
+
+    with open(os.path.join(ckpt_dir, f"step_{step}.manifest")) as f:
+        manifest = json.load(f)
+    params, metas = [], []
+    for i in range(manifest["num_trainers"]):
+        tree, meta = ckpt.restore(
+            os.path.join(ckpt_dir, f"step_{step}_trainer_{i}.ckpt"),
+            {"params": like_params})
+        params.append(tree["params"])
+        metas.append(meta)
+    return params, metas
+
+
+def select_winner(params: List[Params], metas: List[dict],
+                  metric_fn: Optional[Callable] = None,
+                  val_batch: Optional[dict] = None
+                  ) -> Tuple[int, Dict[str, float]]:
+    """Winning trainer index: tournament metric (lower = better) on
+    `val_batch` when given, else the trainer with the most recorded
+    tournament wins."""
+    if metric_fn is not None and val_batch is not None:
+        scores = [float(metric_fn(p, val_batch)) for p in params]
+        idx = int(np.argmin(scores))
+        return idx, {"selected_by": "metric", "metric": scores[idx]}
+    wins = [int(m.get("wins", 0)) for m in metas]
+    idx = int(np.argmax(wins))
+    return idx, {"selected_by": "wins"}
+
+
+def export_winner(ckpt_dir: str, like_params: Params,
+                  step: Optional[int] = None,
+                  metric_fn: Optional[Callable] = None,
+                  val_batch: Optional[dict] = None) -> Tuple[str, dict]:
+    """Export the winning trainer of a population step to
+    ``winner_step_<n>.ckpt``; returns (path, info)."""
+    if step is None:
+        step = ckpt.latest_population_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(
+                f"no population checkpoint in {ckpt_dir!r}")
+    params, metas = load_population_params(ckpt_dir, step, like_params)
+    idx, how = select_winner(params, metas, metric_fn, val_batch)
+    info = {"step": step, "trainer": idx,
+            "steps": int(metas[idx].get("steps", 0)),
+            "wins": int(metas[idx].get("wins", 0)), **how}
+    path = winner_path(ckpt_dir, step)
+    ckpt.save(path, {"params": params[idx]}, metadata=info)
+    return path, info
+
+
+class ModelRegistry:
+    """Winner loading + between-steps hot-swap for a serving process.
+
+    ``refresh()`` is the scheduler-facing poll: it returns True when a
+    newer winner was loaded into ``self.params``.  With ``auto_export``
+    the registry also exports winners for population steps the trainer
+    has checkpointed since the last poll, so a server pointed at a live
+    ``launch/ltfb.py`` checkpoint dir tracks the tournament frontier
+    without any extra plumbing.
+    """
+
+    def __init__(self, ckpt_dir: str, like_params: Params,
+                 metric_fn: Optional[Callable] = None,
+                 val_batch: Optional[dict] = None,
+                 auto_export: bool = False):
+        self.ckpt_dir = ckpt_dir
+        self.like_params = like_params
+        self.metric_fn = metric_fn
+        self.val_batch = val_batch
+        self.auto_export = auto_export
+        self.params: Optional[Params] = None
+        self.step: int = -1
+        self.info: dict = {}
+        self.swaps: int = 0
+
+    def _maybe_export(self) -> None:
+        pop_step = ckpt.latest_population_step(self.ckpt_dir)
+        if pop_step is None:
+            return
+        win_step = latest_winner_step(self.ckpt_dir)
+        if win_step is None or pop_step > win_step:
+            export_winner(self.ckpt_dir, self.like_params, step=pop_step,
+                          metric_fn=self.metric_fn, val_batch=self.val_batch)
+
+    def refresh(self) -> bool:
+        """Load the newest winner if it is newer than what is serving."""
+        if self.auto_export:
+            self._maybe_export()
+        step = latest_winner_step(self.ckpt_dir)
+        if step is None or step <= self.step:
+            return False
+        tree, meta = ckpt.restore(winner_path(self.ckpt_dir, step),
+                                  {"params": self.like_params})
+        had = self.params is not None
+        self.params = tree["params"]
+        self.step = step
+        self.info = meta
+        if had:
+            self.swaps += 1
+        return True
+
+    def load(self) -> Params:
+        """Initial load (export first if allowed); raises if nothing to
+        serve."""
+        if not self.refresh() and self.params is None:
+            raise FileNotFoundError(
+                f"no winner or population checkpoint in {self.ckpt_dir!r}")
+        return self.params

@@ -1,0 +1,287 @@
+"""Continuous-batching LM serving scheduler.
+
+The serving analogue of ``core/tournament.py``'s training orchestrator:
+a request queue in front of a slot-based decode batch backed by ONE
+preallocated :class:`repro.serve.kv_cache.CachePool`.
+
+Per scheduler step:
+
+  1. *hot-swap check* — if a :class:`repro.serve.registry.ModelRegistry`
+     is attached, poll it every ``watch_every`` steps and swap in a
+     newer tournament winner between steps (in-flight KV caches remain
+     valid: cache layout depends only on the config, not the weights).
+  2. *admission* — pop queued requests while a cache slot AND a full
+     token-budget page reservation (prompt + max new tokens) are
+     available; prefill each admitted request (prompt right-padded to a
+     shape bucket so jit recompiles are bounded), write its cache into
+     the claimed slot row, and sample its first token.
+  3. *decode* — one batched decode step over the whole pool with
+     per-slot write indices (``lm_decode`` vector-index path); sample
+     one token per active slot.
+  4. *completion* — requests hitting EOS or their token budget free
+     their slot + pages immediately; the batch never stalls on its
+     slowest member.
+
+``policy="static"`` degrades step 2 to classic static batching (admit
+only when the pool is empty, i.e. the whole batch runs to completion
+before the queue moves) — the baseline the fig14 benchmark compares
+against, sharing every compiled kernel with the continuous path.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+from repro.serve.kv_cache import CachePool, blocks_for
+from repro.serve.metrics import ServeStats
+
+
+@dataclass
+class Request:
+    rid: Any
+    prompt: np.ndarray              # (P,) int32 token ids
+    max_new: int
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    seed: Optional[int] = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(len(self.prompt))
+
+
+@dataclass
+class _Active:
+    req: Request
+    slot: int
+    ntok: int = 0                   # tokens generated so far
+    tokens: List[int] = field(default_factory=list)
+    submit_t: float = 0.0
+    first_token_t: Optional[float] = None
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+# module-level jits (config is a hashable frozen dataclass): compiled
+# executables are shared across Scheduler instances, so spinning up a
+# server — or the fig14 policy comparison — never re-pays compilation
+@partial(jax.jit, static_argnums=(1,))
+def _prefill_fn(params, cfg, toks, last_pos):
+    return lm.lm_prefill(params, cfg, {"tokens": toks}, last_pos=last_pos)
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
+def _decode_fn(params, cfg, tokens, cache, index):
+    return lm.lm_decode(params, cfg, tokens, cache, index)
+
+
+class Scheduler:
+    """Continuous-batching scheduler over a slot-based KV-cache pool."""
+
+    def __init__(self, cfg: ModelConfig, params, num_slots: int = 8,
+                 max_len: int = 1024, block_size: int = 16,
+                 num_blocks: Optional[int] = None,
+                 policy: str = "continuous",
+                 max_prefills_per_step: int = 1,
+                 min_prefill_bucket: int = 8,
+                 registry=None, watch_every: int = 0):
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {policy!r}")
+        if cfg.family == "vlm":
+            raise ValueError(
+                "serving scheduler supports token-input families only "
+                "(vlm prompts need precomputed embeddings)")
+        self.cfg = cfg
+        self.params = params
+        self.policy = policy
+        self.max_prefills_per_step = max_prefills_per_step
+        self.min_prefill_bucket = min_prefill_bucket
+        self.registry = registry
+        self.watch_every = watch_every
+        self.pool = CachePool(cfg, num_slots, max_len,
+                              block_size=block_size, num_blocks=num_blocks)
+        # right-padding prompts is only sound for pure-attention stacks:
+        # recurrent layers (mamba/xLSTM) would fold padding into their
+        # state, so those families prefill at exact prompt length
+        # (one compile per distinct length instead of per bucket).
+        self._can_pad = all(s.kind == "a" for s in lm.layer_specs(cfg))
+        self.queue: deque[Request] = deque()
+        self.active: Dict[Any, _Active] = {}
+        self._by_slot: Dict[int, _Active] = {}
+        self._next_token = np.zeros((num_slots,), np.int32)
+        self._index = np.zeros((num_slots,), np.int32)
+        self.results: Dict[Any, np.ndarray] = {}
+        self.stats = ServeStats(slots=num_slots)
+        self._step_count = 0
+
+    # -- request intake ----------------------------------------------------
+    def _reject(self, msg: str):
+        self.stats.rejected += 1
+        raise ValueError(msg)
+
+    def submit(self, req: Request) -> None:
+        total = req.prompt_len + req.max_new
+        if req.rid in self.active or req.rid in self.results or \
+                any(q.rid == req.rid for q in self.queue):
+            self._reject(f"duplicate request id {req.rid!r}")
+        if req.prompt_len < 1 or req.max_new < 1:
+            self._reject("need a non-empty prompt and max_new >= 1")
+        if total > self.pool.max_len:
+            self._reject(
+                f"request {req.rid!r} needs {total} tokens > pool max_len "
+                f"{self.pool.max_len}")
+        if blocks_for(total, self.pool.blocks.block_size) \
+                > self.pool.blocks.num_blocks:
+            self._reject(
+                f"request {req.rid!r} exceeds the pool's total token "
+                "budget")
+        if req.temperature > 0.0 and req.seed is None:
+            self._reject(
+                f"request {req.rid!r}: temperature > 0 requires a seed "
+                "(refusing to silently fall back to greedy)")
+        self.stats.submitted += 1
+        req._submit_t = time.perf_counter()   # TTFT includes queueing delay
+        self.queue.append(req)
+
+    # -- scheduling ---------------------------------------------------------
+    def _bucket(self, n: int) -> int:
+        if not self._can_pad:
+            return n
+        return min(max(self.min_prefill_bucket, _next_pow2(n)),
+                   self.pool.max_len)
+
+    def _admit(self, req: Request) -> None:
+        P = req.prompt_len
+        self.pool.admit(req.rid, P + req.max_new)
+        slot = self.pool.slot_of(req.rid)
+        bucket = self._bucket(P)
+        toks = np.zeros((1, bucket), np.int32)
+        toks[0, :P] = req.prompt
+        logits, cache = _prefill_fn(
+            self.params, self.cfg, jnp.asarray(toks),
+            jnp.asarray([P - 1], jnp.int32))
+        self.pool.insert(req.rid, cache)
+        act = _Active(req=req, slot=slot, submit_t=getattr(
+            req, "_submit_t", time.perf_counter()))
+        self.active[req.rid] = act
+        self._by_slot[slot] = act
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += P
+        self.stats.padded_prefill_tokens += bucket
+        tok = self._sample(np.asarray(logits[0, -1].astype(jnp.float32)),
+                           req, 0)
+        act.first_token_t = time.perf_counter()
+        self.stats.ttft.append(act.first_token_t - act.submit_t)
+        self._accept_token(act, tok)
+
+    def _sample(self, logits_row, req: Request, ntok: int) -> int:
+        """logits_row: (V,) host array.  Sampling stays on host (Gumbel
+        trick for temperature > 0) so the only device dispatch per step
+        is the batched decode itself."""
+        if req.temperature <= 0.0:
+            return int(np.argmax(logits_row))
+        rng = np.random.default_rng([req.seed, ntok])
+        g = rng.gumbel(size=logits_row.shape[-1])
+        return int(np.argmax(
+            np.asarray(logits_row, np.float64) / req.temperature + g))
+
+    def _accept_token(self, act: _Active, tok: int) -> None:
+        act.tokens.append(tok)
+        act.ntok += 1
+        self.stats.decode_tokens += 1
+        # write position of `tok`'s KV on the NEXT decode step
+        self._index[act.slot] = act.req.prompt_len + act.ntok - 1
+        self._next_token[act.slot] = tok
+        done = act.ntok >= act.req.max_new or \
+            (act.req.eos_id is not None and tok == act.req.eos_id)
+        if done:
+            self._finish(act)
+
+    def _finish(self, act: _Active) -> None:
+        rid = act.req.rid
+        self.results[rid] = np.asarray(act.tokens, np.int32)
+        self.stats.completed += 1
+        self.stats.latency.append(time.perf_counter() - act.submit_t)
+        slot = self.pool.release(rid)
+        del self.active[rid]
+        del self._by_slot[slot]
+        self._next_token[slot] = 0
+        self._index[slot] = 0
+
+    def set_params(self, params) -> None:
+        """Hot-swap model weights between steps (cache layout unchanged)."""
+        self.params = params
+        self.stats.hot_swaps += 1
+
+    def _maybe_hot_swap(self) -> None:
+        if self.registry is None or self.watch_every <= 0:
+            return
+        if self._step_count % self.watch_every:
+            return
+        if self.registry.refresh():
+            self.set_params(self.registry.params)
+
+    def step(self) -> None:
+        """One scheduler iteration: hot-swap check, admission (prefill),
+        one batched decode step, completion."""
+        self.stats.start()
+        self._maybe_hot_swap()
+        self._step_count += 1
+        # -- admission
+        if self.policy == "static":
+            if not self.active:
+                while self.queue and self.pool.can_admit(
+                        self.queue[0].prompt_len + self.queue[0].max_new):
+                    self._admit(self.queue.popleft())
+        else:
+            admitted = 0
+            while (admitted < self.max_prefills_per_step and self.queue
+                   and self.pool.can_admit(
+                       self.queue[0].prompt_len + self.queue[0].max_new)):
+                self._admit(self.queue.popleft())
+                admitted += 1
+        # -- one decode step over the pool (per-slot write indices)
+        if self.active:
+            tokens = jnp.asarray(self._next_token[:, None])
+            index = jnp.asarray(self._index)
+            logits, self.pool.cache = _decode_fn(
+                self.params, self.cfg, tokens, self.pool.cache, index)
+            rows = np.asarray(logits.astype(jnp.float32))
+            self.stats.decode_steps += 1
+            self.stats.decode_slot_steps += self.pool.num_slots
+            # sample per active slot; finishing frees the slot in-place
+            for act in list(self.active.values()):
+                tok = self._sample(rows[act.slot, 0], act.req, act.ntok)
+                self._accept_token(act, tok)
+        self.stats.sample_step(len(self.queue), len(self.active))
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[Any, np.ndarray]:
+        """Drive until the queue and the batch drain; returns results
+        (rid -> generated token ids)."""
+        steps = 0
+        while self.queue or self.active:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self.stats.stop()
+        return self.results
+
+    def full_sequence(self, req: Request) -> np.ndarray:
+        """Prompt + generated tokens for a completed request."""
+        return np.concatenate([np.asarray(req.prompt, np.int32),
+                               self.results[req.rid]])
