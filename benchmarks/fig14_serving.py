@@ -1,22 +1,34 @@
-"""Fig. 14 (beyond-paper) — continuous vs. static batching at serve time.
+"""Fig. 14 (beyond-paper) — serving schedule + KV-layout benchmark.
 
 The ROADMAP north star is a production system answering surrogate /
-LM queries at scale; this benchmark measures the scheduling policy that
-gets there.  One mixed-length request trace is served twice through the
-SAME compiled prefill/decode kernels and the SAME preallocated KV-cache
-pool (:mod:`repro.serve.scheduler`):
+LM queries at scale; this benchmark measures the decode hot path that
+gets there.  One mixed-length request trace — short chats and long
+documents behind a common system-prompt prefix, plus one request whose
+total length exceeds the dense layout's per-slot ceiling — is served
+through three configurations at EQUAL KV-cache memory:
 
-  * ``static``      — classic batch inference: fill the pool, pad to the
-    batch's worst case, run until EVERY request in the batch finishes,
-    only then admit the next batch.
-  * ``continuous``  — token-budget admission interleaved with decode:
-    a finished request's slot is re-filled on the next step.
+  * ``static``   — dense slot rows, classic batch inference: fill the
+    pool, run until every request in the batch finishes.
+  * ``dense``    — the PR-2 continuous-batching baseline: token-budget
+    admission + per-request completion over dense ``num_slots x
+    max_len`` rows.  Admission is gated by the per-slot ``max_len``
+    ceiling: the long request is REJECTED and a short request wastes a
+    full row.
+  * ``paged``    — the paged KV pool (scattered pages + gather-decode
+    kernel) with chunked prefill and copy-on-admit prefix sharing.
+    The same memory holds 2x the decode slots because pages are shared;
+    the long request is admitted; the shared system prompt prefills
+    once and is then mapped, not recomputed.
 
-Reported per policy: wall-clock tokens/s, time-to-first-token
-(mean/p95), decode steps, and useful-tokens-per-slot-step (the decode
-utilization static batching wastes on its stragglers).
+Reported per config: wall-clock tokens/s, time-to-first-token
+(mean/p95), decode steps, page high-water, prefix-cache hits.  With
+``--json PATH`` the summary is written as ``BENCH_serving.json`` so CI
+tracks the perf trajectory across PRs.
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import numpy as np
@@ -28,72 +40,168 @@ from repro.models.lm import init_lm
 from repro.serve.scheduler import Request, Scheduler
 
 # mixed-length trace: short chats + long documents, interleaved so a
-# static batch always contains at least one straggler
-PROMPT_LENS = (8, 24, 8, 48, 16, 8)
-MAX_NEW = (12, 48, 12, 24, 48, 12)
+# static batch always contains at least one straggler; every prompt
+# starts with the same SYS_LEN-token system prefix (the prefix-sharing
+# capacity win the paged layout banks)
+SYS_LEN = 32
+TAIL_LENS = (4, 16, 4, 40, 8, 4)
+MAX_NEW = (12, 24, 12, 24, 24, 12)
+# the dense per-slot ceiling: largest regular request, prompt + max_new
+DENSE_MAX_LEN = max(SYS_LEN + t + m for t, m in zip(TAIL_LENS, MAX_NEW))
+DENSE_SLOTS = 4
+BLOCK_SIZE = 16
+# equal memory: the paged pool gets exactly the dense pool's tokens
+POOL_TOKENS = DENSE_SLOTS * DENSE_MAX_LEN
+NUM_BLOCKS = POOL_TOKENS // BLOCK_SIZE
+PAGED_SLOTS = 8
+# the beyond-ceiling request: admissible only under the paged layout
+LONG_PROMPT, LONG_NEW = 96, 24
 
 
-def build_trace(cfg, n_requests: int, seed: int = 0):
-    stream = token_stream(n_requests * max(PROMPT_LENS), cfg.vocab_size,
-                          seed=seed)
-    reqs, off = [], 0
+def build_trace(cfg, n_requests: int, seed: int = 0, with_long: bool = True):
+    stream = token_stream(
+        SYS_LEN + n_requests * max(TAIL_LENS) + LONG_PROMPT,
+        cfg.vocab_size, seed=seed)
+    sys_prefix = np.asarray(stream[:SYS_LEN], np.int32)
+    reqs, off = [], SYS_LEN
     for i in range(n_requests):
-        p = PROMPT_LENS[i % len(PROMPT_LENS)]
-        reqs.append(Request(rid=i,
-                            prompt=np.asarray(stream[off:off + p], np.int32),
+        t = TAIL_LENS[i % len(TAIL_LENS)]
+        prompt = np.concatenate(
+            [sys_prefix, np.asarray(stream[off:off + t], np.int32)])
+        reqs.append(Request(rid=i, prompt=prompt,
                             max_new=MAX_NEW[i % len(MAX_NEW)]))
-        off += p
+        off += t
+    if with_long:
+        # the long document arrives FIRST — chunked prefill must keep
+        # admitting/decoding the chat storm behind it instead of
+        # stalling the pool for six prefill blocks
+        reqs.insert(0, Request(
+            rid="long",
+            prompt=np.asarray(stream[-LONG_PROMPT:], np.int32),
+            max_new=LONG_NEW))
     return reqs
 
 
-def serve_once(cfg, params, reqs, policy: str, slots: int, max_len: int):
-    sched = Scheduler(cfg, params, num_slots=slots, max_len=max_len,
-                      policy=policy)
+def make_scheduler(cfg, params, mode: str) -> Scheduler:
+    if mode in ("static", "dense"):
+        return Scheduler(
+            cfg, params, num_slots=DENSE_SLOTS, max_len=DENSE_MAX_LEN,
+            block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS, layout="dense",
+            policy="static" if mode == "static" else "continuous")
+    return Scheduler(
+        cfg, params, num_slots=PAGED_SLOTS, max_len=DENSE_MAX_LEN,
+        block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS, layout="paged",
+        max_seq=LONG_PROMPT + LONG_NEW, prefill_chunk=2 * BLOCK_SIZE,
+        max_prefills_per_step=3, policy="continuous")
+
+
+def serve_once(cfg, params, reqs, mode: str) -> Scheduler:
+    sched = make_scheduler(cfg, params, mode)
     for r in reqs:
-        sched.submit(Request(rid=r.rid, prompt=r.prompt,
-                             max_new=r.max_new))
+        try:
+            sched.submit(Request(rid=r.rid, prompt=r.prompt,
+                                 max_new=r.max_new))
+        except ValueError:
+            pass                    # counted in the rejected stat
     sched.run()
     return sched
 
 
-def run(report: CsvReport, quick: bool = False):
+def run(report: CsvReport, quick: bool = False, json_path: str = None):
     cfg = get_config("qwen3-0.6b", smoke=True)
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
-    n = 12 if quick else 24
-    slots = 4
-    max_len = max(p + m for p, m in zip(PROMPT_LENS, MAX_NEW))
+    n = 36 if quick else 60
     reqs = build_trace(cfg, n)
 
-    # warm the jit caches so the comparison is pure scheduling policy
-    serve_once(cfg, params, build_trace(cfg, min(n, len(PROMPT_LENS))),
-               "continuous", slots, max_len)
+    # warm every jit cache with the FULL trace (a truncated warm trace
+    # misses chunk/table-width shape buckets and the measured run pays
+    # the compile), then run the configs round-robin and report each
+    # one's median of 5, so slow-machine drift hits all configs alike
+    modes = ("static", "dense", "paged")
+    for mode in modes:
+        serve_once(cfg, params, reqs, mode)
+    runs = {m: [] for m in modes}
+    for _ in range(5):
+        for mode in modes:
+            runs[mode].append(serve_once(cfg, params, reqs, mode))
 
     out = {}
-    for policy in ("static", "continuous"):
-        sched = serve_once(cfg, params, reqs, policy, slots, max_len)
+    for mode in modes:
+        sched = sorted(runs[mode],
+                       key=lambda s: s.stats.as_dict()["tokens_per_s"])[2]
         d = sched.stats.as_dict()
-        out[policy] = d
+        d.update({f"pool_{k}": v for k, v in sched.pool.as_dict().items()})
+        out[mode] = d
         util = d["decode_tokens"] / max(d["decode_slot_steps"], 1)
-        print(f"# fig14 {policy}: {d['tokens_per_s']:.1f} tok/s "
+        print(f"# fig14 {mode}: {d['tokens_per_s']:.1f} tok/s "
               f"ttft_mean={d['ttft_mean_s'] * 1e3:.0f}ms "
               f"ttft_p95={d['ttft_p95_s'] * 1e3:.0f}ms "
-              f"decode_steps={d['decode_steps']} util={util:.2f}")
-        report.add(f"fig14_{policy}_tok_per_s",
+              f"decode_steps={d['decode_steps']} util={util:.2f} "
+              f"completed={d['completed']} rejected={d['rejected']} "
+              f"page_high_water={d['pool_high_water_blocks']}"
+              f"/{d['pool_num_blocks']}")
+        report.add(f"fig14_{mode}_tok_per_s",
                    1e6 / max(d["tokens_per_s"], 1e-9),
                    f"tok/s={d['tokens_per_s']:.1f}")
-        report.add(f"fig14_{policy}_ttft_mean",
+        report.add(f"fig14_{mode}_ttft_mean",
                    d["ttft_mean_s"] * 1e6,
                    f"p95={d['ttft_p95_s'] * 1e6:.0f}us")
 
-    speedup = out["continuous"]["tokens_per_s"] / \
+    # the dense ceiling rejects the long request; paged admits it
+    assert out["dense"]["rejected"] >= 1, "long request should not fit dense"
+    assert out["paged"]["rejected"] == 0 and \
+        out["paged"]["completed"] == len(reqs), \
+        "paged pool must admit the beyond-ceiling request"
+    print(f"# fig14 long request ({LONG_PROMPT}+{LONG_NEW} tokens > dense "
+          f"ceiling {DENSE_MAX_LEN}): dense rejected, paged served")
+    print(f"# fig14 paged prefix cache: "
+          f"hits={out['paged']['pool_prefix_hits']} "
+          f"shared_tokens={out['paged']['pool_prefix_shared_tokens']} "
+          f"prefill_chunks={out['paged']['prefill_chunks']}")
+
+    cont = out["dense"]["tokens_per_s"] / \
         max(out["static"]["tokens_per_s"], 1e-9)
-    print(f"# fig14 continuous/static tokens/s speedup: {speedup:.2f}x")
-    report.add("fig14_continuous_speedup", speedup * 100,
-               f"{speedup:.2f}x")
+    paged = out["paged"]["tokens_per_s"] / \
+        max(out["dense"]["tokens_per_s"], 1e-9)
+    print(f"# fig14 continuous/static tokens/s speedup: {cont:.2f}x")
+    print(f"# fig14 paged+chunked/dense-continuous tokens/s speedup "
+          f"(equal memory): {paged:.2f}x")
+    report.add("fig14_continuous_speedup", cont * 100, f"{cont:.2f}x")
+    report.add("fig14_paged_speedup", paged * 100, f"{paged:.2f}x")
+
+    if json_path:
+        summary = {
+            "trace": {"requests": len(reqs), "sys_prefix": SYS_LEN,
+                      "pool_tokens": POOL_TOKENS,
+                      "dense_max_len": DENSE_MAX_LEN,
+                      "long_request": LONG_PROMPT + LONG_NEW},
+            "speedup_paged_vs_dense": paged,
+            "speedup_continuous_vs_static": cont,
+            "configs": {m: {
+                "tokens_per_s": d["tokens_per_s"],
+                "ttft_mean_s": d["ttft_mean_s"],
+                "ttft_p95_s": d["ttft_p95_s"],
+                "completed": d["completed"],
+                "rejected": d["rejected"],
+                "decode_steps": d["decode_steps"],
+                "page_high_water": d["pool_high_water_blocks"],
+                "prefix_hits": d.get("pool_prefix_hits", 0),
+                "prefix_shared_tokens":
+                    d.get("pool_prefix_shared_tokens", 0),
+            } for m, d in out.items()},
+        }
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"# fig14 wrote {json_path}")
     return out
 
 
 if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_serving.json summary here")
+    args = ap.parse_args()
     r = CsvReport()
-    run(r, quick=True)
+    run(r, quick=args.quick, json_path=args.json)
     r.dump()

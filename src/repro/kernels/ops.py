@@ -11,6 +11,8 @@ import functools
 import jax
 
 from repro.kernels import flash_attention as fa
+from repro.kernels import paged_attention as pa
+from repro.kernels import ref
 from repro.kernels import rmsnorm as rn
 
 
@@ -27,6 +29,26 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
         interpret = not _on_tpu()
     return fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
                               block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, tables, lengths,
+                    interpret: bool = None):
+    """Gather-decode attention over scattered KV pages.
+
+    q: (B, H, D); k_pages/v_pages: (P, bs, Hkv, D); tables: (B, W);
+    lengths: (B,) -> (B, H, D).  Runs the Pallas kernel compiled on
+    TPU and in interpret mode when explicitly requested (tests); the
+    CPU serving path uses the jnp oracle directly — interpret mode
+    executes the grid in Python and is far too slow for a decode loop.
+    """
+    if interpret is None:
+        if not _on_tpu():
+            return ref.paged_attention_ref(q, k_pages, v_pages, tables,
+                                           lengths)
+        interpret = False
+    return pa.paged_attention(q, k_pages, v_pages, tables, lengths,
+                              interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows",

@@ -26,6 +26,34 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.reshape(B, H, Sq, D).astype(q.dtype)
 
 
+def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
+                        v_pages: jax.Array, tables: jax.Array,
+                        lengths: jax.Array) -> jax.Array:
+    """Gather-decode oracle over a paged KV pool (the jnp twin the
+    models use off-TPU).
+
+    q: (B, H, D); k_pages/v_pages: (P, bs, Hkv, D); tables: (B, W)
+    int32 physical page ids; lengths: (B,) valid tokens per row.
+    Returns (B, H, D).  Gathers each row's pages into logical order and
+    runs masked decode attention; HBM traffic is O(B * W * bs) — the
+    Pallas kernel performs the same gather page-by-page in VMEM.
+    """
+    B, H, D = q.shape
+    _, bs, Hkv, _ = k_pages.shape
+    W = tables.shape[1]
+    g = H // Hkv
+    kg = k_pages[tables].reshape(B, W * bs, Hkv, D).astype(jnp.float32)
+    vg = v_pages[tables].reshape(B, W * bs, Hkv, D).astype(jnp.float32)
+    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kg) / math.sqrt(D)
+    pos = jnp.arange(W * bs, dtype=jnp.int32)
+    valid = pos[None, :] < lengths[:, None]              # (B, W*bs)
+    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", w, vg)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
 def rmsnorm_ref(x: jax.Array, scale: jax.Array,
                 eps: float = 1e-6) -> jax.Array:
     xf = x.astype(jnp.float32)

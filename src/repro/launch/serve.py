@@ -84,14 +84,20 @@ def run_lm(args) -> Dict[str, object]:
     sched = Scheduler(
         cfg, params, num_slots=args.slots, max_len=max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
-        policy=args.policy, max_prefills_per_step=args.prefill_per_step,
-        registry=registry, watch_every=args.watch_every)
+        max_seq=args.max_seq, layout=args.layout,
+        policy=args.policy, prefill_chunk=args.prefill_chunk,
+        prefix_sharing=not args.no_prefix_sharing,
+        max_prefills_per_step=args.prefill_per_step,
+        registry=registry, watch_every=args.watch_every,
+        swap_mode=args.swap_mode)
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
                           temperature=args.temperature, seed=args.seed)
-    print(f"[serve] arch={cfg.name} workload=lm policy={args.policy} "
-          f"slots={args.slots} max_len={max_len} "
-          f"block_size={args.block_size} requests={len(reqs)} "
+    print(f"[serve] arch={cfg.name} workload=lm layout={args.layout} "
+          f"policy={args.policy} slots={args.slots} max_len={max_len} "
+          f"max_seq={sched.max_seq} block_size={args.block_size} "
+          f"prefill_chunk={args.prefill_chunk} "
+          f"swap_mode={args.swap_mode} requests={len(reqs)} "
           f"max_new={args.max_new}")
     for r in reqs:
         try:
@@ -105,6 +111,10 @@ def run_lm(args) -> Dict[str, object]:
           f"blocks_used_high_water={pd['high_water_blocks']}/"
           f"{pd['num_blocks']} block_allocs={pd['block_allocs']} "
           f"block_frees={pd['block_frees']}")
+    if args.layout == "paged":
+        print(f"[serve] prefix-cache: hits={pd['prefix_hits']} "
+              f"shared_tokens={pd['prefix_shared_tokens']} "
+              f"prefill_chunks={sched.stats.prefill_chunks}")
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
               f"hot_swaps={sched.stats.hot_swaps}")
@@ -167,10 +177,31 @@ def main(argv=None) -> int:
     # scheduler
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=0,
-                    help="cache pool length (0 = fit the trace)")
-    ap.add_argument("--block-size", type=int, default=16)
+                    help="default per-request cap + pool sizing unit "
+                         "(0 = fit the trace)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV page size in tokens")
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="page-pool size (default: slots*max_len worth)")
+    ap.add_argument("--max-seq", type=int, default=None,
+                    help="per-request length cap (paged layout; default "
+                         "max_len — raise it to admit requests longer "
+                         "than the old dense per-slot ceiling)")
+    ap.add_argument("--layout", default="paged",
+                    choices=("paged", "dense"),
+                    help="paged: scattered KV pages + gather-decode "
+                         "kernel; dense: PR-2 slot rows (baseline)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill long prompts in N-token chunks "
+                         "interleaved with decode (0 = one-shot; "
+                         "attention-only families)")
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="disable copy-on-admit prompt prefix sharing")
+    ap.add_argument("--swap-mode", default="immediate",
+                    choices=("immediate", "drain"),
+                    help="hot-swap policy: immediate applies new "
+                         "weights to in-flight requests; drain lets "
+                         "them finish on the old weights first")
     ap.add_argument("--policy", default="continuous",
                     choices=("continuous", "static"))
     ap.add_argument("--prefill-per-step", type=int, default=1)

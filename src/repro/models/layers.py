@@ -458,6 +458,120 @@ def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
     return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
 
 
+# ---------------------------------------------------------------------------
+# Paged attention (serving): KV lives in a shared page pool, requests
+# address it through per-row block tables.  The gather-decode compute is
+# kernels/paged_attention.py on TPU and kernels/ref.paged_attention_ref
+# (the jnp twin) everywhere else.
+# ---------------------------------------------------------------------------
+
+
+def _paged_attention_dispatch(q, k_pages, v_pages, tables, lengths):
+    # single dispatch site: ops.paged_attention picks the compiled
+    # Pallas kernel on TPU and the jnp oracle everywhere else
+    from repro.kernels import ops
+    return ops.paged_attention(q, k_pages, v_pages, tables, lengths)
+
+
+def init_paged_attention_cache(cfg: ModelConfig, num_pages: int,
+                               block_size: int, dtype=None):
+    """One layer's paged KV pool: (num_pages + 1, block_size, Hkv, D).
+
+    The extra page (index ``num_pages``) is the NULL page: inactive
+    batch rows and dropped (padded) prefill positions write there, so a
+    row that owns no pages can never corrupt another request's cache.
+    """
+    dt = dtype or jnp.dtype(cfg.dtype)
+    hd = cfg.resolved_head_dim
+    shape = (num_pages + 1, block_size, cfg.num_kv_heads, hd)
+    cache = {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+    axes = {"k": ("pages", None, "kv_heads", "head_dim"),
+            "v": ("pages", None, "kv_heads", "head_dim")}
+    return cache, axes
+
+
+def _scatter_pages(pages: jax.Array, vals: jax.Array, page_ids: jax.Array,
+                   offsets: jax.Array) -> jax.Array:
+    """Write vals[n] -> pages[page_ids[n], offsets[n]] (rows of (Hkv, D))."""
+    return pages.at[page_ids, offsets].set(vals.astype(pages.dtype))
+
+
+def attention_decode_paged(params: Params, cfg: ModelConfig, x: jax.Array,
+                           cache: Params, index: jax.Array,
+                           positions: jax.Array, tables: jax.Array):
+    """Single-token decode against the paged pool.
+
+    x: (B, 1, d); cache['k'/'v']: (P+1, bs, Hkv, D) shared pools;
+    index: int32 (B,) per-row write position, with -1 marking inactive
+    rows (their KV is routed to the null page and their output is
+    garbage the caller discards); tables: (B, W) int32 physical page
+    ids.  Returns (out, new_cache).
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    bs = cache["k"].shape[1]
+    null_page = cache["k"].shape[0] - 1
+    index = jnp.asarray(index, jnp.int32)
+    active = index >= 0
+    widx = jnp.maximum(index, 0)
+    page = jnp.take_along_axis(tables, (widx // bs)[:, None], axis=1)[:, 0]
+    page = jnp.where(active, page, null_page)
+    off = widx % bs
+    k = _scatter_pages(cache["k"], k_new[:, 0], page, off)
+    v = _scatter_pages(cache["v"], v_new[:, 0], page, off)
+    lengths = widx + 1
+    out = _paged_attention_dispatch(q[:, 0], k, v, tables, lengths)
+    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
+
+
+def attention_chunk_paged(params: Params, cfg: ModelConfig, x: jax.Array,
+                          cache: Params, tables: jax.Array,
+                          hist_len: jax.Array, prompt_len: jax.Array,
+                          positions: jax.Array):
+    """One chunked-prefill step for a single request over the paged pool.
+
+    x: (1, C, d) — the prompt slice [hist_len, hist_len + C) (the tail
+    chunk may be right-padded past ``prompt_len``; padded positions
+    scatter to the null page and are causally invisible to real
+    queries); cache: shared (P+1, bs, Hkv, D) pools; tables: (1, W)
+    this request's block-table row; hist_len/prompt_len: int32 scalars.
+    Chunk KV is scattered into the pool first, then the chunk queries
+    attend over the gathered pages — which covers both the already-
+    prefilled history (including prefix-shared pages) and the chunk
+    itself under one causal mask.  Returns (out, new_cache).
+    """
+    B, C, _ = x.shape
+    assert B == 1
+    q, k_new, v_new = _project_qkv(params, cfg, x, positions)
+    bs = cache["k"].shape[1]
+    null_page = cache["k"].shape[0] - 1
+    W = tables.shape[1]
+    abs_pos = jnp.asarray(hist_len, jnp.int32) \
+        + jnp.arange(C, dtype=jnp.int32)
+    valid = abs_pos < prompt_len
+    page = jnp.take(tables[0], jnp.minimum(abs_pos // bs, W - 1))
+    page = jnp.where(valid, page, null_page)
+    off = abs_pos % bs
+    k = _scatter_pages(cache["k"], k_new[0], page, off)
+    v = _scatter_pages(cache["v"], v_new[0], page, off)
+
+    Hkv, D = cfg.num_kv_heads, cfg.resolved_head_dim
+    g = cfg.num_heads // Hkv
+    kg = k[tables[0]].reshape(W * bs, Hkv, D).astype(jnp.float32)
+    vg = v[tables[0]].reshape(W * bs, Hkv, D).astype(jnp.float32)
+    qg = q[0].reshape(C, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("qhgd,khd->hgqk", qg, kg) / math.sqrt(D)
+    kv_pos = jnp.arange(W * bs, dtype=jnp.int32)
+    mask = kv_pos[None, :] <= abs_pos[:, None]            # causal, absolute
+    s = jnp.where(mask[None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hgqk,khd->qhgd", w, vg).astype(x.dtype)
+    out = out.reshape(1, C, cfg.q_dim) @ params["wo"]
+    return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
+
+
 def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,
                          dtype=None):
     dt = dtype or jnp.dtype(cfg.dtype)

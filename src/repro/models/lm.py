@@ -162,8 +162,19 @@ def _zero_aux():
 
 
 def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
-                 mode: str, cache=None, index=None):
-    """Returns (x, new_cache, aux)."""
+                 mode: str, cache=None, index=None, tables=None,
+                 hist_len=None, prompt_len=None):
+    """Returns (x, new_cache, aux).
+
+    ``tables`` switches attention layers onto the paged-KV path:
+    mode "decode" uses the gather-decode kernel over scattered pages and
+    mode "chunk" runs one chunked-prefill slice (attention-only stacks).
+    Recurrent mixers keep their per-slot state rows in both cases.
+    """
+    if mode == "chunk" and spec.kind != "a":
+        raise ValueError(
+            "chunked prefill requires an attention-only stack "
+            f"(got mixer kind {spec.kind!r})")
     aux = _zero_aux()
     h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
     new_cache = None
@@ -173,6 +184,13 @@ def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
         elif mode == "prefill":
             mix, new_cache = L.attention_prefill(bp["mixer"], cfg, h,
                                                  positions)
+        elif mode == "chunk":
+            mix, new_cache = L.attention_chunk_paged(
+                bp["mixer"], cfg, h, cache, tables, hist_len, prompt_len,
+                positions)
+        elif tables is not None:
+            mix, new_cache = L.attention_decode_paged(
+                bp["mixer"], cfg, h, cache, index, positions, tables)
         else:
             mix, new_cache = L.attention_decode(bp["mixer"], cfg, h, cache,
                                                 index, positions)
@@ -362,6 +380,121 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
     return cache, axes
 
 
+def _init_block_cache_paged(cfg: ModelConfig, spec: LayerSpec,
+                            num_slots: int, num_pages: int,
+                            block_size: int):
+    if spec.kind == "a":
+        return L.init_paged_attention_cache(cfg, num_pages, block_size)
+    return _init_block_cache(cfg, spec, num_slots, 0)
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
+                     block_size: int):
+    """Serving cache pytree with PAGED attention leaves.
+
+    Attention layers get one shared ``(num_pages + 1, block_size, Hkv,
+    D)`` pool each (page ``num_pages`` is the null page; see
+    :func:`repro.models.layers.init_paged_attention_cache`) addressed
+    through per-request block tables, so a request's KV can be
+    scattered anywhere in the pool.  Recurrent layers (mamba / xLSTM)
+    carry O(1) state per request and keep ``num_slots`` dense rows.
+    Structure mirrors :func:`init_cache` (stacked over prefix/period).
+    """
+    specs = layer_specs(cfg)
+    k0, R, P = _grouping(cfg)
+    cache: Params = {}
+    axes: Params = {}
+
+    def make(spec):
+        return _init_block_cache_paged(cfg, spec, num_slots, num_pages,
+                                       block_size)
+
+    if k0:
+        per = [make(specs[i]) for i in range(k0)]
+        cache["prefix"] = _stack([c for c, _ in per])
+        axes["prefix"] = _push_axis(per[0][1], "layers")
+    body_c, body_a = [], []
+    for j in range(R):
+        per = [make(specs[k0 + pi * R + j]) for pi in range(P)]
+        body_c.append(_stack([c for c, _ in per]))
+        body_a.append(_push_axis(per[0][1], "period"))
+    cache["body"] = tuple(body_c)
+    axes["body"] = tuple(body_a)
+    return cache, axes
+
+
+def lm_decode_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                    cache: Params, index: jax.Array, tables: jax.Array):
+    """One decode step over the paged pool.
+
+    tokens: (B, 1) int32; index: int32 (B,) per-row write positions
+    with -1 marking rows that hold no request (routed to the null
+    page); tables: (B, W) int32 block tables.  Attention layers
+    gather/scatter through the tables; recurrent layers use their dense
+    per-slot state rows exactly as :func:`lm_decode` — this IS
+    :func:`lm_decode` with ``tables`` threaded through.  Returns
+    (logits, new_cache).
+    """
+    return lm_decode(params, cfg, tokens, cache, index, tables=tables)
+
+
+def lm_prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                     cache: Params, tables: jax.Array, hist_len: jax.Array,
+                     prompt_len: jax.Array, last_pos: jax.Array):
+    """One chunked-prefill slice for a single request (paged pool).
+
+    tokens: (1, C) — prompt positions [hist_len, hist_len + C), tail
+    chunk right-padded past ``prompt_len``; tables: (1, W) the
+    request's block-table row; hist_len / prompt_len: int32 scalars;
+    last_pos: int32 (1,) position WITHIN the chunk to read logits from
+    (only meaningful on the final chunk).  Attention-only stacks —
+    recurrent mixers cannot resume mid-prompt from a page pool (see
+    ROADMAP "recurrent-family prompt bucketing").  Returns
+    (logits (1, 1, V), new_cache).
+    """
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", "seq", "act_embed")
+    B, C, _ = x.shape
+    hist_len = jnp.asarray(hist_len, jnp.int32)
+    pos = hist_len + jnp.arange(C, dtype=jnp.int32)[None, :]
+    if cfg.use_mrope:
+        positions = jnp.broadcast_to(pos[None], (3, B, C))
+    else:
+        positions = pos
+    pspecs = _period_specs(cfg)
+    specs = layer_specs(cfg)
+
+    def run_stack(x, stacked, cache_stacked, spec_list):
+        def body(xc, inp):
+            layer_p, layer_c = inp
+            if not isinstance(layer_p, tuple):
+                layer_p = (layer_p,)
+                layer_c = (layer_c,)
+            new_caches = []
+            for sp, lp, lc in zip(spec_list, layer_p, layer_c):
+                xc, nc, _ = _apply_block(
+                    lp, cfg, sp, xc, positions, "chunk", cache=lc,
+                    tables=tables, hist_len=hist_len,
+                    prompt_len=prompt_len)
+                new_caches.append(nc)
+            return xc, tuple(new_caches)
+
+        return jax.lax.scan(body, x, (stacked, cache_stacked))
+
+    new_cache: Params = {}
+    if "prefix" in params:
+        x, pc = run_stack(x, params["prefix"], cache["prefix"], (specs[0],))
+        new_cache["prefix"] = pc[0]
+    x, bc = run_stack(x, tuple(params["body"]), tuple(cache["body"]), pspecs)
+    new_cache["body"] = bc
+    idx = jnp.broadcast_to(
+        jnp.asarray(last_pos, jnp.int32)[:, None, None],
+        (x.shape[0], 1, x.shape[2]))
+    sel = jnp.take_along_axis(x, idx, axis=1)
+    logits = _logits(params, cfg, sel)
+    return logits, new_cache
+
+
 def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
                remat: str = "none", last_pos: Optional[jax.Array] = None):
     """Process the full prompt; returns (last-token logits, cache).
@@ -409,11 +542,15 @@ def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
               cache: Params, index: jax.Array,
-              positions: Optional[jax.Array] = None):
+              positions: Optional[jax.Array] = None,
+              tables: Optional[jax.Array] = None):
     """One decode step. tokens: (B, 1) int32; index: scalar int32 write
     position (= current KV length), or an int32 (B,) vector of per-row
     write positions (continuous batching: each batch row is a different
-    request at a different length). Returns (logits, new_cache)."""
+    request at a different length). With ``tables`` ((B, W) int32 block
+    tables) attention layers run the paged gather/scatter path and a
+    per-row index of -1 marks an idle row (writes route to the null
+    page). Returns (logits, new_cache)."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, "batch", "seq", "act_embed")
     B = x.shape[0]
@@ -421,6 +558,8 @@ def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
     if positions is None:
         idx_col = index[:, None] if index.ndim else \
             jnp.full((B, 1), index, jnp.int32)
+        if tables is not None:     # paged: clamp the idle-row sentinel
+            idx_col = jnp.maximum(idx_col, 0)
         if cfg.use_mrope:
             # text decode: all three M-RoPE components advance together
             positions = jnp.broadcast_to(idx_col[None], (3, B, 1))
@@ -438,7 +577,8 @@ def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
             new_caches = []
             for sp, lp, lc in zip(spec_list, layer_p, layer_c):
                 xc, nc, _ = _apply_block(lp, cfg, sp, xc, positions,
-                                         "decode", cache=lc, index=index)
+                                         "decode", cache=lc, index=index,
+                                         tables=tables)
                 new_caches.append(nc)
             return xc, tuple(new_caches)
 

@@ -1,39 +1,58 @@
 """Block/paged KV-cache management for the serving subsystem.
 
-Two cooperating pieces:
+Three cooperating pieces:
 
 ``BlockManager``
-    Logical page accounting in units of ``block_size`` tokens over a
-    fixed page pool — admission by token budget, per-request block
-    tables, free-list reuse, and high-water-mark stats.  This is the
-    vLLM-style bookkeeping layer: a request is admitted only when its
-    full reservation (prompt + max new tokens) fits in free pages, so
-    the scheduler never has to preempt mid-stream.
+    Page accounting in units of ``block_size`` tokens over a fixed page
+    pool — vLLM-style bookkeeping with two layers of truth:
+
+    * **reservations** — admission is by token budget: a request is
+      admitted only when its full reservation (prompt + max new tokens)
+      fits under the pool size minus everything already committed, so
+      the scheduler never has to preempt mid-stream;
+    * **physical pages** — materialized lazily (``ensure``): prompt
+      pages as prefill reaches them, decode pages when generation
+      crosses a page boundary.  A request that stops early (EOS) never
+      claims the tail of its reservation, and the high-water mark
+      measures pages actually touched.
+
+    Pages are **refcounted** so prefix sharing can map one physical
+    page into several requests' tables; a page returns to the free list
+    when its last holder releases it.
+
+``PagedCachePool``
+    The physical cache for the paged decode path: per attention layer
+    ONE ``(num_pages + 1, block_size, n_kv_heads, head_dim)`` pool
+    (``repro.models.lm.init_paged_cache``; the +1 is the null page),
+    plus the host-side block tables that :func:`repro.models.lm.
+    lm_decode_paged` gathers through.  A request's pages can live
+    anywhere in the pool — there is no per-slot ``max_len`` row, so a
+    single request may use the entire pool.  Recurrent-layer state
+    (O(1) per request) stays in dense per-slot rows.
+
+    **Prefix sharing (copy-on-admit):** after a request prefills, its
+    fully-filled prompt pages are registered in a prefix cache keyed by
+    the token chain they hold; a later request whose prompt starts with
+    the same pages maps them read-only into its own table (refcount++)
+    and prefills only the suffix.  Shared pages are immutable by
+    construction — decode appends strictly after the prompt and the
+    partially-filled tail page is never shared — so no copy is ever
+    needed.  Entries live as long as some request holds the page.
 
 ``CachePool``
-    The physical cache: ONE preallocated ``lm.init_cache`` pytree of
-    ``num_slots`` rows x ``max_len`` tokens, shared by every request for
-    the lifetime of the server (this replaces the old
-    ``Engine._pad_cache`` path that re-allocated a full-length cache per
-    ``generate`` call).  A finished request's slot row is simply handed
-    to the next request; ``insert`` overwrites the whole row with the
-    newcomer's prefilled cache (zero-padded to ``max_len``), so no stale
-    state survives slot reuse.
-
-Emulation note: pages are stored contiguously inside a request's slot
-row rather than scattered across the pool (the dense
-``attention_decode`` path indexes caches by position, not by page
-table).  The BlockManager still governs admission and accounting, which
-is the part the scheduler and the fig14 benchmark measure.
+    The PR-2 dense layout (``num_slots`` rows x ``max_len`` tokens),
+    kept as the ``layout="dense"`` baseline the fig14 benchmark
+    measures the paged path against.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
@@ -52,6 +71,13 @@ class BlockManager:
     block_size: int
     _free: List[int] = field(default_factory=list)
     _tables: Dict[Any, List[int]] = field(default_factory=dict)
+    # pages a request may still claim from the free list (its
+    # reservation minus what it has already materialized); admission
+    # budgets against free - sum(_pending), so shared pages cost the
+    # pool ONCE no matter how many tables map them — that is the
+    # prefix-sharing capacity win
+    _pending: Dict[Any, int] = field(default_factory=dict)
+    _refs: Dict[int, int] = field(default_factory=dict)
     high_water: int = 0
     allocs: int = 0
     frees: int = 0
@@ -67,55 +93,427 @@ class BlockManager:
     def used_blocks(self) -> int:
         return self.num_blocks - len(self._free)
 
+    @property
+    def pending_blocks(self) -> int:
+        """Free-list pages promised to live requests but not yet
+        materialized (lazy allocation)."""
+        return sum(self._pending.values())
+
+    @property
+    def committed_blocks(self) -> int:
+        """Blocks spoken for: materialized + promised."""
+        return self.used_blocks + self.pending_blocks
+
+    @property
+    def available_blocks(self) -> int:
+        """Free-list pages not promised to anyone."""
+        return len(self._free) - self.pending_blocks
+
     def table(self, rid) -> List[int]:
         return list(self._tables[rid])
 
-    def can_allocate(self, n_tokens: int) -> bool:
-        return blocks_for(n_tokens, self.block_size) <= len(self._free)
+    def can_allocate(self, n_tokens: int, shared_blocks: int = 0) -> bool:
+        need = blocks_for(n_tokens, self.block_size) - shared_blocks
+        return need <= self.available_blocks
+
+    def _claim(self, rid, n: int) -> List[int]:
+        if n > len(self._free):
+            raise RuntimeError(
+                f"out of cache blocks: need {n}, free {len(self._free)}")
+        got = [self._free.pop() for _ in range(n)]
+        for b in got:
+            self._refs[b] = 1
+        self._tables[rid].extend(got)
+        self._pending[rid] -= n
+        self.allocs += n
+        self.high_water = max(self.high_water, self.used_blocks)
+        return got
 
     def allocate(self, rid, n_tokens: int) -> List[int]:
-        """Reserve pages for `n_tokens`; raises if rid is live or the
-        pool cannot cover the reservation."""
+        """Reserve AND materialize pages for `n_tokens` (eager; the
+        dense pool path).  Raises if rid is live or over budget."""
         if rid in self._tables:
             raise ValueError(f"request {rid!r} already holds blocks")
         need = blocks_for(n_tokens, self.block_size)
-        if need > len(self._free):
+        if not self.can_allocate(n_tokens):
             raise RuntimeError(
-                f"out of cache blocks: need {need}, free {len(self._free)}")
-        got = [self._free.pop() for _ in range(need)]
-        self._tables[rid] = got
-        self.allocs += need
-        self.high_water = max(self.high_water, self.used_blocks)
-        return list(got)
+                f"out of cache blocks: need {need}, "
+                f"available {self.available_blocks}")
+        self._tables[rid] = []
+        self._pending[rid] = need
+        return self._claim(rid, need)
 
-    def extend(self, rid, n_tokens: int) -> List[int]:
-        """Grow a live reservation to cover `n_tokens` total."""
+    def reserve(self, rid, n_tokens: int,
+                shared: Sequence[int] = ()) -> None:
+        """Budget `n_tokens` for `rid`, mapping `shared` pages (already
+        live, refcounted up) as its first pages; the rest materialize
+        lazily via :meth:`ensure`.  Shared pages are free — they are
+        someone's materialized pages already."""
+        if rid in self._tables:
+            raise ValueError(f"request {rid!r} already holds blocks")
+        need = blocks_for(n_tokens, self.block_size) - len(shared)
+        if need > self.available_blocks:
+            raise RuntimeError(
+                f"out of cache blocks: need {need}, "
+                f"available {self.available_blocks}")
+        for b in shared:
+            self._refs[b] += 1
+        self._tables[rid] = list(shared)
+        self._pending[rid] = need
+        self.high_water = max(self.high_water, self.used_blocks)
+
+    def ensure(self, rid, n_tokens: int) -> List[int]:
+        """Materialize physical pages so `rid` can hold `n_tokens`;
+        returns the newly claimed page ids (page-overflow allocation).
+        Growing past the reservation raises — the scheduler budgets
+        prompt + max_new up front precisely so this cannot happen."""
         have = self._tables[rid]
         need = blocks_for(n_tokens, self.block_size) - len(have)
         if need <= 0:
             return []
-        if need > len(self._free):
+        if need > self._pending[rid]:
             raise RuntimeError(
-                f"out of cache blocks: need {need}, free {len(self._free)}")
-        got = [self._free.pop() for _ in range(need)]
-        have.extend(got)
-        self.allocs += need
-        self.high_water = max(self.high_water, self.used_blocks)
-        return got
+                f"request {rid!r} overflows its reservation "
+                f"({len(have) + self._pending[rid]} blocks)")
+        return self._claim(rid, need)
 
-    def free(self, rid) -> int:
-        """Release a request's pages back to the pool."""
+    def extend(self, rid, n_tokens: int) -> List[int]:
+        """Grow a live reservation to cover `n_tokens` total and
+        materialize the new pages."""
+        need = blocks_for(n_tokens, self.block_size) \
+            - len(self._tables[rid])
+        if need > self._pending[rid]:
+            grow = need - self._pending[rid]
+            if grow > self.available_blocks:
+                raise RuntimeError(
+                    f"out of cache blocks: need {grow}, "
+                    f"available {self.available_blocks}")
+            self._pending[rid] = need
+        return self.ensure(rid, n_tokens)
+
+    def free(self, rid) -> List[int]:
+        """Release `rid`'s pages; returns the page ids whose refcount
+        hit zero (returned to the free list)."""
         blocks = self._tables.pop(rid)
-        self._free.extend(blocks)
-        self.frees += len(blocks)
-        return len(blocks)
+        self._pending.pop(rid)
+        released = []
+        for b in blocks:
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+                released.append(b)
+        self.frees += len(released)
+        return released
+
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
 
     def as_dict(self) -> Dict[str, int]:
         return {"num_blocks": self.num_blocks,
                 "block_size": self.block_size,
                 "used_blocks": self.used_blocks,
+                "committed_blocks": self.committed_blocks,
                 "high_water_blocks": self.high_water,
                 "block_allocs": self.allocs, "block_frees": self.frees}
+
+
+# ---------------------------------------------------------------------------
+# paged physical pool
+# ---------------------------------------------------------------------------
+
+
+def _leaf_is_paged(axes_leaf) -> bool:
+    return isinstance(axes_leaf, tuple) and "pages" in axes_leaf
+
+
+def _axes_leaves(axes):
+    is_leaf = (lambda t: isinstance(t, tuple)
+               and all(x is None or isinstance(x, str) for x in t))
+    return jax.tree.leaves(axes, is_leaf=is_leaf)
+
+
+def _insert_leaf_paged(dst, src, page_ids, offsets):
+    """Scatter a (stack, 1, S, Hkv, D) dense prefill leaf into the
+    (stack, P+1, bs, Hkv, D) pool at (page_ids[s], offsets[s])."""
+    return dst.at[:, page_ids, offsets].set(src[:, 0].astype(dst.dtype))
+
+
+def _insert_leaf_slot(dst, src, slot):
+    """Write a (stack, 1, ...) recurrent-state leaf into pool row `slot`."""
+    start = (0, jnp.asarray(slot, jnp.int32)) + (0,) * (dst.ndim - 2)
+    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), start)
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(0,))
+def _insert_tree_paged(pool, paged_mask, src, page_ids, offsets, slot):
+    flat_pool, tree = jax.tree.flatten(pool)
+    flat_src = jax.tree.leaves(src)
+    out = [
+        _insert_leaf_paged(d, s, page_ids, offsets) if paged
+        else _insert_leaf_slot(d, s, slot)
+        for d, s, paged in zip(flat_pool, flat_src, paged_mask)]
+    return jax.tree.unflatten(tree, out)
+
+
+class PagedCachePool:
+    """Paged decode cache: shared page pools + per-slot block tables.
+
+    ``num_slots`` bounds the decode batch width (and the number of
+    recurrent-state rows); memory capacity is ``num_pages *
+    block_size`` tokens shared by every request.  ``max_seq`` caps a
+    single request (it sizes the block-table width) and defaults to the
+    whole pool — the per-slot ``max_len`` ceiling of the dense layout
+    is gone.
+    """
+
+    def __init__(self, cfg: ModelConfig, num_slots: int, num_pages: int,
+                 block_size: int = 16, max_seq: Optional[int] = None):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.block_size = block_size
+        self.max_seq = min(max_seq or num_pages * block_size,
+                           num_pages * block_size)
+        self.max_blocks_per_seq = blocks_for(self.max_seq, block_size)
+        self.blocks = BlockManager(num_pages, block_size)
+        self.null_page = num_pages
+        self.cache, axes = lm.init_paged_cache(cfg, num_slots, num_pages,
+                                               block_size)
+        self.paged_mask = tuple(_leaf_is_paged(a)
+                                for a in _axes_leaves(axes))
+        self.tables = np.full((num_slots, self.max_blocks_per_seq),
+                              self.null_page, np.int32)
+        self._free_slots = list(range(num_slots))
+        self._slot_of: Dict[Any, int] = {}
+        # prefix cache: chained token-chunk key -> canonical physical
+        # page, plus every live page known to hold that content (a
+        # follower that prefilled its own copy before the prefix was
+        # registered is still a valid donor once the original dies)
+        self._prefix: Dict[Any, int] = {}
+        self._key_pages: Dict[Any, set] = {}
+        self._page_key: Dict[int, Any] = {}
+        # per-rid incremental registration cursor: (pages done, last key)
+        self._reg_state: Dict[Any, Tuple[int, Any]] = {}
+        # weight epoch: bumped by invalidate_prefix() on hot swap so
+        # pages computed under old weights are never shared forward
+        self._epoch = 0
+        self._admit_epoch: Dict[Any, int] = {}
+        self.prefix_hits = 0
+        self.prefix_shared_tokens = 0
+
+    # -- prefix sharing ----------------------------------------------------
+    @staticmethod
+    def _chunk_keys(prompt: np.ndarray, block_size: int, start: int = 0,
+                    prev=None):
+        """Chained keys for fully-filled prompt pages ``start..``: key_i
+        commits to ALL tokens up to and including page i (so equal keys
+        mean equal prefixes, not just equal pages).  ``prev`` must be
+        the chain key of page ``start - 1`` when resuming."""
+        keys = []
+        for i in range(start, len(prompt) // block_size):
+            chunk = tuple(int(t) for t in
+                          prompt[i * block_size:(i + 1) * block_size])
+            prev = (prev, chunk)
+            keys.append(prev)
+        return keys
+
+    def find_shared_prefix(self, prompt: np.ndarray
+                           ) -> Tuple[List[int], int]:
+        """Longest registered prefix of `prompt` in live pages.
+
+        Returns (page ids, shared token count).  Capped at
+        ``len(prompt) - 1`` so at least one suffix token is always
+        prefilled (its hidden state supplies the first sampled token).
+        Keys are derived lazily page by page, so a miss on page 0 costs
+        one chunk hash — this runs on every admission check.
+        """
+        bs = self.block_size
+        max_pages = (len(prompt) - 1) // bs
+        pages, key = [], None
+        for i in range(max_pages):
+            key = (key, tuple(int(t) for t in prompt[i * bs:(i + 1) * bs]))
+            page = self._prefix.get(key)
+            if page is None or self.blocks.refcount(page) == 0:
+                break
+            pages.append(page)
+        return pages, len(pages) * bs
+
+    def register_prefix(self, rid, prompt: np.ndarray) -> None:
+        """Offer `rid`'s fully-filled prompt pages to future requests.
+
+        Incremental: per-chunk calls during chunked prefill only hash
+        the pages filled since the last call, resuming the key chain
+        instead of re-deriving it from page 0 every time.  Requests
+        admitted before the last weight swap are refused — their pages
+        (or their pages' attention context) came from the old model.
+        """
+        if self._admit_epoch.get(rid, -1) != self._epoch:
+            return
+        table = self.blocks.table(rid)
+        start, prev = self._reg_state.get(rid, (0, None))
+        keys = self._chunk_keys(prompt, self.block_size, start=start,
+                                prev=prev)
+        for i, key in zip(range(start, start + len(keys)), keys):
+            if i >= len(table):
+                break
+            page = table[i]
+            if self._page_key.get(page) != key:
+                self._page_key[page] = key
+                self._key_pages.setdefault(key, set()).add(page)
+                self._prefix.setdefault(key, page)
+            self._reg_state[rid] = (i + 1, key)
+
+    def _evict(self, released_pages: List[int]) -> None:
+        """Drop freed pages from the prefix cache; if a freed page was
+        the canonical holder of its key, re-point the key at another
+        live copy before giving up on it."""
+        for page in released_pages:
+            key = self._page_key.pop(page, None)
+            if key is None:
+                continue
+            copies = self._key_pages.get(key, set())
+            copies.discard(page)
+            if self._prefix.get(key) == page:
+                if copies:
+                    self._prefix[key] = next(iter(copies))
+                else:
+                    self._prefix.pop(key, None)
+            if not copies:
+                self._key_pages.pop(key, None)
+
+    # -- slot / page lifecycle ---------------------------------------------
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def can_admit(self, n_tokens: int, shared_blocks: int = 0) -> bool:
+        return bool(self._free_slots) and n_tokens <= self.max_seq \
+            and self.blocks.can_allocate(n_tokens, shared_blocks)
+
+    def admit(self, rid, n_tokens: int,
+              prompt: Optional[np.ndarray] = None,
+              shared: Optional[Tuple[List[int], int]] = None
+              ) -> Tuple[int, int]:
+        """Claim a slot + a token-budget reservation for `rid`.
+
+        With `prompt` given, maps any prefix-cached pages into the new
+        table (copy-on-admit sharing); pass ``shared`` to reuse a
+        :meth:`find_shared_prefix` result the admission check already
+        computed instead of hashing the prompt again.  Returns
+        (slot, shared_len).
+        """
+        if not self._free_slots:
+            raise RuntimeError("no free cache slots")
+        if n_tokens > self.max_seq:
+            raise ValueError(
+                f"request needs {n_tokens} tokens > pool max_seq "
+                f"{self.max_seq}")
+        if shared is None:
+            shared = ([], 0) if prompt is None else \
+                self.find_shared_prefix(prompt)
+        shared_pages, shared_len = shared
+        self.blocks.reserve(rid, n_tokens, shared=shared_pages)
+        slot = self._free_slots.pop()
+        self._slot_of[rid] = slot
+        self._admit_epoch[rid] = self._epoch
+        self.tables[slot, :] = self.null_page
+        if shared_pages:
+            self.tables[slot, :len(shared_pages)] = shared_pages
+            self.prefix_hits += 1
+            self.prefix_shared_tokens += shared_len
+            # registration resumes after the shared pages — their keys
+            # are already in the cache
+            self._reg_state[rid] = (len(shared_pages),
+                                    self._page_key[shared_pages[-1]])
+        return slot, shared_len
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+    def ensure(self, rid, n_tokens: int) -> None:
+        """Materialize pages so `rid` can hold `n_tokens`; updates the
+        slot's block table in place."""
+        slot = self._slot_of[rid]
+        have = len(self.blocks.table(rid))
+        new = self.blocks.ensure(rid, n_tokens)
+        if new:
+            self.tables[slot, have:have + len(new)] = new
+
+    def insert_prefill(self, rid, prefill_cache, prompt_len: int) -> None:
+        """Scatter a (batch=1) dense prefill cache into the pool.
+
+        The one-shot path for recurrent/hybrid families: attention
+        leaves scatter token s into (table[s // bs], s % bs); recurrent
+        state leaves overwrite the request's slot row.
+        """
+        self.ensure(rid, prompt_len)
+        slot = self._slot_of[rid]
+        table = self.blocks.table(rid)
+        # per-token page targets; positions past prompt_len (padding)
+        # are dropped onto the null page
+        kv_len = _first_kv_len(prefill_cache, self.paged_mask)
+        if kv_len is None:          # pure-recurrent stack: no KV pages
+            kv_len = prompt_len
+        pos = np.arange(kv_len)
+        pids = np.full((kv_len,), self.null_page, np.int32)
+        valid = pos < prompt_len
+        pids[valid] = np.asarray(table, np.int32)[pos[valid]
+                                                  // self.block_size]
+        offs = (pos % self.block_size).astype(np.int32)
+        self.cache = _insert_tree_paged(
+            self.cache, self.paged_mask, prefill_cache,
+            jnp.asarray(pids), jnp.asarray(offs), jnp.int32(slot))
+
+    def release(self, rid) -> int:
+        """Free `rid`'s slot + page refs; returns the freed slot."""
+        slot = self._slot_of.pop(rid)
+        self._free_slots.append(slot)
+        self.tables[slot, :] = self.null_page
+        self._reg_state.pop(rid, None)
+        self._admit_epoch.pop(rid, None)
+        self._evict(self.blocks.free(rid))
+        return slot
+
+    def invalidate_prefix(self) -> None:
+        """Flush the prefix cache (hot swap): pages computed under the
+        old weights must not be mapped into post-swap admissions, and
+        still-prefilling pre-swap requests stop registering (their
+        remaining chunks attend over old-weight history).  Live tables
+        and refcounts are untouched — only the sharing index dies."""
+        self._prefix.clear()
+        self._key_pages.clear()
+        self._page_key.clear()
+        self._epoch += 1
+
+    def table_width_for(self, max_tokens: int) -> int:
+        """Block-table columns needed to cover `max_tokens` (the
+        scheduler buckets this so gather width tracks the batch's true
+        maximum instead of always paying max_blocks_per_seq)."""
+        return min(self.max_blocks_per_seq,
+                   blocks_for(max(max_tokens, 1), self.block_size))
+
+    def as_dict(self) -> Dict[str, int]:
+        return {"num_slots": self.num_slots, "max_seq": self.max_seq,
+                "free_slots": self.free_slots,
+                "prefix_hits": self.prefix_hits,
+                "prefix_shared_tokens": self.prefix_shared_tokens,
+                **self.blocks.as_dict()}
+
+
+def _first_kv_len(prefill_cache, paged_mask) -> Optional[int]:
+    """Sequence length of the first attention leaf of a dense (batch=1)
+    prefill cache: leaves are (stack, 1, S, Hkv, D).  None for pure-
+    recurrent stacks (xLSTM), whose cache is all per-slot state rows."""
+    for leaf, paged in zip(jax.tree.leaves(prefill_cache),
+                           paged_mask):
+        if paged:
+            return int(leaf.shape[2])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# dense legacy pool (the PR-2 baseline, kept for layout="dense")
+# ---------------------------------------------------------------------------
 
 
 def _insert_row(dst: jax.Array, src: jax.Array, slot) -> jax.Array:
@@ -143,12 +541,13 @@ def _insert_tree(pool, src, slot):
 
 
 class CachePool:
-    """One preallocated decode cache shared by all requests.
+    """One preallocated dense decode cache shared by all requests.
 
     ``cache`` holds `num_slots` rows of `max_len` tokens (allocated once
     at construction via :func:`repro.models.lm.init_cache`); slot and
     page lifetime are managed here so the scheduler only deals in
-    request ids.
+    request ids.  Pages are bookkeeping only — a request's cache is its
+    contiguous slot row, which is what the paged layout replaces.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,

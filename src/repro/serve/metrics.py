@@ -28,6 +28,7 @@ class ServeStats:
     completed: int = 0
     rejected: int = 0
     prefills: int = 0
+    prefill_chunks: int = 0        # chunked-prefill slices processed
     prefill_tokens: int = 0        # true prompt tokens processed
     padded_prefill_tokens: int = 0  # incl. bucket padding (waste measure)
     decode_steps: int = 0
@@ -76,6 +77,7 @@ class ServeStats:
             "completed": self.completed,
             "rejected": self.rejected,
             "prefills": self.prefills,
+            "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
             "padded_prefill_tokens": self.padded_prefill_tokens,
             "decode_steps": self.decode_steps,

@@ -1,31 +1,51 @@
-"""Continuous-batching LM serving scheduler.
+"""Continuous-batching LM serving scheduler over a PAGED KV cache.
 
 The serving analogue of ``core/tournament.py``'s training orchestrator:
 a request queue in front of a slot-based decode batch backed by ONE
-preallocated :class:`repro.serve.kv_cache.CachePool`.
+preallocated :class:`repro.serve.kv_cache.PagedCachePool` (or the PR-2
+dense :class:`~repro.serve.kv_cache.CachePool` with ``layout="dense"``,
+kept as the benchmark baseline).
 
 Per scheduler step:
 
   1. *hot-swap check* — if a :class:`repro.serve.registry.ModelRegistry`
-     is attached, poll it every ``watch_every`` steps and swap in a
-     newer tournament winner between steps (in-flight KV caches remain
-     valid: cache layout depends only on the config, not the weights).
-  2. *admission* — pop queued requests while a cache slot AND a full
+     is attached, poll it every ``watch_every`` steps.
+     ``swap_mode="immediate"`` swaps a newer tournament winner in
+     between steps (in-flight KV caches remain valid: cache layout
+     depends only on the config, not the weights);
+     ``swap_mode="drain"`` holds the new weights pending, stops
+     admitting, lets every in-flight request finish on the old weights,
+     then swaps and resumes — strict per-request weight reproducibility.
+  2. *admission* — pop queued requests while a slot AND a full
      token-budget page reservation (prompt + max new tokens) are
-     available; prefill each admitted request (prompt right-padded to a
-     shape bucket so jit recompiles are bounded), write its cache into
-     the claimed slot row, and sample its first token.
-  3. *decode* — one batched decode step over the whole pool with
-     per-slot write indices (``lm_decode`` vector-index path); sample
-     one token per active slot.
-  4. *completion* — requests hitting EOS or their token budget free
-     their slot + pages immediately; the batch never stalls on its
+     available.  On the paged layout a prompt whose prefix is already
+     resident (another live request's registered prompt pages) maps
+     those pages read-only into its block table and skips their
+     prefill compute entirely (copy-on-admit prefix sharing).
+  3. *chunked prefill* — attention-only stacks prefill in
+     ``prefill_chunk``-token slices, one slice per prefilling request
+     per step, interleaved with decode, so admitting a long prompt
+     never stalls in-flight decodes.  Each slice scatters its KV
+     straight into the request's pages and attends over the gathered
+     page history under one causal mask.  Recurrent families (mamba /
+     xLSTM) prefill one-shot at exact length — their state cannot
+     resume mid-prompt — and scatter into pages afterwards.
+  4. *decode* — ONE batched gather-decode step over the whole pool
+     through the per-slot block tables
+     (:func:`repro.models.lm.lm_decode_paged`; Pallas kernel on TPU,
+     jnp gather twin elsewhere).  The table width passed to the kernel
+     is bucketed to the batch's true maximum page count, so short
+     requests never pay max_seq-width attention.  Pages materialize
+     lazily: a request crossing a page boundary claims its next page
+     right before the step (page-overflow allocation).
+  5. *completion* — requests hitting EOS or their token budget free
+     their slot + page refs immediately; the batch never stalls on its
      slowest member.
 
-``policy="static"`` degrades step 2 to classic static batching (admit
-only when the pool is empty, i.e. the whole batch runs to completion
-before the queue moves) — the baseline the fig14 benchmark compares
-against, sharing every compiled kernel with the continuous path.
+``policy="static"`` degrades admission to classic static batching
+(admit only when the pool is empty) — the baseline the fig14 benchmark
+compares against, sharing every compiled kernel with the continuous
+path.
 """
 from __future__ import annotations
 
@@ -41,7 +61,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serve.kv_cache import CachePool, blocks_for
+from repro.serve.kv_cache import CachePool, PagedCachePool, blocks_for
 from repro.serve.metrics import ServeStats
 
 
@@ -64,6 +84,7 @@ class _Active:
     req: Request
     slot: int
     ntok: int = 0                   # tokens generated so far
+    pf_pos: int = 0                 # prompt tokens prefilled so far
     tokens: List[int] = field(default_factory=list)
     submit_t: float = 0.0
     first_token_t: Optional[float] = None
@@ -89,18 +110,38 @@ def _decode_fn(params, cfg, tokens, cache, index):
     return lm.lm_decode(params, cfg, tokens, cache, index)
 
 
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
+def _decode_paged_fn(params, cfg, tokens, cache, index, tables):
+    return lm.lm_decode_paged(params, cfg, tokens, cache, index, tables)
+
+
+@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
+def _chunk_fn(params, cfg, toks, cache, tables, hist, plen, last_pos):
+    return lm.lm_prefill_chunk(params, cfg, toks, cache, tables, hist,
+                               plen, last_pos)
+
+
 class Scheduler:
-    """Continuous-batching scheduler over a slot-based KV-cache pool."""
+    """Continuous-batching scheduler over a paged KV-cache pool."""
 
     def __init__(self, cfg: ModelConfig, params, num_slots: int = 8,
                  max_len: int = 1024, block_size: int = 16,
                  num_blocks: Optional[int] = None,
+                 max_seq: Optional[int] = None,
+                 layout: str = "paged",
                  policy: str = "continuous",
+                 prefill_chunk: int = 0,
+                 prefix_sharing: bool = True,
                  max_prefills_per_step: int = 1,
                  min_prefill_bucket: int = 8,
-                 registry=None, watch_every: int = 0):
+                 registry=None, watch_every: int = 0,
+                 swap_mode: str = "immediate"):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
+        if layout not in ("paged", "dense"):
+            raise ValueError(f"unknown layout {layout!r}")
+        if swap_mode not in ("immediate", "drain"):
+            raise ValueError(f"unknown swap_mode {swap_mode!r}")
         if cfg.family == "vlm":
             raise ValueError(
                 "serving scheduler supports token-input families only "
@@ -108,24 +149,51 @@ class Scheduler:
         self.cfg = cfg
         self.params = params
         self.policy = policy
+        self.layout = layout
+        self.paged = layout == "paged"
+        self.prefill_chunk = int(prefill_chunk)
         self.max_prefills_per_step = max_prefills_per_step
         self.min_prefill_bucket = min_prefill_bucket
         self.registry = registry
         self.watch_every = watch_every
-        self.pool = CachePool(cfg, num_slots, max_len,
-                              block_size=block_size, num_blocks=num_blocks)
+        self.swap_mode = swap_mode
+        n_blocks = num_blocks if num_blocks is not None \
+            else num_slots * blocks_for(max_len, block_size)
+        if self.paged:
+            self.pool = PagedCachePool(cfg, num_slots, n_blocks,
+                                       block_size=block_size,
+                                       max_seq=max_seq or max_len)
+            self.max_seq = self.pool.max_seq
+        else:
+            if max_seq is not None and max_seq != max_len:
+                raise ValueError("layout='dense' caps requests at max_len")
+            self.pool = CachePool(cfg, num_slots, max_len,
+                                  block_size=block_size,
+                                  num_blocks=num_blocks)
+            self.max_seq = max_len
         # right-padding prompts is only sound for pure-attention stacks:
         # recurrent layers (mamba/xLSTM) would fold padding into their
         # state, so those families prefill at exact prompt length
-        # (one compile per distinct length instead of per bucket).
+        # (one compile per distinct length instead of per bucket) —
+        # and one-shot: chunked prefill needs mid-prompt resume, which
+        # only the paged attention path supports.
         self._can_pad = all(s.kind == "a" for s in lm.layer_specs(cfg))
+        self._chunked = self.paged and self._can_pad
+        self.prefix_sharing = bool(prefix_sharing) and self._chunked
         self.queue: deque[Request] = deque()
         self.active: Dict[Any, _Active] = {}
+        self.prefilling: Dict[Any, _Active] = {}
         self._by_slot: Dict[int, _Active] = {}
         self._next_token = np.zeros((num_slots,), np.int32)
-        self._index = np.zeros((num_slots,), np.int32)
+        # paged decode uses -1 as the "row holds no request" sentinel
+        # (KV writes route to the null page); dense keeps 0 (the row is
+        # the slot's own, writes are harmless)
+        self._idle_index = -1 if self.paged else 0
+        self._index = np.full((num_slots,), self._idle_index, np.int32)
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = ServeStats(slots=num_slots)
+        self._pending_params = None
+        self._head_share = None
         self._step_count = 0
 
     # -- request intake ----------------------------------------------------
@@ -135,15 +203,16 @@ class Scheduler:
 
     def submit(self, req: Request) -> None:
         total = req.prompt_len + req.max_new
-        if req.rid in self.active or req.rid in self.results or \
+        if req.rid in self.active or req.rid in self.prefilling or \
+                req.rid in self.results or \
                 any(q.rid == req.rid for q in self.queue):
             self._reject(f"duplicate request id {req.rid!r}")
         if req.prompt_len < 1 or req.max_new < 1:
             self._reject("need a non-empty prompt and max_new >= 1")
-        if total > self.pool.max_len:
+        if total > self.max_seq:
             self._reject(
-                f"request {req.rid!r} needs {total} tokens > pool max_len "
-                f"{self.pool.max_len}")
+                f"request {req.rid!r} needs {total} tokens > the "
+                f"per-request cap (max_len/max_seq {self.max_seq})")
         if blocks_for(total, self.pool.blocks.block_size) \
                 > self.pool.blocks.num_blocks:
             self._reject(
@@ -158,16 +227,53 @@ class Scheduler:
         self.queue.append(req)
 
     # -- scheduling ---------------------------------------------------------
-    def _bucket(self, n: int) -> int:
+    def _bucket(self, n: int, cap: Optional[int] = None) -> int:
         if not self._can_pad:
             return n
-        return min(max(self.min_prefill_bucket, _next_pow2(n)),
-                   self.pool.max_len)
+        cap = cap or self.max_seq
+        return min(max(self.min_prefill_bucket, _next_pow2(n)), cap)
+
+    def _can_admit_head(self) -> bool:
+        req = self.queue[0]
+        total = req.prompt_len + req.max_new
+        if not self.paged:
+            return self.pool.can_admit(total)
+        if not self.pool.free_slots:    # skip prefix hashing when full
+            return False
+        self._head_share = None
+        if self.prefix_sharing:
+            # cache the match: _admit reuses it instead of re-hashing
+            self._head_share = (req.rid,
+                                self.pool.find_shared_prefix(req.prompt))
+        shared = len(self._head_share[1][0]) if self._head_share else 0
+        return self.pool.can_admit(total, shared_blocks=shared)
 
     def _admit(self, req: Request) -> None:
         P = req.prompt_len
-        self.pool.admit(req.rid, P + req.max_new)
-        slot = self.pool.slot_of(req.rid)
+        total = P + req.max_new
+        if not self.paged:
+            self.pool.admit(req.rid, total)
+            slot = self.pool.slot_of(req.rid)
+            self._prefill_dense(req, slot)
+            return
+        head = getattr(self, "_head_share", None)
+        shared = head[1] if head is not None and head[0] == req.rid \
+            else None
+        self._head_share = None
+        slot, shared_len = self.pool.admit(
+            req.rid, total, shared=shared,
+            prompt=req.prompt if self.prefix_sharing else None)
+        act = _Active(req=req, slot=slot, pf_pos=shared_len,
+                      submit_t=getattr(req, "_submit_t",
+                                       time.perf_counter()))
+        if self._chunked:
+            # chunk slices run in _prefill_step, interleaved with decode
+            self.prefilling[req.rid] = act
+        else:
+            self._prefill_onepass_paged(act)
+
+    def _prefill_dense(self, req: Request, slot: int) -> None:
+        P = req.prompt_len
         bucket = self._bucket(P)
         toks = np.zeros((1, bucket), np.int32)
         toks[0, :P] = req.prompt
@@ -177,13 +283,80 @@ class Scheduler:
         self.pool.insert(req.rid, cache)
         act = _Active(req=req, slot=slot, submit_t=getattr(
             req, "_submit_t", time.perf_counter()))
-        self.active[req.rid] = act
-        self._by_slot[slot] = act
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += bucket
-        tok = self._sample(np.asarray(logits[0, -1].astype(jnp.float32)),
-                           req, 0)
+        self._start_decoding(act, np.asarray(logits[0, -1]
+                                             .astype(jnp.float32)))
+
+    def _prefill_onepass_paged(self, act: _Active) -> None:
+        """Exact-length one-shot prefill + page scatter (recurrent /
+        hybrid families: their state cannot resume mid-prompt)."""
+        req = act.req
+        P = req.prompt_len
+        toks = req.prompt[None, :].astype(np.int32)
+        logits, cache = _prefill_fn(
+            self.params, self.cfg, jnp.asarray(toks),
+            jnp.asarray([P - 1], jnp.int32))
+        self.pool.insert_prefill(req.rid, cache, P)
+        self.stats.prefills += 1
+        self.stats.prefill_tokens += P
+        self.stats.padded_prefill_tokens += P
+        self._start_decoding(act, np.asarray(logits[0, -1]
+                                             .astype(jnp.float32)))
+
+    def _prefill_step(self) -> None:
+        """Advance chunked prefills: one chunk per prefilling request,
+        at most ``max_prefills_per_step`` chunk calls per step."""
+        done = 0
+        for act in list(self.prefilling.values()):
+            if done >= self.max_prefills_per_step:
+                break
+            self._prefill_chunk_once(act)
+            done += 1
+
+    def _prefill_chunk_once(self, act: _Active) -> None:
+        req = act.req
+        P = req.prompt_len
+        # one-shot (prefill_chunk=0) still buckets the chunk size, so a
+        # mixed-length trace compiles per pow2 bucket, not per length
+        chunk = self.prefill_chunk if self.prefill_chunk > 0 \
+            else self._bucket(P)
+        n = min(chunk, P - act.pf_pos)
+        final = act.pf_pos + n >= P
+        Cb = chunk if (not final or n == chunk) \
+            else self._bucket(n, cap=chunk)
+        toks = np.zeros((1, Cb), np.int32)
+        toks[0, :n] = req.prompt[act.pf_pos:act.pf_pos + n]
+        self.pool.ensure(req.rid, act.pf_pos + n)
+        W = self._table_bucket(act.pf_pos + n)
+        logits, self.pool.cache = _chunk_fn(
+            self.params, self.cfg, jnp.asarray(toks), self.pool.cache,
+            jnp.asarray(self.pool.tables[act.slot:act.slot + 1, :W]),
+            jnp.int32(act.pf_pos), jnp.int32(P),
+            jnp.asarray([n - 1], jnp.int32))
+        act.pf_pos += n
+        self.stats.prefills += 1
+        self.stats.prefill_chunks += 1
+        self.stats.prefill_tokens += n
+        self.stats.padded_prefill_tokens += Cb
+        if self.prefix_sharing:
+            # pages fully covered by prefilled prompt tokens are
+            # immutable from here on — offer them to future admissions
+            # immediately, not only when the whole prompt is done
+            self.pool.register_prefix(req.rid, req.prompt[:act.pf_pos])
+        if final:
+            del self.prefilling[req.rid]
+            self._start_decoding(act, np.asarray(logits[0, -1]
+                                                 .astype(jnp.float32)))
+
+    def _start_decoding(self, act: _Active, last_logits: np.ndarray) -> None:
+        """Sample the first token off the prefill logits and move the
+        request into the decode batch."""
+        req = act.req
+        self.active[req.rid] = act
+        self._by_slot[act.slot] = act
+        tok = self._sample(last_logits, req, 0)
         act.first_token_t = time.perf_counter()
         self.stats.ttft.append(act.first_token_t - act.submit_t)
         self._accept_token(act, tok)
@@ -220,46 +393,82 @@ class Scheduler:
         del self.active[rid]
         del self._by_slot[slot]
         self._next_token[slot] = 0
-        self._index[slot] = 0
+        self._index[slot] = self._idle_index
 
     def set_params(self, params) -> None:
-        """Hot-swap model weights between steps (cache layout unchanged)."""
+        """Hot-swap model weights between steps (cache layout unchanged;
+        the prefix cache is flushed — old-weight pages must not be
+        shared into post-swap admissions)."""
         self.params = params
+        if self.paged:
+            self.pool.invalidate_prefix()
+            self._head_share = None
         self.stats.hot_swaps += 1
 
+    @property
+    def draining(self) -> bool:
+        """True while new weights wait for in-flight requests to finish."""
+        return self._pending_params is not None
+
     def _maybe_hot_swap(self) -> None:
-        if self.registry is None or self.watch_every <= 0:
-            return
-        if self._step_count % self.watch_every:
-            return
-        if self.registry.refresh():
-            self.set_params(self.registry.params)
+        if self.registry is not None and self.watch_every > 0 \
+                and self._step_count % self.watch_every == 0 \
+                and self.registry.refresh():
+            if self.swap_mode == "drain" and (self.active
+                                              or self.prefilling):
+                self._pending_params = self.registry.params
+            else:
+                self._pending_params = None
+                self.set_params(self.registry.params)
+        if self._pending_params is not None and not self.active \
+                and not self.prefilling:
+            self.set_params(self._pending_params)
+            self._pending_params = None
 
     def step(self) -> None:
-        """One scheduler iteration: hot-swap check, admission (prefill),
-        one batched decode step, completion."""
+        """One scheduler iteration: hot-swap check, admission, chunked
+        prefill, one batched decode step, completion."""
         self.stats.start()
         self._maybe_hot_swap()
         self._step_count += 1
-        # -- admission
-        if self.policy == "static":
-            if not self.active:
-                while self.queue and self.pool.can_admit(
-                        self.queue[0].prompt_len + self.queue[0].max_new):
+        # -- admission (paused while draining onto new weights)
+        in_flight = bool(self.active or self.prefilling)
+        if self.draining:
+            pass
+        elif self.policy == "static":
+            if not in_flight:
+                while self.queue and self._can_admit_head():
                     self._admit(self.queue.popleft())
         else:
             admitted = 0
             while (admitted < self.max_prefills_per_step and self.queue
-                   and self.pool.can_admit(
-                       self.queue[0].prompt_len + self.queue[0].max_new)):
+                   and self._can_admit_head()):
                 self._admit(self.queue.popleft())
                 admitted += 1
+        # -- chunked prefill slices (interleaved with decode)
+        if self.prefilling:
+            self._prefill_step()
         # -- one decode step over the pool (per-slot write indices)
         if self.active:
             tokens = jnp.asarray(self._next_token[:, None])
             index = jnp.asarray(self._index)
-            logits, self.pool.cache = _decode_fn(
-                self.params, self.cfg, tokens, self.pool.cache, index)
+            if self.paged:
+                bs = self.pool.block_size
+                for act in self.active.values():
+                    # a new page is only ever needed when the write
+                    # position lands on a page boundary (ensure is
+                    # idempotent; skip the bookkeeping otherwise)
+                    idx = int(self._index[act.slot])
+                    if idx % bs == 0:
+                        self.pool.ensure(act.req.rid, idx + 1)
+                W = self._table_bucket(int(self._index.max()) + 1)
+                tables = jnp.asarray(self.pool.tables[:, :W])
+                logits, self.pool.cache = _decode_paged_fn(
+                    self.params, self.cfg, tokens, self.pool.cache,
+                    index, tables)
+            else:
+                logits, self.pool.cache = _decode_fn(
+                    self.params, self.cfg, tokens, self.pool.cache, index)
             rows = np.asarray(logits.astype(jnp.float32))
             self.stats.decode_steps += 1
             self.stats.decode_slot_steps += self.pool.num_slots
@@ -267,13 +476,21 @@ class Scheduler:
             for act in list(self.active.values()):
                 tok = self._sample(rows[act.slot, 0], act.req, act.ntok)
                 self._accept_token(act, tok)
-        self.stats.sample_step(len(self.queue), len(self.active))
+        self.stats.sample_step(len(self.queue),
+                               len(self.active) + len(self.prefilling))
+
+    def _table_bucket(self, max_tokens: int) -> int:
+        """Gather width (block-table columns) for this step: pow2-
+        bucketed so compile count stays logarithmic while short batches
+        never pay max_seq-width attention."""
+        w = self.pool.table_width_for(max_tokens)
+        return min(_next_pow2(w), self.pool.max_blocks_per_seq)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[Any, np.ndarray]:
         """Drive until the queue and the batch drain; returns results
         (rid -> generated token ids)."""
         steps = 0
-        while self.queue or self.active:
+        while self.queue or self.active or self.prefilling:
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:

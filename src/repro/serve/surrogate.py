@@ -8,12 +8,22 @@ rows per step and padded to a bucket so the jitted forward compiles for
 a bounded set of shapes.  A :class:`repro.serve.registry.ModelRegistry`
 can be attached for the same between-steps winner hot-swap the LM
 scheduler does.
+
+**Host/device overlap** — the same double-buffering the datastore's
+:class:`repro.datastore.store.PrefetchLoader` applies to training
+batches, in software-pipeline form: each ``step`` (1) dispatches the
+device forward for the batch staged on the previous step (JAX dispatch
+is async), (2) stages the NEXT micro-batch — drain, concatenate, pad —
+while the device is busy, and only then (3) blocks on the in-flight
+result and distributes it.  Host staging therefore costs zero
+wall-clock whenever the device compute is longer, instead of
+serializing with it as it did pre-paged-attention.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +32,9 @@ import numpy as np
 from repro.configs.icf_cyclegan import CycleGANConfig
 from repro.models import icf_cyclegan as cg
 from repro.serve.metrics import ServeStats
+
+# a staged micro-batch: (taken queue items, true rows, padded array)
+_Staged = Tuple[List[Tuple[Any, np.ndarray, float]], int, np.ndarray]
 
 
 class SurrogateEngine:
@@ -40,6 +53,11 @@ class SurrogateEngine:
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = ServeStats(slots=max_batch)
         self._step_count = 0
+        # software pipeline state: the batch staged for the next
+        # dispatch, and the batch whose device compute is in flight
+        self._staged: Optional[_Staged] = None
+        self._pending: Optional[Tuple[List, int, int, jax.Array]] = None
+        self.overlapped_stages = 0
 
     def submit(self, rid: Any, x: np.ndarray) -> None:
         """x: (n, input_dim) float batch of experiment-parameter rows."""
@@ -56,15 +74,9 @@ class SurrogateEngine:
         b = self.bucket
         return ((n + b - 1) // b) * b
 
-    def step(self) -> None:
-        """Serve one micro-batch off the queue."""
-        self.stats.start()
-        self._step_count += 1
-        if (self.registry is not None and self.watch_every > 0
-                and self._step_count % self.watch_every == 0
-                and self.registry.refresh()):
-            self.params = self.registry.params
-            self.stats.hot_swaps += 1
+    def _stage(self) -> Optional[_Staged]:
+        """Drain up to max_batch rows off the queue and assemble the
+        padded host array (the host work the pipeline overlaps)."""
         taken, rows = [], 0
         while self.queue and rows + self.queue[0][1].shape[0] \
                 <= self.max_batch:
@@ -78,15 +90,24 @@ class SurrogateEngine:
             taken.append(item)
             rows = item[1].shape[0]
         if not taken:
-            self.stats.sample_step(len(self.queue), 0)
-            return
+            return None
         x = np.concatenate([t[1] for t in taken])
         padded = self._pad(rows)
         if padded > rows:
             x = np.concatenate([x, np.zeros((padded - rows, x.shape[1]),
                                             np.float32)])
-        y = np.asarray(self._forward(self.params, jnp.asarray(x))
-                       .astype(jnp.float32))
+        return taken, rows, x
+
+    def _dispatch(self, staged: _Staged) -> None:
+        taken, rows, x = staged
+        y = self._forward(self.params, jnp.asarray(x))   # async dispatch
+        self._pending = (taken, rows, x.shape[0], y)
+
+    def _collect(self) -> None:
+        """Block on the in-flight forward and distribute its results."""
+        taken, rows, padded, y = self._pending
+        self._pending = None
+        y = np.asarray(y.astype(jnp.float32))
         now = time.perf_counter()
         off = 0
         for rid, q, t0 in taken:
@@ -104,12 +125,39 @@ class SurrogateEngine:
         self.stats.decode_slot_steps += padded
         self.stats.sample_step(len(self.queue), rows)
 
+    def step(self) -> None:
+        """One pipeline step: dispatch the staged batch, stage the next
+        one while the device computes, then collect."""
+        self.stats.start()
+        self._step_count += 1
+        if (self.registry is not None and self.watch_every > 0
+                and self._step_count % self.watch_every == 0
+                and self.registry.refresh()):
+            self.params = self.registry.params
+            self.stats.hot_swaps += 1
+        staged = self._staged if self._staged is not None else self._stage()
+        self._staged = None
+        if staged is not None:
+            self._dispatch(staged)
+        # overlap: assemble the NEXT micro-batch while the device is
+        # busy with the one just dispatched
+        self._staged = self._stage()
+        if self._pending is not None:
+            if self._staged is not None:
+                self.overlapped_stages += 1
+            self._collect()
+        else:
+            self.stats.sample_step(len(self.queue), 0)
+
     def run(self, max_steps: Optional[int] = None) -> Dict[Any, np.ndarray]:
         steps = 0
-        while self.queue:
+        while self.queue or self._staged is not None \
+                or self._pending is not None:
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
+        if self._pending is not None:    # flush the in-flight batch
+            self._collect()
         self.stats.stop()
         return self.results
