@@ -19,11 +19,20 @@ through three configurations at EQUAL KV-cache memory:
     The same memory holds 2x the decode slots because pages are shared;
     the long request is admitted; the shared system prompt prefills
     once and is then mapped, not recomputed.
+  * ``spec``     — the paged configuration plus population speculative
+    decoding through the same DecodeSession API: a drafter proposes
+    SPEC_TOKENS tokens per round and the target verifies them in one
+    multi-token step.  The drafter here is the target itself — the
+    accept-rate UPPER BOUND (a real deployment drafts with an earlier
+    LTFB population checkpoint); the arm proves the mechanics and
+    asserts token-identical output vs ``paged``.
 
 Reported per config: wall-clock tokens/s, time-to-first-token
-(mean/p95), decode steps, page high-water, prefix-cache hits.  With
-``--json PATH`` the summary is written as ``BENCH_serving.json`` so CI
-tracks the perf trajectory across PRs.
+(mean/p95), decode steps, page high-water, prefix-cache hits, and for
+``spec`` the draft accept-rate.  With ``--json PATH`` the summary is
+written as ``BENCH_serving.json`` so CI tracks the perf trajectory
+across PRs; the script exits nonzero on any correctness assertion, and
+CI fails the step rather than uploading a stale artifact.
 """
 from __future__ import annotations
 
@@ -56,6 +65,8 @@ NUM_BLOCKS = POOL_TOKENS // BLOCK_SIZE
 PAGED_SLOTS = 8
 # the beyond-ceiling request: admissible only under the paged layout
 LONG_PROMPT, LONG_NEW = 96, 24
+# draft tokens per speculative round (the spec arm)
+SPEC_TOKENS = 3
 
 
 def build_trace(cfg, n_requests: int, seed: int = 0, with_long: bool = True):
@@ -92,10 +103,17 @@ def make_scheduler(cfg, params, mode: str) -> Scheduler:
         cfg, params, num_slots=PAGED_SLOTS, max_len=DENSE_MAX_LEN,
         block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS, layout="paged",
         max_seq=LONG_PROMPT + LONG_NEW, prefill_chunk=2 * BLOCK_SIZE,
-        max_prefills_per_step=3, policy="continuous")
+        max_prefills_per_step=3, policy="continuous",
+        # self-draft: the accept-rate upper bound (a deployment drafts
+        # with an earlier/smaller LTFB population checkpoint instead)
+        draft_params=params if mode == "spec" else None,
+        spec_tokens=SPEC_TOKENS if mode == "spec" else 0)
 
 
-def serve_once(cfg, params, reqs, mode: str) -> Scheduler:
+def serve_once(cfg, params, reqs, mode: str) -> dict:
+    """Serve the trace once; returns only the summary dicts + results
+    so the scheduler (and its device page pools — two full pools for
+    the spec arm) can be collected between repeats."""
     sched = make_scheduler(cfg, params, mode)
     for r in reqs:
         try:
@@ -104,7 +122,10 @@ def serve_once(cfg, params, reqs, mode: str) -> Scheduler:
         except ValueError:
             pass                    # counted in the rejected stat
     sched.run()
-    return sched
+    d = sched.stats.as_dict()
+    d.update({f"pool_{k}": v for k, v in sched.pool.as_dict().items()})
+    d["_results"] = sched.results
+    return d
 
 
 def run(report: CsvReport, quick: bool = False, json_path: str = None):
@@ -117,7 +138,7 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
     # misses chunk/table-width shape buckets and the measured run pays
     # the compile), then run the configs round-robin and report each
     # one's median of 5, so slow-machine drift hits all configs alike
-    modes = ("static", "dense", "paged")
+    modes = ("static", "dense", "paged", "spec")
     for mode in modes:
         serve_once(cfg, params, reqs, mode)
     runs = {m: [] for m in modes}
@@ -127,10 +148,7 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
 
     out = {}
     for mode in modes:
-        sched = sorted(runs[mode],
-                       key=lambda s: s.stats.as_dict()["tokens_per_s"])[2]
-        d = sched.stats.as_dict()
-        d.update({f"pool_{k}": v for k, v in sched.pool.as_dict().items()})
+        d = sorted(runs[mode], key=lambda r: r["tokens_per_s"])[2]
         out[mode] = d
         util = d["decode_tokens"] / max(d["decode_slot_steps"], 1)
         print(f"# fig14 {mode}: {d['tokens_per_s']:.1f} tok/s "
@@ -159,24 +177,46 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
           f"shared_tokens={out['paged']['pool_prefix_shared_tokens']} "
           f"prefill_chunks={out['paged']['prefill_chunks']}")
 
+    # speculative decoding must be TOKEN-IDENTICAL to the paged arm
+    # (temperature 0): every emitted token is a target sample
+    for rid, toks in out["paged"]["_results"].items():
+        assert out["spec"]["_results"][rid].tolist() == toks.tolist(), \
+            f"spec arm diverged from target-only decode on {rid!r}"
+    print(f"# fig14 spec == paged token-identical "
+          f"({out['spec']['completed']} requests); accept_rate="
+          f"{out['spec']['spec_accept_rate'] * 100:.0f}% "
+          f"(self-draft upper bound, K={SPEC_TOKENS}) "
+          f"verify_rounds={out['spec']['spec_rounds']} "
+          f"vs paged decode_steps={out['paged']['decode_steps']}")
+
     cont = out["dense"]["tokens_per_s"] / \
         max(out["static"]["tokens_per_s"], 1e-9)
     paged = out["paged"]["tokens_per_s"] / \
         max(out["dense"]["tokens_per_s"], 1e-9)
+    spec = out["spec"]["tokens_per_s"] / \
+        max(out["paged"]["tokens_per_s"], 1e-9)
     print(f"# fig14 continuous/static tokens/s speedup: {cont:.2f}x")
     print(f"# fig14 paged+chunked/dense-continuous tokens/s speedup "
           f"(equal memory): {paged:.2f}x")
+    print(f"# fig14 spec/paged tokens/s ratio (self-draft upper bound, "
+          f"CPU oracle): {spec:.2f}x")
     report.add("fig14_continuous_speedup", cont * 100, f"{cont:.2f}x")
     report.add("fig14_paged_speedup", paged * 100, f"{paged:.2f}x")
+    report.add("fig14_spec_speedup", spec * 100, f"{spec:.2f}x")
+    report.add("fig14_spec_accept_rate",
+               out["spec"]["spec_accept_rate"] * 100,
+               f"{out['spec']['spec_accept_rate'] * 100:.0f}%")
 
     if json_path:
         summary = {
             "trace": {"requests": len(reqs), "sys_prefix": SYS_LEN,
                       "pool_tokens": POOL_TOKENS,
                       "dense_max_len": DENSE_MAX_LEN,
-                      "long_request": LONG_PROMPT + LONG_NEW},
+                      "long_request": LONG_PROMPT + LONG_NEW,
+                      "spec_tokens": SPEC_TOKENS},
             "speedup_paged_vs_dense": paged,
             "speedup_continuous_vs_static": cont,
+            "speedup_spec_vs_paged": spec,
             "configs": {m: {
                 "tokens_per_s": d["tokens_per_s"],
                 "ttft_mean_s": d["ttft_mean_s"],
@@ -188,6 +228,10 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
                 "prefix_hits": d.get("pool_prefix_hits", 0),
                 "prefix_shared_tokens":
                     d.get("pool_prefix_shared_tokens", 0),
+                "spec_accept_rate": d.get("spec_accept_rate", 0.0),
+                "spec_rounds": d.get("spec_rounds", 0),
+                "spec_draft_accepted": d.get("spec_draft_accepted", 0),
+                "spec_draft_proposed": d.get("spec_draft_proposed", 0),
             } for m, d in out.items()},
         }
         with open(json_path, "w") as f:

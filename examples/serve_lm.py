@@ -6,7 +6,16 @@ KV-cache pool, interleaves prefill of new requests with batched decode
 of in-flight ones, and frees slots per-request on completion — compare
 with the static (pad-to-max) baseline by passing --policy static.
 
+Every model call runs through ONE DecodeSession (the family-agnostic
+decode API): pass --spec-tokens K to decode speculatively — a drafter
+proposes K tokens per round and the target verifies them in a single
+multi-token session.step, with token-identical output (here the
+drafter is the model itself, the accept-rate upper bound; in
+production it is an earlier LTFB population checkpoint, see
+`python -m repro.launch.serve --draft-ckpt`).
+
   PYTHONPATH=src python examples/serve_lm.py [--tokens 24]
+  PYTHONPATH=src python examples/serve_lm.py --spec-tokens 4
 """
 import argparse
 import os
@@ -31,6 +40,9 @@ def main():
     ap.add_argument("--tokens", type=int, default=24)
     ap.add_argument("--policy", default="continuous",
                     choices=("continuous", "static"))
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="speculative decoding: draft tokens per round "
+                         "(self-draft demo; 0 = off)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -41,7 +53,9 @@ def main():
     lens = parse_lens(args.prompt_lens)
     max_len = max(lens) + args.tokens
     sched = Scheduler(cfg, params, num_slots=args.slots, max_len=max_len,
-                      policy=args.policy)
+                      policy=args.policy,
+                      draft_params=params if args.spec_tokens > 0 else None,
+                      spec_tokens=args.spec_tokens)
     for r in build_requests(cfg, args.requests, lens, args.tokens, seed=1):
         sched.submit(r)
     results = sched.run()

@@ -34,13 +34,16 @@ def flash_attention(q, k, v, causal: bool = True, block_q: int = 128,
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, tables, lengths,
                     interpret: bool = None):
-    """Gather-decode attention over scattered KV pages.
+    """Gather-decode/verify attention over scattered KV pages.
 
-    q: (B, H, D); k_pages/v_pages: (P, bs, Hkv, D); tables: (B, W);
-    lengths: (B,) -> (B, H, D).  Runs the Pallas kernel compiled on
-    TPU and in interpret mode when explicitly requested (tests); the
-    CPU serving path uses the jnp oracle directly — interpret mode
-    executes the grid in Python and is far too slow for a decode loop.
+    q: (B, H, D), or (B, K, H, D) for a K-token speculative-verify
+    step; k_pages/v_pages: (P, bs, Hkv, D); tables: (B, W); lengths:
+    (B,) valid KV tokens for the FIRST query of each row (query t sees
+    ``lengths + t``) -> same rank as q.  Runs the Pallas kernel
+    compiled on TPU and in interpret mode when explicitly requested
+    (tests); the CPU serving path uses the jnp oracle directly —
+    interpret mode executes the grid in Python and is far too slow for
+    a decode loop.
     """
     if interpret is None:
         if not _on_tpu():

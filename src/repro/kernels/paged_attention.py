@@ -1,26 +1,31 @@
-"""Pallas TPU paged-attention decode kernel (gather over scattered KV
-pages).
+"""Pallas TPU paged-attention decode/verify kernel (gather over
+scattered KV pages).
 
 The serving pool stores each layer's KV cache as one
 ``(num_pages + 1, block_size, n_kv_heads, head_dim)`` array; a request's
 tokens live in whatever pages its block table names, in logical order
 but physically scattered (the last page, index ``num_pages``, is the
 null page that inactive batch rows point at).  This kernel computes
-single-token decode attention for a batch of requests directly against
-that layout:
+decode attention for a batch of requests directly against that layout,
+for ``K >= 1`` query tokens per row — K = 1 is the classic decode step,
+K > 1 is the speculative-decoding verify step where the K queries of a
+row are consecutive positions of the same request:
 
   * grid = (batch, kv_heads, table_width) with the page dimension
-    innermost, so the (group, head_dim) accumulator lives in VMEM
+    innermost, so the (K * group, head_dim) accumulator lives in VMEM
     scratch across a request's page sweep;
   * the block table and per-row sequence lengths ride in as
     **scalar-prefetch** operands (``pltpu.PrefetchScalarGridSpec``): the
     K/V BlockSpec index_map reads ``tables[b, p]`` to DMA the right
     physical page HBM->VMEM — the gather never materializes a
     contiguous copy of the request's KV;
-  * pages past a request's length are skipped via ``pl.when`` (their
-    table entries are the null page), and the tail page is masked
-    positionwise against ``lengths[b]``;
-  * GQA is expressed by blocking q as (kv_heads, group) so q head
+  * per-query causality: query t of row b attends over
+    ``lengths[b] + t`` tokens (the intra-block staircase a K-token
+    verify needs), expressed as a per-accumulator-row position bound;
+  * pages wholly past every query's reach are skipped via ``pl.when``
+    (their table entries are the null page), and the tail page is
+    masked positionwise;
+  * GQA is expressed by blocking q as (kv_heads, K * group) so q head
     ``h*g+j`` meets kv head ``h`` without duplication.
 
 Numerics match ``repro.kernels.ref.paged_attention_ref``: online
@@ -51,7 +56,8 @@ NEG_INF = -1e30
 
 
 def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
-            acc_ref, m_ref, l_ref, *, scale: float, block_size: int):
+            acc_ref, m_ref, l_ref, *, scale: float, block_size: int,
+            group: int, k_tokens: int):
     b = pl.program_id(0)
     p = pl.program_id(2)
     num_p = pl.num_programs(2)
@@ -63,18 +69,23 @@ def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    # pages wholly past the request's length hold either the null page
-    # or stale state — skip the compute, keep the accumulator
-    @pl.when(p * block_size < length)
+    # pages wholly past the LAST query's reach hold either the null
+    # page or stale state — skip the compute, keep the accumulator
+    @pl.when(p * block_size < length + k_tokens - 1)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32) * scale       # (g, d)
+        rows = q_ref.shape[2]                             # K * g
+        q = q_ref[0, 0].astype(jnp.float32) * scale       # (K*g, d)
         k = k_ref[0, :, 0].astype(jnp.float32)            # (bs, d)
         v = v_ref[0, :, 0].astype(jnp.float32)            # (bs, d)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)
         pos = p * block_size + jax.lax.broadcasted_iota(
-            jnp.int32, (q.shape[0], block_size), 1)
-        s = jnp.where(pos < length, s, NEG_INF)           # tail-page mask
+            jnp.int32, (rows, block_size), 1)
+        # accumulator row r is query token r // group: it reaches
+        # length + r // group tokens (intra-block causal staircase)
+        reach = length + jax.lax.broadcasted_iota(
+            jnp.int32, (rows, block_size), 0) // group
+        s = jnp.where(pos < reach, s, NEG_INF)            # tail-page mask
         m_prev = m_ref[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
         w = jnp.exp(s - m_new[:, None])
@@ -95,52 +106,63 @@ def _kernel(tables_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
 def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                     tables: jax.Array, lengths: jax.Array,
                     interpret: bool = False) -> jax.Array:
-    """Single-token decode attention over a paged KV pool.
+    """Decode/verify attention over a paged KV pool.
 
-    q: (B, H, D) current-step queries; k_pages/v_pages:
-    (num_pages [+1], block_size, Hkv, D) physical pools; tables: (B, W)
-    int32 physical page ids (logical page j of row b at ``tables[b,j]``,
-    null-page entries past the used length); lengths: (B,) int32 valid
-    KV tokens per row.  Returns (B, H, D).
+    q: (B, H, D) single-token queries, or (B, K, H, D) for K
+    consecutive query tokens per row (speculative verify);
+    k_pages/v_pages: (num_pages [+1], block_size, Hkv, D) physical
+    pools; tables: (B, W) int32 physical page ids (logical page j of
+    row b at ``tables[b,j]``, null-page entries past the used length);
+    lengths: (B,) int32 valid KV tokens for the FIRST query of each row
+    (query t sees ``lengths[b] + t``).  Returns the same rank as ``q``.
     """
     if _GRIDSPEC is None:  # pragma: no cover
         raise RuntimeError(
             "jax.experimental.pallas.tpu is unavailable in this build; "
             "use repro.kernels.ref.paged_attention_ref (ops."
             "paged_attention does this automatically off-TPU)")
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, K, H, D = q.shape
     _, bs, Hkv, _ = k_pages.shape
     W = tables.shape[1]
     assert H % Hkv == 0
     g = H // Hkv
     scale = 1.0 / math.sqrt(D)
-    qg = q.reshape(B, Hkv, g, D)
+    # fold the K query tokens into the accumulator rows: row t*g + j is
+    # (query token t, grouped head j) of kv head h
+    qg = q.reshape(B, K, Hkv, g, D).transpose(0, 2, 1, 3, 4) \
+          .reshape(B, Hkv, K * g, D)
 
-    kernel = functools.partial(_kernel, scale=scale, block_size=bs)
+    kernel = functools.partial(_kernel, scale=scale, block_size=bs,
+                               group=g, k_tokens=K)
     grid_spec = _GRIDSPEC(
         num_scalar_prefetch=2,
         grid=(B, Hkv, W),
         in_specs=[
-            pl.BlockSpec((1, 1, g, D),
+            pl.BlockSpec((1, 1, K * g, D),
                          lambda b, h, p, tbl, ln: (b, h, 0, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
             pl.BlockSpec((1, bs, 1, D),
                          lambda b, h, p, tbl, ln: (tbl[b, p], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, g, D),
+        out_specs=pl.BlockSpec((1, 1, K * g, D),
                                lambda b, h, p, tbl, ln: (b, h, 0, 0)),
         scratch_shapes=[
-            _VMEM((g, D), jnp.float32),
-            _VMEM((g,), jnp.float32),
-            _VMEM((g,), jnp.float32),
+            _VMEM((K * g, D), jnp.float32),
+            _VMEM((K * g,), jnp.float32),
+            _VMEM((K * g,), jnp.float32),
         ],
     )
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, D), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, K * g, D), q.dtype),
         interpret=interpret,
     )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
       qg, k_pages, v_pages)
-    return out.reshape(B, H, D)
+    out = out.reshape(B, Hkv, K, g, D).transpose(0, 2, 1, 3, 4) \
+             .reshape(B, K, H, D)
+    return out[:, 0] if squeeze else out

@@ -29,29 +29,42 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 def paged_attention_ref(q: jax.Array, k_pages: jax.Array,
                         v_pages: jax.Array, tables: jax.Array,
                         lengths: jax.Array) -> jax.Array:
-    """Gather-decode oracle over a paged KV pool (the jnp twin the
-    models use off-TPU).
+    """Gather-decode/verify oracle over a paged KV pool (the jnp twin
+    the models use off-TPU).
 
-    q: (B, H, D); k_pages/v_pages: (P, bs, Hkv, D); tables: (B, W)
-    int32 physical page ids; lengths: (B,) valid tokens per row.
-    Returns (B, H, D).  Gathers each row's pages into logical order and
-    runs masked decode attention; HBM traffic is O(B * W * bs) — the
-    Pallas kernel performs the same gather page-by-page in VMEM.
+    q: (B, H, D) single-token decode, or (B, K, H, D) for a K-token
+    verify step (speculative decoding: the K queries of one row are
+    consecutive positions of the same request); k_pages/v_pages:
+    (P, bs, Hkv, D); tables: (B, W) int32 physical page ids; lengths:
+    (B,) valid KV tokens for the FIRST query of each row — query t of a
+    row sees ``lengths[b] + t`` tokens, the intra-block causal
+    staircase.  Returns the same rank as ``q``.  Gathers each row's
+    pages into logical order and runs masked attention; HBM traffic is
+    O(B * W * bs) — the Pallas kernel performs the same gather
+    page-by-page in VMEM.  The gather width W should be bucketed by the
+    caller to the batch's true maximum page count (the scheduler
+    additionally GROUPS rows by pow2 width so one long request does not
+    widen every row's gather on CPU).
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, K, H, D = q.shape
     _, bs, Hkv, _ = k_pages.shape
     W = tables.shape[1]
     g = H // Hkv
     kg = k_pages[tables].reshape(B, W * bs, Hkv, D).astype(jnp.float32)
     vg = v_pages[tables].reshape(B, W * bs, Hkv, D).astype(jnp.float32)
-    qg = q.reshape(B, Hkv, g, D).astype(jnp.float32)
-    s = jnp.einsum("bhgd,bkhd->bhgk", qg, kg) / math.sqrt(D)
+    qg = q.reshape(B, K, Hkv, g, D).astype(jnp.float32)
+    s = jnp.einsum("bthgd,bkhd->bthgk", qg, kg) / math.sqrt(D)
     pos = jnp.arange(W * bs, dtype=jnp.int32)
-    valid = pos[None, :] < lengths[:, None]              # (B, W*bs)
-    s = jnp.where(valid[:, None, None, :], s, -jnp.inf)
+    lens = lengths[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]
+    valid = pos[None, None, :] < lens[..., None]         # (B, K, W*bs)
+    s = jnp.where(valid[:, :, None, None, :], s, -jnp.inf)
     w = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bhgk,bkhd->bhgd", w, vg)
-    return out.reshape(B, H, D).astype(q.dtype)
+    out = jnp.einsum("bthgk,bkhd->bthgd", w, vg)
+    out = out.reshape(B, K, H, D).astype(q.dtype)
+    return out[:, 0] if squeeze else out
 
 
 def rmsnorm_ref(x: jax.Array, scale: jax.Array,

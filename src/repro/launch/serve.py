@@ -70,15 +70,24 @@ def make_registry(args, like_params, metric_fn=None,
 
 def run_lm(args) -> Dict[str, object]:
     from repro.models.lm import init_lm
+    from repro.serve.registry import load_draft
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    params, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
-    registry = make_registry(args, params)
+    like, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
+    params = like
+    registry = make_registry(args, like)
     if registry is not None:
         params = registry.load()
         print(f"[serve] winner: step={registry.step} "
               f"trainer={registry.info.get('trainer')} "
               f"wins={registry.info.get('wins')}")
+    draft_params = None
+    if args.draft_ckpt:
+        draft_params, dinfo = load_draft(args.draft_ckpt, like,
+                                         step=args.draft_step)
+        print(f"[serve] drafter: {args.draft_ckpt} "
+              f"step={dinfo.get('step')} trainer={dinfo.get('trainer')} "
+              f"spec_tokens={args.spec_tokens}")
     max_len = args.max_len or max(
         parse_lens(args.prompt_lens)) + args.max_new
     sched = Scheduler(
@@ -87,9 +96,11 @@ def run_lm(args) -> Dict[str, object]:
         max_seq=args.max_seq, layout=args.layout,
         policy=args.policy, prefill_chunk=args.prefill_chunk,
         prefix_sharing=not args.no_prefix_sharing,
+        pin_prefix=args.pin_prefix,
         max_prefills_per_step=args.prefill_per_step,
         registry=registry, watch_every=args.watch_every,
-        swap_mode=args.swap_mode)
+        swap_mode=args.swap_mode,
+        draft_params=draft_params, spec_tokens=args.spec_tokens)
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
                           temperature=args.temperature, seed=args.seed)
@@ -98,7 +109,7 @@ def run_lm(args) -> Dict[str, object]:
           f"max_seq={sched.max_seq} block_size={args.block_size} "
           f"prefill_chunk={args.prefill_chunk} "
           f"swap_mode={args.swap_mode} requests={len(reqs)} "
-          f"max_new={args.max_new}")
+          f"max_new={args.max_new} spec_tokens={sched.spec_tokens}")
     for r in reqs:
         try:
             sched.submit(r)
@@ -114,6 +125,7 @@ def run_lm(args) -> Dict[str, object]:
     if args.layout == "paged":
         print(f"[serve] prefix-cache: hits={pd['prefix_hits']} "
               f"shared_tokens={pd['prefix_shared_tokens']} "
+              f"pinned={pd['pinned_blocks']} "
               f"prefill_chunks={sched.stats.prefill_chunks}")
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
@@ -197,6 +209,24 @@ def main(argv=None) -> int:
                          "attention-only families)")
     ap.add_argument("--no-prefix-sharing", action="store_true",
                     help="disable copy-on-admit prompt prefix sharing")
+    ap.add_argument("--pin-prefix", action="store_true",
+                    help="keep registered prompt-prefix pages resident "
+                         "across idle periods (eviction-priority tier; "
+                         "reclaimed oldest-first under pool pressure)")
+    # speculative decoding (population drafter)
+    ap.add_argument("--draft-ckpt", default=None,
+                    help="drafter checkpoint for speculative decoding: "
+                         "a .ckpt file, or a population dir (earliest "
+                         "step's winner by default) — the LTFB "
+                         "population is a free source of draft models")
+    ap.add_argument("--draft-step", type=int, default=None,
+                    help="population step to draft from (with a dir "
+                         "--draft-ckpt; default: earliest)")
+    ap.add_argument("--spec-tokens", type=int, default=0,
+                    help="draft tokens proposed per speculative round "
+                         "(0 = off); the target verifies K+1 tokens in "
+                         "one multi-token step — output is token-"
+                         "identical to target-only decoding")
     ap.add_argument("--swap-mode", default="immediate",
                     choices=("immediate", "drain"),
                     help="hot-swap policy: immediate applies new "
@@ -218,6 +248,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.draft_ckpt and args.spec_tokens <= 0:
+        args.spec_tokens = 4            # a drafter implies speculation
     workload = args.workload or \
         ("surrogate" if args.arch == "icf-cyclegan" else "lm")
     if workload == "surrogate":

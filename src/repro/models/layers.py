@@ -413,48 +413,55 @@ def attention_prefill(params: Params, cfg: ModelConfig, x: jax.Array,
 def attention_decode(params: Params, cfg: ModelConfig, x: jax.Array,
                      cache: Params, index: jax.Array,
                      positions: jax.Array):
-    """Single-token decode with a KV cache of static length S_max.
+    """K-token decode/verify with a KV cache of static length S_max.
 
-    x: (B, 1, d); cache['k'/'v']: (B, S_max, Hkv, D); index: scalar int32
-    write position (= current KV length), or an int32 (B,) vector of
-    per-row write positions (continuous batching: each cache row belongs
-    to a different request at a different length).  Returns
-    (out, new_cache).
+    x: (B, K, d) — K >= 1 consecutive tokens per row (K = 1 is the
+    classic decode step; K > 1 is the speculative-verify write/read);
+    cache['k'/'v']: (B, S_max, Hkv, D); index: scalar int32 write
+    position of the FIRST token (= current KV length), or an int32 (B,)
+    vector of per-row write positions (continuous batching: each cache
+    row belongs to a different request at a different length).  Token t
+    of row b is written at ``index[b] + t`` and attends causally over
+    positions ``<= index[b] + t``.  Writes past S_max are dropped —
+    they can only be speculative padding the caller rolls back.
+    Returns (out, new_cache).
     """
-    B, S1, _ = x.shape
-    assert S1 == 1
+    B, K, _ = x.shape
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     index = jnp.asarray(index, jnp.int32)
-    if index.ndim == 0:
+    if index.ndim == 0 and K == 1:
         k = jax.lax.dynamic_update_slice_in_dim(
             cache["k"], k_new.astype(cache["k"].dtype), index, axis=1)
         v = jax.lax.dynamic_update_slice_in_dim(
             cache["v"], v_new.astype(cache["v"].dtype), index, axis=1)
     else:
-        # per-row write: scatter one (Hkv, D) row per batch element —
-        # O(B*Hkv*D) traffic, independent of the pool's max_len
-        rows = jnp.arange(B, dtype=jnp.int32)
-        k = cache["k"].at[rows, index].set(
-            k_new[:, 0].astype(cache["k"].dtype))
-        v = cache["v"].at[rows, index].set(
-            v_new[:, 0].astype(cache["v"].dtype))
+        # per-(row, token) write: scatter K (Hkv, D) rows per batch
+        # element — O(B*K*Hkv*D) traffic, independent of max_len
+        idx_col = index[:, None] if index.ndim else \
+            jnp.full((B, 1), index, jnp.int32)
+        wpos = idx_col + jnp.arange(K, dtype=jnp.int32)[None, :]  # (B,K)
+        rows = jnp.broadcast_to(
+            jnp.arange(B, dtype=jnp.int32)[:, None], (B, K))
+        k = cache["k"].at[rows, wpos].set(
+            k_new.astype(cache["k"].dtype), mode="drop")
+        v = cache["v"].at[rows, wpos].set(
+            v_new.astype(cache["v"].dtype), mode="drop")
     k = constrain(k, "batch", "kv_seq", "kv_heads", "head_dim")
     v = constrain(v, "batch", "kv_seq", "kv_heads", "head_dim")
     S_max = k.shape[1]
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     g = H // Hkv
-    qh = q.reshape(B, Hkv, g, D)
-    scores = jnp.einsum("bhgd,bkhd->bhgk", qh, k,
+    qh = q.reshape(B, K, Hkv, g, D)
+    scores = jnp.einsum("bthgd,bkhd->bthgk", qh, k,
                         preferred_element_type=jnp.float32) / math.sqrt(D)
     pos = jnp.arange(S_max, dtype=jnp.int32)
-    if index.ndim == 0:
-        valid = (pos <= index)[None, None, None]
-    else:
-        valid = (pos[None, :] <= index[:, None])[:, None, None, :]
-    scores = jnp.where(valid, scores, -jnp.inf)
+    reach = (index if index.ndim else jnp.full((B,), index, jnp.int32))[
+        :, None] + jnp.arange(K, dtype=jnp.int32)[None, :]      # (B, K)
+    valid = pos[None, None, :] <= reach[..., None]              # (B,K,S)
+    scores = jnp.where(valid[:, :, None, None, :], scores, -jnp.inf)
     w = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("bhgk,bkhd->bhgd", w.astype(v.dtype), v)
-    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    out = jnp.einsum("bthgk,bkhd->bthgd", w.astype(v.dtype), v)
+    out = out.reshape(B, K, cfg.q_dim) @ params["wo"]
     return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
 
 
@@ -498,31 +505,44 @@ def _scatter_pages(pages: jax.Array, vals: jax.Array, page_ids: jax.Array,
 
 def attention_decode_paged(params: Params, cfg: ModelConfig, x: jax.Array,
                            cache: Params, index: jax.Array,
-                           positions: jax.Array, tables: jax.Array):
-    """Single-token decode against the paged pool.
+                           positions: jax.Array, tables: jax.Array,
+                           valid: Optional[jax.Array] = None):
+    """K-token decode/verify against the paged pool.
 
-    x: (B, 1, d); cache['k'/'v']: (P+1, bs, Hkv, D) shared pools;
-    index: int32 (B,) per-row write position, with -1 marking inactive
-    rows (their KV is routed to the null page and their output is
-    garbage the caller discards); tables: (B, W) int32 physical page
-    ids.  Returns (out, new_cache).
+    x: (B, K, d) — K >= 1 consecutive tokens per row; cache['k'/'v']:
+    (P+1, bs, Hkv, D) shared pools; index: int32 (B,) per-row write
+    position of the FIRST token, with -1 marking inactive rows (their
+    KV is routed to the null page and their output is garbage the
+    caller discards); tables: (B, W) int32 physical page ids; valid:
+    optional int32 (B,) count of real tokens per row — tokens t >=
+    valid[b] (speculative padding / replay no-ops) scatter to the null
+    page so they can never corrupt a page the row does not own yet.
+    Token t writes at ``index[b] + t`` and attends causally over
+    positions ``<= index[b] + t``.  Returns (out, new_cache).
     """
-    B, S1, _ = x.shape
-    assert S1 == 1
+    B, K, _ = x.shape
     q, k_new, v_new = _project_qkv(params, cfg, x, positions)
     bs = cache["k"].shape[1]
     null_page = cache["k"].shape[0] - 1
+    W = tables.shape[1]
     index = jnp.asarray(index, jnp.int32)
-    active = index >= 0
+    active = (index >= 0)[:, None]                        # (B, 1)
+    if valid is not None:
+        active = active & (jnp.arange(K, dtype=jnp.int32)[None, :]
+                           < jnp.asarray(valid, jnp.int32)[:, None])
     widx = jnp.maximum(index, 0)
-    page = jnp.take_along_axis(tables, (widx // bs)[:, None], axis=1)[:, 0]
+    wpos = widx[:, None] + jnp.arange(K, dtype=jnp.int32)[None, :]  # (B,K)
+    page = jnp.take_along_axis(tables, jnp.minimum(wpos // bs, W - 1),
+                               axis=1)
     page = jnp.where(active, page, null_page)
-    off = widx % bs
-    k = _scatter_pages(cache["k"], k_new[:, 0], page, off)
-    v = _scatter_pages(cache["v"], v_new[:, 0], page, off)
-    lengths = widx + 1
-    out = _paged_attention_dispatch(q[:, 0], k, v, tables, lengths)
-    out = out.reshape(B, 1, cfg.q_dim) @ params["wo"]
+    off = wpos % bs
+    k = _scatter_pages(cache["k"], k_new.reshape(B * K, *k_new.shape[2:]),
+                       page.reshape(-1), off.reshape(-1))
+    v = _scatter_pages(cache["v"], v_new.reshape(B * K, *v_new.shape[2:]),
+                       page.reshape(-1), off.reshape(-1))
+    lengths = widx + 1                       # KV tokens seen by query 0
+    out = _paged_attention_dispatch(q, k, v, tables, lengths)
+    out = out.reshape(B, K, cfg.q_dim) @ params["wo"]
     return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
 
 
@@ -570,6 +590,38 @@ def attention_chunk_paged(params: Params, cfg: ModelConfig, x: jax.Array,
     out = jnp.einsum("hgqk,khd->qhgd", w, vg).astype(x.dtype)
     out = out.reshape(1, C, cfg.q_dim) @ params["wo"]
     return constrain(out, "batch", "seq", "act_embed"), {"k": k, "v": v}
+
+
+def decode_scan(step_fn, x: jax.Array, state,
+                valid: Optional[jax.Array] = None):
+    """Drive a single-token recurrent decode step over K tokens.
+
+    ``step_fn(x_t (B, 1, d), state) -> (out (B, 1, d), new_state)`` is
+    any recurrent mixer's decode step (mamba / mLSTM / sLSTM); x is
+    (B, K, d).  With ``valid`` (int32 (B,)), rows stop updating their
+    state after ``valid[b]`` tokens — the masking that makes K-token
+    speculative steps and rollback replays safe for recurrent state
+    (tokens past ``valid`` still produce (garbage) outputs but leave
+    the carried state untouched).  Returns (out (B, K, d), new_state).
+    """
+    B, K, _ = x.shape
+    if K == 1 and valid is None:
+        return step_fn(x, state)
+    keep = jnp.ones((K, B), bool) if valid is None else \
+        (jnp.arange(K, dtype=jnp.int32)[:, None]
+         < jnp.asarray(valid, jnp.int32)[None, :])
+
+    def step(st, inp):
+        xt, keep_t = inp                                 # (B, d), (B,)
+        out, st_new = step_fn(xt[:, None], st)
+        st2 = jax.tree.map(
+            lambda n, o: jnp.where(
+                keep_t.reshape((B,) + (1,) * (n.ndim - 1)), n, o),
+            st_new, st)
+        return st2, out[:, 0]
+
+    st, ys = jax.lax.scan(step, state, (x.swapaxes(0, 1), keep))
+    return ys.swapaxes(0, 1), st
 
 
 def init_attention_cache(cfg: ModelConfig, batch: int, max_len: int,

@@ -15,8 +15,16 @@ pattern on the period boundary.
 
 Three entry points mirror the dry-run shapes:
   ``lm_loss``      (train_*)    — next-token CE + MoE aux losses
-  ``lm_prefill``   (prefill_*)  — forward + cache construction
-  ``lm_decode``    (decode_*/long_*) — single token with carried cache
+  ``lm_prefill``   (prefill_*)  — forward + cache construction (full
+                   prompt, or one chunked slice over a paged pool when
+                   ``tables`` is given)
+  ``lm_decode``    (decode_*/long_*) — K >= 1 tokens per row with a
+                   carried cache (dense slot rows or paged block
+                   tables); K > 1 is the speculative-verify step
+
+The serving layer drives these exclusively through
+:class:`repro.serve.session.DecodeSession`, which pairs them with a
+``CacheLayout`` (slot rows or paged pool) and owns the jit boundaries.
 """
 from __future__ import annotations
 
@@ -163,13 +171,17 @@ def _zero_aux():
 
 def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
                  mode: str, cache=None, index=None, tables=None,
-                 hist_len=None, prompt_len=None):
+                 hist_len=None, prompt_len=None, valid=None):
     """Returns (x, new_cache, aux).
 
     ``tables`` switches attention layers onto the paged-KV path:
     mode "decode" uses the gather-decode kernel over scattered pages and
     mode "chunk" runs one chunked-prefill slice (attention-only stacks).
     Recurrent mixers keep their per-slot state rows in both cases.
+    Decode mode handles K >= 1 tokens per row; ``valid`` (int32 (B,))
+    marks how many of the K are real per row — attention routes the
+    rest to the null page (paged) and recurrent mixers freeze their
+    state past it (the speculative verify / rollback-replay contract).
     """
     if mode == "chunk" and spec.kind != "a":
         raise ValueError(
@@ -177,6 +189,7 @@ def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
             f"(got mixer kind {spec.kind!r})")
     aux = _zero_aux()
     h = L.rmsnorm(bp["ln1"], x, cfg.norm_eps)
+    multi = mode == "decode" and (h.shape[1] > 1 or valid is not None)
     new_cache = None
     if spec.kind == "a":
         if mode == "train":
@@ -190,8 +203,12 @@ def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
                 positions)
         elif tables is not None:
             mix, new_cache = L.attention_decode_paged(
-                bp["mixer"], cfg, h, cache, index, positions, tables)
+                bp["mixer"], cfg, h, cache, index, positions, tables,
+                valid=valid)
         else:
+            # dense rows: beyond-``valid`` writes land at future
+            # positions the causal mask hides until they are
+            # overwritten, so no routing is needed
             mix, new_cache = L.attention_decode(bp["mixer"], cfg, h, cache,
                                                 index, positions)
     elif spec.kind == "M":
@@ -199,16 +216,25 @@ def _apply_block(bp: Params, cfg: ModelConfig, spec: LayerSpec, x, positions,
             mix = S.mamba_block(bp["mixer"], cfg, h)
         elif mode == "prefill":
             mix, new_cache = S.mamba_prefill(bp["mixer"], cfg, h)
+        elif multi:
+            mix, new_cache = S.mamba_decode_multi(bp["mixer"], cfg, h,
+                                                  cache, valid)
         else:
             mix, new_cache = S.mamba_decode(bp["mixer"], cfg, h, cache)
     elif spec.kind == "m":
-        if mode == "decode":
+        if multi:
+            mix, new_cache = X.mlstm_decode_multi(bp["mixer"], cfg, h,
+                                                  cache, valid)
+        elif mode == "decode":
             mix, new_cache = X.mlstm_decode(bp["mixer"], cfg, h, cache)
         else:
             mix, new_cache = X.mlstm_block(bp["mixer"], cfg, h,
                                            return_state=True)
     elif spec.kind == "s":
-        if mode == "decode":
+        if multi:
+            mix, new_cache = X.slstm_decode_multi(bp["mixer"], cfg, h,
+                                                  cache, valid)
+        elif mode == "decode":
             mix, new_cache = X.slstm_decode(bp["mixer"], cfg, h, cache)
         else:
             mix, new_cache = X.slstm_block(bp["mixer"], cfg, h,
@@ -346,8 +372,10 @@ def lm_loss(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 
 
 def _init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
-                      max_len: int):
+                      max_len: int, pages=None):
     if spec.kind == "a":
+        if pages is not None:
+            return L.init_paged_attention_cache(cfg, pages[0], pages[1])
         return L.init_attention_cache(cfg, batch, max_len)
     if spec.kind == "M":
         return S.init_mamba_state(cfg, batch)
@@ -358,47 +386,22 @@ def _init_block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
     raise ValueError(spec.kind)
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int):
-    """Cache pytree mirroring the stacked param structure."""
-    specs = layer_specs(cfg)
-    k0, R, P = _grouping(cfg)
-    cache: Params = {}
-    axes: Params = {}
-    if k0:
-        per = [_init_block_cache(cfg, specs[i], batch, max_len)
-               for i in range(k0)]
-        cache["prefix"] = _stack([c for c, _ in per])
-        axes["prefix"] = _push_axis(per[0][1], "layers")
-    body_c, body_a = [], []
-    for j in range(R):
-        per = [_init_block_cache(cfg, specs[k0 + pi * R + j], batch, max_len)
-               for pi in range(P)]
-        body_c.append(_stack([c for c, _ in per]))
-        body_a.append(_push_axis(per[0][1], "period"))
-    cache["body"] = tuple(body_c)
-    axes["body"] = tuple(body_a)
-    return cache, axes
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               pages: Optional[Tuple[int, int]] = None):
+    """Cache pytree mirroring the stacked param structure.
 
-
-def _init_block_cache_paged(cfg: ModelConfig, spec: LayerSpec,
-                            num_slots: int, num_pages: int,
-                            block_size: int):
-    if spec.kind == "a":
-        return L.init_paged_attention_cache(cfg, num_pages, block_size)
-    return _init_block_cache(cfg, spec, num_slots, 0)
-
-
-def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
-                     block_size: int):
-    """Serving cache pytree with PAGED attention leaves.
-
-    Attention layers get one shared ``(num_pages + 1, block_size, Hkv,
-    D)`` pool each (page ``num_pages`` is the null page; see
+    With ``pages=None`` attention layers get dense ``(batch, max_len,
+    Hkv, D)`` slot rows.  With ``pages=(num_pages, block_size)`` they
+    instead get ONE shared ``(num_pages + 1, block_size, Hkv, D)`` pool
+    each (page ``num_pages`` is the null page; see
     :func:`repro.models.layers.init_paged_attention_cache`) addressed
     through per-request block tables, so a request's KV can be
     scattered anywhere in the pool.  Recurrent layers (mamba / xLSTM)
-    carry O(1) state per request and keep ``num_slots`` dense rows.
-    Structure mirrors :func:`init_cache` (stacked over prefix/period).
+    carry O(1) state per request and keep ``batch`` dense rows in both
+    layouts.  Returns (cache, axes); axes leaves containing ``"pages"``
+    / ``"kv_seq"`` identify attention KV, everything else is the
+    recurrent state that snapshot/restore (speculative rollback)
+    copies.
     """
     specs = layer_specs(cfg)
     k0, R, P = _grouping(cfg)
@@ -406,8 +409,7 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     axes: Params = {}
 
     def make(spec):
-        return _init_block_cache_paged(cfg, spec, num_slots, num_pages,
-                                       block_size)
+        return _init_block_cache(cfg, spec, batch, max_len, pages)
 
     if k0:
         per = [make(specs[i]) for i in range(k0)]
@@ -423,24 +425,9 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, num_pages: int,
     return cache, axes
 
 
-def lm_decode_paged(params: Params, cfg: ModelConfig, tokens: jax.Array,
-                    cache: Params, index: jax.Array, tables: jax.Array):
-    """One decode step over the paged pool.
-
-    tokens: (B, 1) int32; index: int32 (B,) per-row write positions
-    with -1 marking rows that hold no request (routed to the null
-    page); tables: (B, W) int32 block tables.  Attention layers
-    gather/scatter through the tables; recurrent layers use their dense
-    per-slot state rows exactly as :func:`lm_decode` — this IS
-    :func:`lm_decode` with ``tables`` threaded through.  Returns
-    (logits, new_cache).
-    """
-    return lm_decode(params, cfg, tokens, cache, index, tables=tables)
-
-
-def lm_prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
-                     cache: Params, tables: jax.Array, hist_len: jax.Array,
-                     prompt_len: jax.Array, last_pos: jax.Array):
+def _prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
+                   cache: Params, tables: jax.Array, hist_len: jax.Array,
+                   prompt_len: jax.Array, last_pos: jax.Array):
     """One chunked-prefill slice for a single request (paged pool).
 
     tokens: (1, C) — prompt positions [hist_len, hist_len + C), tail
@@ -496,14 +483,28 @@ def lm_prefill_chunk(params: Params, cfg: ModelConfig, tokens: jax.Array,
 
 
 def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
-               remat: str = "none", last_pos: Optional[jax.Array] = None):
-    """Process the full prompt; returns (last-token logits, cache).
+               remat: str = "none", last_pos: Optional[jax.Array] = None,
+               cache: Optional[Params] = None,
+               tables: Optional[jax.Array] = None,
+               hist_len: Optional[jax.Array] = None,
+               prompt_len: Optional[jax.Array] = None):
+    """Process prompt tokens; returns (selected logits, cache).
 
-    ``last_pos`` (int32 (B,), optional) selects the hidden state each
-    row's logits are read from instead of position ``S - 1`` — the
-    serving scheduler right-pads prompts to a shape bucket and reads
-    logits at each request's true last token.
+    Two modes behind one entry point:
+
+    * **full prefill** (``tables=None``, the default): forward the
+      whole prompt and build a fresh dense cache.  ``last_pos`` (int32
+      (B,), optional) selects the hidden state each row's logits are
+      read from instead of position ``S - 1`` — the serving scheduler
+      right-pads prompts to a shape bucket and reads logits at each
+      request's true last token.
+    * **chunked prefill** (``tables`` given): one slice of a single
+      request scattered straight into the shared paged pool passed as
+      ``cache`` — see :func:`_prefill_chunk` for the slice contract.
     """
+    if tables is not None:
+        return _prefill_chunk(params, cfg, batch["tokens"], cache, tables,
+                              hist_len, prompt_len, last_pos)
     x = _embed_in(params, cfg, batch)
     B, S, _ = x.shape
     positions = _positions_of(batch, cfg, B, S)
@@ -543,28 +544,40 @@ def lm_prefill(params: Params, cfg: ModelConfig, batch: Dict[str, jax.Array],
 def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
               cache: Params, index: jax.Array,
               positions: Optional[jax.Array] = None,
-              tables: Optional[jax.Array] = None):
-    """One decode step. tokens: (B, 1) int32; index: scalar int32 write
-    position (= current KV length), or an int32 (B,) vector of per-row
-    write positions (continuous batching: each batch row is a different
-    request at a different length). With ``tables`` ((B, W) int32 block
-    tables) attention layers run the paged gather/scatter path and a
-    per-row index of -1 marks an idle row (writes route to the null
-    page). Returns (logits, new_cache)."""
+              tables: Optional[jax.Array] = None,
+              valid: Optional[jax.Array] = None):
+    """One decode step over K >= 1 tokens per row.
+
+    tokens: (B, K) int32 — K = 1 is the classic single-token decode;
+    K > 1 is the speculative-verify step (K consecutive tokens per row,
+    logits returned for every position).  index: scalar int32 write
+    position of the first token (= current KV length), or an int32 (B,)
+    vector of per-row positions (continuous batching: each batch row is
+    a different request at a different length); token t of row b lands
+    at ``index[b] + t``.  With ``tables`` ((B, W) int32 block tables)
+    attention layers run the paged gather/scatter path and a per-row
+    index of -1 marks an idle row (writes route to the null page).
+    ``valid`` (int32 (B,), optional) caps the real tokens per row:
+    beyond it attention writes route to the null page and recurrent
+    state freezes — the primitive speculative decoding's rollback
+    replay is built on.  Returns (logits (B, K, V), new_cache)."""
     x = jnp.take(params["embed"], tokens, axis=0)
     x = constrain(x, "batch", "seq", "act_embed")
-    B = x.shape[0]
+    B, K = tokens.shape
     index = jnp.asarray(index, jnp.int32)
+    if valid is not None:
+        valid = jnp.asarray(valid, jnp.int32)
     if positions is None:
         idx_col = index[:, None] if index.ndim else \
             jnp.full((B, 1), index, jnp.int32)
         if tables is not None:     # paged: clamp the idle-row sentinel
             idx_col = jnp.maximum(idx_col, 0)
+        pos = idx_col + jnp.arange(K, dtype=jnp.int32)[None, :]
         if cfg.use_mrope:
             # text decode: all three M-RoPE components advance together
-            positions = jnp.broadcast_to(idx_col[None], (3, B, 1))
+            positions = jnp.broadcast_to(pos[None], (3, B, K))
         else:
-            positions = idx_col
+            positions = pos
     pspecs = _period_specs(cfg)
     specs = layer_specs(cfg)
 
@@ -578,7 +591,7 @@ def lm_decode(params: Params, cfg: ModelConfig, tokens: jax.Array,
             for sp, lp, lc in zip(spec_list, layer_p, layer_c):
                 xc, nc, _ = _apply_block(lp, cfg, sp, xc, positions,
                                          "decode", cache=lc, index=index,
-                                         tables=tables)
+                                         tables=tables, valid=valid)
                 new_caches.append(nc)
             return xc, tuple(new_caches)
 

@@ -211,6 +211,20 @@ def mamba_decode(params: Params, cfg: ModelConfig, x: jax.Array,
     return constrain(out, "batch", "seq", "act_embed"), new_state
 
 
+def mamba_decode_multi(params: Params, cfg: ModelConfig, x: jax.Array,
+                       state: Params, valid=None):
+    """K-token decode: x (B, K, d) -> (out (B, K, d), new_state).
+
+    Sequential over K (K is the small speculative window, not a
+    sequence); ``valid`` (int32 (B,)) freezes each row's state after
+    its real tokens so verify padding / rollback replays cannot advance
+    the recurrence (see :func:`repro.models.layers.decode_scan`).
+    """
+    from repro.models.layers import decode_scan
+    return decode_scan(
+        lambda xt, st: mamba_decode(params, cfg, xt, st), x, state, valid)
+
+
 def mamba_ref_sequential(params: Params, cfg: ModelConfig, x: jax.Array
                          ) -> jax.Array:
     """Oracle: straight lax.scan over every timestep (no chunking)."""

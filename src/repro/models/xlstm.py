@@ -209,6 +209,16 @@ def mlstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
         {"C": C1, "n": n1, "m": m1}
 
 
+def mlstm_decode_multi(params: Params, cfg: ModelConfig, x: jax.Array,
+                       state: Params, valid=None):
+    """K-token mLSTM decode with per-row state freezing past ``valid``
+    (speculative verify / rollback replay; see
+    :func:`repro.models.layers.decode_scan`)."""
+    from repro.models.layers import decode_scan
+    return decode_scan(
+        lambda xt, st: mlstm_decode(params, cfg, xt, st), x, state, valid)
+
+
 # ---------------------------------------------------------------------------
 # sLSTM
 # ---------------------------------------------------------------------------
@@ -311,3 +321,13 @@ def slstm_decode(params: Params, cfg: ModelConfig, x: jax.Array,
     out = (jax.nn.gelu(h @ params["up_g"]) * (h @ params["up_v"])) \
         @ params["down"]
     return constrain(out, "batch", "seq", "act_embed"), st
+
+
+def slstm_decode_multi(params: Params, cfg: ModelConfig, x: jax.Array,
+                       state: Params, valid=None):
+    """K-token sLSTM decode with per-row state freezing past ``valid``
+    (speculative verify / rollback replay; see
+    :func:`repro.models.layers.decode_scan`)."""
+    from repro.models.layers import decode_scan
+    return decode_scan(
+        lambda xt, st: slstm_decode(params, cfg, xt, st), x, state, valid)

@@ -2,19 +2,23 @@
 
 ``decode_shapes``/``long_*`` dry-run cells lower exactly the
 ``engine.decode_step`` function.  ``generate`` is a host-driven loop
-over ONE uniform-length batch (greedy or temperature sampling); for
-request-level scheduling — queueing, continuous batching, slot reuse,
-hot-swap — use :class:`repro.serve.scheduler.Scheduler`.
+over ONE uniform-length batch (greedy or temperature sampling), built
+on the same :class:`repro.serve.session.DecodeSession` +
+:class:`repro.serve.kv_cache.SlotLayout` surface the scheduler uses —
+one decode API, no engine-private cache plumbing.  For request-level
+scheduling — queueing, continuous batching, slot reuse, hot-swap,
+speculative decoding — use :class:`repro.serve.scheduler.Scheduler`.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models import lm
+from repro.serve.kv_cache import SlotLayout
+from repro.serve.session import DecodeSession
 
 
 class Engine:
@@ -22,23 +26,19 @@ class Engine:
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-        self._prefill = jax.jit(
-            lambda p, b: lm.lm_prefill(p, cfg, b))
-        self._decode = jax.jit(
-            lambda p, t, c, i: lm.lm_decode(p, cfg, t, c, i),
-            donate_argnums=(2,))
-        # full-length cache templates, allocated ONCE per batch size and
-        # reused across generate() calls (never donated); continuous
-        # batching across requests lives in repro.serve.scheduler
-        self._cache_templates: dict = {}
-        self._fit = jax.jit(
-            lambda full, cache: jax.tree.map(_fit_leaf, full, cache))
+        # one DecodeSession per batch size, created lazily and reused
+        # across generate() calls (the layout's pool is allocated once;
+        # jitted executables are module-level and shared regardless)
+        self._sessions: Dict[int, DecodeSession] = {}
 
-    def _pad_cache(self, cache, batch: int):
-        if batch not in self._cache_templates:
-            self._cache_templates[batch] = \
-                lm.init_cache(self.cfg, batch, self.max_len)[0]
-        return self._fit(self._cache_templates[batch], cache)
+    def _session(self, batch: int) -> DecodeSession:
+        if batch not in self._sessions:
+            self._sessions[batch] = DecodeSession(
+                self.cfg, self.params,
+                SlotLayout(self.cfg, batch, self.max_len))
+        sess = self._sessions[batch]
+        sess.set_params(self.params)    # pick up any weight swap
+        return sess
 
     def generate(self, tokens: jax.Array, steps: int,
                  temperature: float = 0.0,
@@ -46,16 +46,16 @@ class Engine:
         """tokens: (B, S_prompt) int32 -> (B, S_prompt + steps)."""
         B, S = tokens.shape
         assert S + steps <= self.max_len
-        logits, cache = self._prefill(self.params, {"tokens": tokens})
-        cache = self._pad_cache(cache, B)
+        sess = self._session(B)
+        logits = sess.prefill_batch(tokens)
         out = [tokens]
         cur = self._sample(logits[:, -1], temperature, key, 0)
+        index = jnp.full((B,), S, jnp.int32)
         for i in range(steps):
             out.append(cur)
             if i == steps - 1:
                 break
-            logits, cache = self._decode(self.params, cur, cache,
-                                         jnp.int32(S + i))
+            logits = sess.step(cur, index + i)
             cur = self._sample(logits[:, -1], temperature, key, i + 1)
         return jnp.concatenate(out, axis=1)
 
@@ -69,11 +69,3 @@ class Engine:
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(
             k, logits / temperature, axis=-1)[:, None].astype(jnp.int32)
-
-
-def _fit_leaf(dst, src):
-    """Write `src` into the start of `dst` (zero template row)."""
-    if dst.shape == src.shape:
-        return src
-    return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype),
-                                        (0,) * dst.ndim)

@@ -1,6 +1,47 @@
-"""Block/paged KV-cache management for the serving subsystem.
+"""Cache layouts + block/paged KV-cache management for serving.
 
-Three cooperating pieces:
+The decode surface is ONE protocol: a :class:`CacheLayout` owns the
+physical cache pytree and answers, per layer,
+
+  * **init**     — build the cache leaves (slot rows or page pools);
+  * **write**    — where a request's prefilled KV/state lands
+    (``insert`` / ``insert_prefill``) and how decode steps address it
+    (``tables`` for paged, per-row indices for slots);
+  * **read**     — the kwargs a decode step needs (``step_kwargs``);
+  * **snapshot / restore** — copy-out / masked copy-back of the
+    RECURRENT leaves (mamba / xLSTM state), the rollback primitive
+    speculative decoding is built on.  Attention KV needs no rollback:
+    stale positions past a row's length are causally masked and
+    overwritten on the next write.
+
+Two implementations, both driven through
+:class:`repro.serve.session.DecodeSession`:
+
+``SlotLayout``
+    Dense rows: ``num_slots x max_len`` attention KV + per-slot
+    recurrent state (the PR-2 layout, kept as the ``layout="dense"``
+    baseline the fig14 benchmark measures the paged path against).
+
+``PagedLayout``
+    Per attention layer ONE ``(num_pages + 1, block_size, n_kv_heads,
+    head_dim)`` pool (``repro.models.lm.init_cache(..., pages=...)``;
+    the +1 is the null page), plus the host-side block tables the
+    gather-decode kernel reads.  A request's pages can live anywhere in
+    the pool — there is no per-slot ``max_len`` row, so a single
+    request may use the entire pool.  Recurrent-layer state (O(1) per
+    request) stays in dense per-slot rows.
+
+    **Prefix sharing (copy-on-admit):** after a request prefills, its
+    fully-filled prompt pages are registered in a prefix cache keyed by
+    the token chain they hold; a later request whose prompt starts with
+    the same pages maps them read-only into its own table (refcount++)
+    and prefills only the suffix.  Shared pages are immutable by
+    construction — decode appends strictly after the prompt and the
+    partially-filled tail page is never shared — so no copy is ever
+    needed.  With ``pin_prefix=True`` registered prompt pages are
+    additionally PINNED: they survive idle periods (no live holder) in
+    an eviction-priority tier and are reclaimed oldest-first only under
+    allocation pressure.
 
 ``BlockManager``
     Page accounting in units of ``block_size`` tokens over a fixed page
@@ -18,37 +59,14 @@ Three cooperating pieces:
 
     Pages are **refcounted** so prefix sharing can map one physical
     page into several requests' tables; a page returns to the free list
-    when its last holder releases it.
-
-``PagedCachePool``
-    The physical cache for the paged decode path: per attention layer
-    ONE ``(num_pages + 1, block_size, n_kv_heads, head_dim)`` pool
-    (``repro.models.lm.init_paged_cache``; the +1 is the null page),
-    plus the host-side block tables that :func:`repro.models.lm.
-    lm_decode_paged` gathers through.  A request's pages can live
-    anywhere in the pool — there is no per-slot ``max_len`` row, so a
-    single request may use the entire pool.  Recurrent-layer state
-    (O(1) per request) stays in dense per-slot rows.
-
-    **Prefix sharing (copy-on-admit):** after a request prefills, its
-    fully-filled prompt pages are registered in a prefix cache keyed by
-    the token chain they hold; a later request whose prompt starts with
-    the same pages maps them read-only into its own table (refcount++)
-    and prefills only the suffix.  Shared pages are immutable by
-    construction — decode appends strictly after the prompt and the
-    partially-filled tail page is never shared — so no copy is ever
-    needed.  Entries live as long as some request holds the page.
-
-``CachePool``
-    The PR-2 dense layout (``num_slots`` rows x ``max_len`` tokens),
-    kept as the ``layout="dense"`` baseline the fig14 benchmark
-    measures the paged path against.
+    when its last holder releases it — unless it is pinned, in which
+    case it idles in the reclaim tier.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -78,9 +96,15 @@ class BlockManager:
     # prefix-sharing capacity win
     _pending: Dict[Any, int] = field(default_factory=dict)
     _refs: Dict[int, int] = field(default_factory=dict)
+    # eviction-priority tier: pages held alive ONLY by a pin (insertion
+    # order = pin age); reclaimed oldest-first under allocation
+    # pressure, with ``on_reclaim`` notifying the owner (prefix cache)
+    _pinned: Dict[int, None] = field(default_factory=dict)
+    on_reclaim: Optional[Callable[[List[int]], None]] = None
     high_water: int = 0
     allocs: int = 0
     frees: int = 0
+    reclaims: int = 0
 
     def __post_init__(self):
         self._free = list(range(self.num_blocks))
@@ -105,21 +129,80 @@ class BlockManager:
         return self.used_blocks + self.pending_blocks
 
     @property
+    def reclaimable_blocks(self) -> int:
+        """Pinned pages with no live holder — the eviction-priority
+        tier: counted as capacity for admission, stolen only when the
+        free list runs dry."""
+        return sum(1 for b in self._pinned if self._refs.get(b) == 1)
+
+    @property
     def available_blocks(self) -> int:
-        """Free-list pages not promised to anyone."""
-        return len(self._free) - self.pending_blocks
+        """Pages an admission may budget against: free-list pages not
+        promised to anyone, plus idle pinned pages (reclaimable)."""
+        return len(self._free) + self.reclaimable_blocks \
+            - self.pending_blocks
 
     def table(self, rid) -> List[int]:
         return list(self._tables[rid])
 
-    def can_allocate(self, n_tokens: int, shared_blocks: int = 0) -> bool:
-        need = blocks_for(n_tokens, self.block_size) - shared_blocks
-        return need <= self.available_blocks
+    def _lost_reclaimable(self, shared: Sequence[int]) -> int:
+        """Idle pinned pages in `shared`: mapping them refcounts them to
+        2, so they stop being reclaimable — admission must not count
+        them BOTH as free prefix pages and as reclaimable capacity."""
+        return sum(1 for b in set(shared)
+                   if b in self._pinned and self._refs.get(b) == 1)
+
+    def can_allocate(self, n_tokens: int,
+                     shared: Sequence[int] = ()) -> bool:
+        need = blocks_for(n_tokens, self.block_size) - len(shared)
+        return need <= self.available_blocks \
+            - self._lost_reclaimable(shared)
+
+    # -- pinning (prefix residency) ----------------------------------------
+    def pin(self, page: int) -> None:
+        """Keep `page` resident after its last holder releases it (an
+        extra refcount held by the pin)."""
+        if page not in self._pinned and page in self._refs:
+            self._refs[page] += 1
+            self._pinned[page] = None
+
+    def unpin_all(self) -> List[int]:
+        """Drop every pin; returns the pages that hit refcount zero
+        (returned to the free list) — the hot-swap flush path."""
+        released = []
+        for page in list(self._pinned):
+            self._refs[page] -= 1
+            if self._refs[page] == 0:
+                del self._refs[page]
+                self._free.append(page)
+                released.append(page)
+        self._pinned.clear()
+        self.frees += len(released)
+        return released
+
+    def _reclaim(self, n: int) -> None:
+        """Steal `n` idle pinned pages (oldest pin first) back onto the
+        free list; the owner is told via ``on_reclaim`` so it can drop
+        the pages from its prefix cache.  Candidates are collected
+        BEFORE any mutation, so an insufficient tier raises with the
+        pin bookkeeping (and the owner's prefix cache) fully intact."""
+        taken = [page for page in self._pinned
+                 if self._refs.get(page) == 1][:n]
+        if len(taken) < n:
+            raise RuntimeError(
+                f"out of cache blocks: need {n - len(taken)} more, "
+                f"free {len(self._free)}")
+        for page in taken:
+            del self._pinned[page]
+            del self._refs[page]
+            self._free.append(page)
+        self.reclaims += len(taken)
+        if self.on_reclaim is not None:
+            self.on_reclaim(taken)
 
     def _claim(self, rid, n: int) -> List[int]:
         if n > len(self._free):
-            raise RuntimeError(
-                f"out of cache blocks: need {n}, free {len(self._free)}")
+            self._reclaim(n - len(self._free))
         got = [self._free.pop() for _ in range(n)]
         for b in got:
             self._refs[b] = 1
@@ -152,10 +235,12 @@ class BlockManager:
         if rid in self._tables:
             raise ValueError(f"request {rid!r} already holds blocks")
         need = blocks_for(n_tokens, self.block_size) - len(shared)
-        if need > self.available_blocks:
+        # refcounting the shared pages removes any idle pinned ones
+        # from the reclaim tier — budget as if that already happened
+        usable = self.available_blocks - self._lost_reclaimable(shared)
+        if need > usable:
             raise RuntimeError(
-                f"out of cache blocks: need {need}, "
-                f"available {self.available_blocks}")
+                f"out of cache blocks: need {need}, available {usable}")
         for b in shared:
             self._refs[b] += 1
         self._tables[rid] = list(shared)
@@ -214,12 +299,14 @@ class BlockManager:
                 "block_size": self.block_size,
                 "used_blocks": self.used_blocks,
                 "committed_blocks": self.committed_blocks,
+                "pinned_blocks": len(self._pinned),
+                "block_reclaims": self.reclaims,
                 "high_water_blocks": self.high_water,
                 "block_allocs": self.allocs, "block_frees": self.frees}
 
 
 # ---------------------------------------------------------------------------
-# paged physical pool
+# CacheLayout protocol
 # ---------------------------------------------------------------------------
 
 
@@ -227,10 +314,113 @@ def _leaf_is_paged(axes_leaf) -> bool:
     return isinstance(axes_leaf, tuple) and "pages" in axes_leaf
 
 
+def _leaf_is_kv(axes_leaf) -> bool:
+    """Attention KV leaves (either layout); everything else is the
+    recurrent state snapshot/restore copies."""
+    return isinstance(axes_leaf, tuple) and \
+        ("pages" in axes_leaf or "kv_seq" in axes_leaf)
+
+
 def _axes_leaves(axes):
     is_leaf = (lambda t: isinstance(t, tuple)
                and all(x is None or isinstance(x, str) for x in t))
     return jax.tree.leaves(axes, is_leaf=is_leaf)
+
+
+@partial(jax.jit, static_argnums=(2,), donate_argnums=(0,))
+def _restore_rec(cache, snap, rec_mask, rows):
+    """Masked copy-back of recurrent leaves: rows[b] selects the
+    snapshot for slot b (leaves are (stack, num_slots, ...))."""
+    flat, tree = jax.tree.flatten(cache)
+    it = iter(snap)
+    out = []
+    for leaf, m in zip(flat, rec_mask):
+        if m:
+            s = next(it)
+            sel = rows.reshape((1, rows.shape[0]) + (1,) * (leaf.ndim - 2))
+            out.append(jnp.where(sel, s, leaf))
+        else:
+            out.append(leaf)
+    return jax.tree.unflatten(tree, out)
+
+
+class CacheLayout:
+    """Family-agnostic cache protocol the serving stack decodes through.
+
+    A layout owns the physical cache pytree and implements, per layer
+    leaf, the five operations :class:`repro.serve.session.
+    DecodeSession` is written against:
+
+    ==========  =========================================================
+    init        build the cache leaves (``lm.init_cache``, dense or
+                ``pages=``)
+    write       land prefilled KV/state (``insert`` / ``insert_prefill``)
+                and route decode-step writes (slot rows / block tables)
+    read        ``step_kwargs()`` — the extra arrays one decode step
+                needs (``tables`` for paged, nothing for slots)
+    snapshot    copy out the recurrent leaves (mamba / xLSTM state)
+    restore     masked copy-back per slot — the speculative-decoding
+                rollback primitive (attention KV never rolls back: stale
+                positions are causally masked and overwritten)
+    ==========  =========================================================
+
+    Slot bookkeeping (`admit` / `release` / `slot_of`) is shared here;
+    page accounting is the paged subclass's :class:`BlockManager`.
+    """
+
+    cfg: ModelConfig
+    num_slots: int
+    cache: Any
+    rec_mask: Tuple[bool, ...]
+
+    def _init_slots(self, num_slots: int) -> None:
+        self.num_slots = num_slots
+        self._free_slots = list(range(num_slots))
+        self._slot_of: Dict[Any, int] = {}
+
+    @property
+    def free_slots(self) -> int:
+        return len(self._free_slots)
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+    @property
+    def has_recurrent(self) -> bool:
+        """True when the stack carries per-slot recurrent state (hybrid
+        / ssm families) — the leaves snapshot/restore operates on."""
+        return any(self.rec_mask)
+
+    @property
+    def supports_row_subset(self) -> bool:
+        """True when a decode step may cover any subset of rows (no
+        cache leaf is indexed by slot) — what lets the scheduler group
+        ragged rows by gather width."""
+        return False
+
+    def step_kwargs(self, width: Optional[int] = None,
+                    rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Extra per-step arrays for :func:`repro.models.lm.lm_decode`."""
+        return {}
+
+    def snapshot(self) -> Tuple[jax.Array, ...]:
+        """Copy of the recurrent leaves (empty for attention-only
+        stacks, where rollback is free)."""
+        flat = jax.tree.leaves(self.cache)
+        return tuple(jnp.array(x, copy=True)
+                     for x, m in zip(flat, self.rec_mask) if m)
+
+    def restore(self, snap: Tuple[jax.Array, ...], rows) -> None:
+        """Roll slots with ``rows[b] == True`` back to ``snap``."""
+        if not snap:
+            return
+        self.cache = _restore_rec(self.cache, snap, self.rec_mask,
+                                  jnp.asarray(np.asarray(rows, bool)))
+
+
+# ---------------------------------------------------------------------------
+# paged physical pool
+# ---------------------------------------------------------------------------
 
 
 def _insert_leaf_paged(dst, src, page_ids, offsets):
@@ -256,7 +446,7 @@ def _insert_tree_paged(pool, paged_mask, src, page_ids, offsets, slot):
     return jax.tree.unflatten(tree, out)
 
 
-class PagedCachePool:
+class PagedLayout(CacheLayout):
     """Paged decode cache: shared page pools + per-slot block tables.
 
     ``num_slots`` bounds the decode batch width (and the number of
@@ -264,27 +454,32 @@ class PagedCachePool:
     block_size`` tokens shared by every request.  ``max_seq`` caps a
     single request (it sizes the block-table width) and defaults to the
     whole pool — the per-slot ``max_len`` ceiling of the dense layout
-    is gone.
+    is gone.  With ``pin_prefix=True`` registered prompt pages stay
+    resident after their holders release (reclaimed oldest-first under
+    pressure).
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, num_pages: int,
-                 block_size: int = 16, max_seq: Optional[int] = None):
+                 block_size: int = 16, max_seq: Optional[int] = None,
+                 pin_prefix: bool = False):
         self.cfg = cfg
-        self.num_slots = num_slots
         self.block_size = block_size
         self.max_seq = min(max_seq or num_pages * block_size,
                            num_pages * block_size)
         self.max_blocks_per_seq = blocks_for(self.max_seq, block_size)
         self.blocks = BlockManager(num_pages, block_size)
+        self.blocks.on_reclaim = self._evict
         self.null_page = num_pages
-        self.cache, axes = lm.init_paged_cache(cfg, num_slots, num_pages,
-                                               block_size)
+        self.pin_prefix = bool(pin_prefix)
+        self.cache, axes = lm.init_cache(cfg, num_slots,
+                                         pages=(num_pages, block_size))
         self.paged_mask = tuple(_leaf_is_paged(a)
                                 for a in _axes_leaves(axes))
+        self.rec_mask = tuple(not _leaf_is_kv(a)
+                              for a in _axes_leaves(axes))
         self.tables = np.full((num_slots, self.max_blocks_per_seq),
                               self.null_page, np.int32)
-        self._free_slots = list(range(num_slots))
-        self._slot_of: Dict[Any, int] = {}
+        self._init_slots(num_slots)
         # prefix cache: chained token-chunk key -> canonical physical
         # page, plus every live page known to hold that content (a
         # follower that prefilled its own copy before the prefix was
@@ -361,6 +556,10 @@ class PagedCachePool:
                 self._page_key[page] = key
                 self._key_pages.setdefault(key, set()).add(page)
                 self._prefix.setdefault(key, page)
+            if self.pin_prefix:
+                # eviction-priority residency: the page survives its
+                # holders (reclaimed oldest-first under pressure)
+                self.blocks.pin(page)
             self._reg_state[rid] = (i + 1, key)
 
     def _evict(self, released_pages: List[int]) -> None:
@@ -383,12 +582,21 @@ class PagedCachePool:
 
     # -- slot / page lifecycle ---------------------------------------------
     @property
-    def free_slots(self) -> int:
-        return len(self._free_slots)
+    def supports_row_subset(self) -> bool:
+        # with no recurrent rows, every cache leaf is a shared pool —
+        # a decode step may cover any subset of slots (ragged grouping)
+        return not self.has_recurrent
 
-    def can_admit(self, n_tokens: int, shared_blocks: int = 0) -> bool:
+    def step_kwargs(self, width: Optional[int] = None,
+                    rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        W = width if width is not None else self.max_blocks_per_seq
+        tables = self.tables if rows is None else self.tables[rows]
+        return {"tables": jnp.asarray(tables[:, :W])}
+
+    def can_admit(self, n_tokens: int,
+                  shared_pages: Sequence[int] = ()) -> bool:
         return bool(self._free_slots) and n_tokens <= self.max_seq \
-            and self.blocks.can_allocate(n_tokens, shared_blocks)
+            and self.blocks.can_allocate(n_tokens, shared=shared_pages)
 
     def admit(self, rid, n_tokens: int,
               prompt: Optional[np.ndarray] = None,
@@ -426,9 +634,6 @@ class PagedCachePool:
             self._reg_state[rid] = (len(shared_pages),
                                     self._page_key[shared_pages[-1]])
         return slot, shared_len
-
-    def slot_of(self, rid) -> int:
-        return self._slot_of[rid]
 
     def ensure(self, rid, n_tokens: int) -> None:
         """Materialize pages so `rid` can hold `n_tokens`; updates the
@@ -478,11 +683,13 @@ class PagedCachePool:
         """Flush the prefix cache (hot swap): pages computed under the
         old weights must not be mapped into post-swap admissions, and
         still-prefilling pre-swap requests stop registering (their
-        remaining chunks attend over old-weight history).  Live tables
-        and refcounts are untouched — only the sharing index dies."""
+        remaining chunks attend over old-weight history).  Pins die
+        with the index — a pinned page's whole value is being shareable.
+        Live tables and refcounts are untouched."""
         self._prefix.clear()
         self._key_pages.clear()
         self._page_key.clear()
+        self.blocks.unpin_all()
         self._epoch += 1
 
     def table_width_for(self, max_tokens: int) -> int:
@@ -512,7 +719,7 @@ def _first_kv_len(prefill_cache, paged_mask) -> Optional[int]:
 
 
 # ---------------------------------------------------------------------------
-# dense legacy pool (the PR-2 baseline, kept for layout="dense")
+# dense slot layout (the PR-2 baseline, kept for layout="dense")
 # ---------------------------------------------------------------------------
 
 
@@ -540,7 +747,12 @@ def _insert_tree(pool, src, slot):
     return jax.tree.map(lambda d, s: _insert_row(d, s, slot), pool, src)
 
 
-class CachePool:
+@partial(jax.jit, donate_argnums=(0,))
+def _insert_tree_batch(pool, src):
+    return jax.tree.map(lambda d, s: _insert_row(d, s, 0), pool, src)
+
+
+class SlotLayout(CacheLayout):
     """One preallocated dense decode cache shared by all requests.
 
     ``cache`` holds `num_slots` rows of `max_len` tokens (allocated once
@@ -553,19 +765,15 @@ class CachePool:
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
                  block_size: int = 16, num_blocks: Optional[int] = None):
         self.cfg = cfg
-        self.num_slots = num_slots
         self.max_len = max_len
         self.blocks = BlockManager(
             num_blocks if num_blocks is not None
             else num_slots * blocks_for(max_len, block_size),
             block_size)
-        self.cache, _ = lm.init_cache(cfg, num_slots, max_len)
-        self._free_slots = list(range(num_slots))
-        self._slot_of: Dict[Any, int] = {}
-
-    @property
-    def free_slots(self) -> int:
-        return len(self._free_slots)
+        self.cache, axes = lm.init_cache(cfg, num_slots, max_len)
+        self.rec_mask = tuple(not _leaf_is_kv(a)
+                              for a in _axes_leaves(axes))
+        self._init_slots(num_slots)
 
     def can_admit(self, n_tokens: int) -> bool:
         """Room for a request reserving `n_tokens` (prompt + max new)?"""
@@ -585,13 +793,18 @@ class CachePool:
         self._slot_of[rid] = slot
         return slot
 
-    def slot_of(self, rid) -> int:
-        return self._slot_of[rid]
-
     def insert(self, rid, prefill_cache) -> None:
         """Overwrite `rid`'s slot row with a (batch=1) prefilled cache."""
         self.cache = _insert_tree(self.cache, prefill_cache,
                                   jnp.int32(self._slot_of[rid]))
+
+    def insert_batch(self, prefill_cache) -> None:
+        """Overwrite ALL slot rows with a (batch=num_slots) prefilled
+        cache — the engine path, where one uniform-length batch fills
+        the whole pool at once."""
+        B = jax.tree.leaves(prefill_cache)[0].shape[1]
+        assert B == self.num_slots, (B, self.num_slots)
+        self.cache = _insert_tree_batch(self.cache, prefill_cache)
 
     def release(self, rid) -> int:
         """Free `rid`'s slot + pages; returns the freed slot index."""
@@ -603,3 +816,8 @@ class CachePool:
     def as_dict(self) -> Dict[str, int]:
         return {"num_slots": self.num_slots, "max_len": self.max_len,
                 "free_slots": self.free_slots, **self.blocks.as_dict()}
+
+
+# legacy names (PR-2/PR-3): the pools ARE the layouts now
+CachePool = SlotLayout
+PagedCachePool = PagedLayout

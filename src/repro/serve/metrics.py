@@ -34,6 +34,13 @@ class ServeStats:
     decode_steps: int = 0
     decode_tokens: int = 0         # useful generated tokens
     decode_slot_steps: int = 0     # slots * steps actually computed
+    # speculative decoding (population drafter)
+    spec_rounds: int = 0           # target verify steps
+    spec_draft_steps: int = 0      # drafter decode dispatches
+    spec_draft_proposed: int = 0   # draft tokens offered for verify
+    spec_draft_accepted: int = 0   # draft tokens the target kept
+    spec_replays: int = 0          # rollback replay steps (recurrent)
+    ragged_splits: int = 0         # width-split subset decode dispatches
     hot_swaps: int = 0
     steps: int = 0
     queue_depth_sum: int = 0
@@ -83,6 +90,14 @@ class ServeStats:
             "decode_steps": self.decode_steps,
             "decode_tokens": self.decode_tokens,
             "decode_slot_steps": self.decode_slot_steps,
+            "spec_rounds": self.spec_rounds,
+            "spec_draft_steps": self.spec_draft_steps,
+            "spec_draft_proposed": self.spec_draft_proposed,
+            "spec_draft_accepted": self.spec_draft_accepted,
+            "spec_replays": self.spec_replays,
+            "spec_accept_rate": self.spec_draft_accepted
+            / max(self.spec_draft_proposed, 1),
+            "ragged_splits": self.ragged_splits,
             "hot_swaps": self.hot_swaps,
             "wall_s": wall,
             "requests_per_s": self.completed / wall,
@@ -117,3 +132,10 @@ class ServeStats:
             f"busy={d['slot_occupancy'] * 100:.0f}% "
             f"queue_mean={d['queue_depth_mean']:.1f} "
             f"queue_max={d['queue_depth_max']}")
+        if self.spec_rounds:
+            log(f"{prefix} speculative: rounds={d['spec_rounds']} "
+                f"accept_rate={d['spec_accept_rate'] * 100:.0f}% "
+                f"accepted={d['spec_draft_accepted']}"
+                f"/{d['spec_draft_proposed']} "
+                f"draft_steps={d['spec_draft_steps']} "
+                f"replays={d['spec_replays']}")

@@ -41,6 +41,39 @@ def latest_winner_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def population_steps(ckpt_dir: str) -> List[int]:
+    """All population-checkpoint steps in a dir, oldest first."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(f[len("step_"):-len(".manifest")])
+                  for f in os.listdir(ckpt_dir)
+                  if f.startswith("step_") and f.endswith(".manifest"))
+
+
+def load_draft(path: str, like_params: Params,
+               step: Optional[int] = None) -> Tuple[Params, dict]:
+    """Load a DRAFTER for population speculative decoding.
+
+    The LTFB population is a free source of draft models: any
+    earlier/smaller checkpoint proposes tokens the current winner
+    verifies.  ``path`` is either a self-contained ``.ckpt`` file or a
+    population checkpoint dir — there the EARLIEST step's winner is
+    used by default (``step`` overrides), exported on demand.  Returns
+    (params, info).
+    """
+    if os.path.isfile(path):
+        tree, meta = ckpt.restore(path, {"params": like_params})
+        return tree["params"], meta
+    steps = population_steps(path)
+    if not steps:
+        raise FileNotFoundError(f"no population checkpoint in {path!r}")
+    s = step if step is not None else steps[0]
+    if not os.path.exists(winner_path(path, s)):
+        export_winner(path, like_params, step=s)
+    tree, meta = ckpt.restore(winner_path(path, s), {"params": like_params})
+    return tree["params"], meta
+
+
 def load_population_params(ckpt_dir: str, step: int, like_params: Params
                            ) -> Tuple[List[Params], List[dict]]:
     """All trainer params (+ checkpoint metadata) of one population step.

@@ -2,9 +2,11 @@
 
 The serving analogue of ``core/tournament.py``'s training orchestrator:
 a request queue in front of a slot-based decode batch backed by ONE
-preallocated :class:`repro.serve.kv_cache.PagedCachePool` (or the PR-2
-dense :class:`~repro.serve.kv_cache.CachePool` with ``layout="dense"``,
-kept as the benchmark baseline).
+preallocated :class:`repro.serve.kv_cache.PagedLayout` (or the PR-2
+dense :class:`~repro.serve.kv_cache.SlotLayout` with
+``layout="dense"``, kept as the benchmark baseline).  ALL model calls
+go through one :class:`repro.serve.session.DecodeSession` per set of
+weights — the scheduler never picks a decode entry point by layout.
 
 Per scheduler step:
 
@@ -21,23 +23,32 @@ Per scheduler step:
      available.  On the paged layout a prompt whose prefix is already
      resident (another live request's registered prompt pages) maps
      those pages read-only into its block table and skips their
-     prefill compute entirely (copy-on-admit prefix sharing).
+     prefill compute entirely (copy-on-admit prefix sharing; with
+     ``pin_prefix=True`` registered prompt pages additionally survive
+     idle periods in an eviction-priority tier).
   3. *chunked prefill* — attention-only stacks prefill in
      ``prefill_chunk``-token slices, one slice per prefilling request
      per step, interleaved with decode, so admitting a long prompt
-     never stalls in-flight decodes.  Each slice scatters its KV
-     straight into the request's pages and attends over the gathered
-     page history under one causal mask.  Recurrent families (mamba /
+     never stalls in-flight decodes.  Recurrent families (mamba /
      xLSTM) prefill one-shot at exact length — their state cannot
      resume mid-prompt — and scatter into pages afterwards.
-  4. *decode* — ONE batched gather-decode step over the whole pool
-     through the per-slot block tables
-     (:func:`repro.models.lm.lm_decode_paged`; Pallas kernel on TPU,
-     jnp gather twin elsewhere).  The table width passed to the kernel
-     is bucketed to the batch's true maximum page count, so short
-     requests never pay max_seq-width attention.  Pages materialize
-     lazily: a request crossing a page boundary claims its next page
-     right before the step (page-overflow allocation).
+  4. *decode* — batched ``session.step`` over the in-flight rows.
+     Plain rounds write one token per row; with a drafter attached
+     (``draft_params`` + ``spec_tokens K``) each round runs
+     **population speculative decoding**: the drafter (an
+     earlier/smaller LTFB population checkpoint) proposes K tokens per
+     row, the target verifies all K + 1 in ONE multi-token
+     ``session.step``, the per-row accepted prefix is kept, and
+     rejected rows roll recurrent state back via
+     ``session.restore`` + a ``valid``-masked replay.  At any
+     temperature the output is token-identical to target-only decoding
+     (sampling is a deterministic function of (seed, ntok) and the
+     target logits).  On CPU the jnp gather oracle pays the full
+     bucketed table width per row, so when one row's pow2 width is
+     >= 4x everyone else's (the one-long-request pathology) the round
+     splits into (narrow, wide) groups stepped separately — the long
+     request no longer widens every row's gather, while the common
+     case stays a single dispatch.
   5. *completion* — requests hitting EOS or their token budget free
      their slot + page refs immediately; the batch never stalls on its
      slowest member.
@@ -52,7 +63,6 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from functools import partial
 from typing import Any, Dict, List, Optional
 
 import jax
@@ -61,8 +71,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import lm
-from repro.serve.kv_cache import CachePool, PagedCachePool, blocks_for
+from repro.serve.kv_cache import PagedLayout, SlotLayout, blocks_for
 from repro.serve.metrics import ServeStats
+from repro.serve.session import DecodeSession
 
 
 @dataclass
@@ -97,30 +108,6 @@ def _next_pow2(n: int) -> int:
     return p
 
 
-# module-level jits (config is a hashable frozen dataclass): compiled
-# executables are shared across Scheduler instances, so spinning up a
-# server — or the fig14 policy comparison — never re-pays compilation
-@partial(jax.jit, static_argnums=(1,))
-def _prefill_fn(params, cfg, toks, last_pos):
-    return lm.lm_prefill(params, cfg, {"tokens": toks}, last_pos=last_pos)
-
-
-@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
-def _decode_fn(params, cfg, tokens, cache, index):
-    return lm.lm_decode(params, cfg, tokens, cache, index)
-
-
-@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
-def _decode_paged_fn(params, cfg, tokens, cache, index, tables):
-    return lm.lm_decode_paged(params, cfg, tokens, cache, index, tables)
-
-
-@partial(jax.jit, static_argnums=(1,), donate_argnums=(3,))
-def _chunk_fn(params, cfg, toks, cache, tables, hist, plen, last_pos):
-    return lm.lm_prefill_chunk(params, cfg, toks, cache, tables, hist,
-                               plen, last_pos)
-
-
 class Scheduler:
     """Continuous-batching scheduler over a paged KV-cache pool."""
 
@@ -132,10 +119,12 @@ class Scheduler:
                  policy: str = "continuous",
                  prefill_chunk: int = 0,
                  prefix_sharing: bool = True,
+                 pin_prefix: bool = False,
                  max_prefills_per_step: int = 1,
                  min_prefill_bucket: int = 8,
                  registry=None, watch_every: int = 0,
-                 swap_mode: str = "immediate"):
+                 swap_mode: str = "immediate",
+                 draft_params=None, spec_tokens: int = 0):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -146,8 +135,10 @@ class Scheduler:
             raise ValueError(
                 "serving scheduler supports token-input families only "
                 "(vlm prompts need precomputed embeddings)")
+        if spec_tokens > 0 and draft_params is None:
+            raise ValueError("spec_tokens > 0 needs draft_params "
+                             "(the population drafter)")
         self.cfg = cfg
-        self.params = params
         self.policy = policy
         self.layout = layout
         self.paged = layout == "paged"
@@ -157,20 +148,31 @@ class Scheduler:
         self.registry = registry
         self.watch_every = watch_every
         self.swap_mode = swap_mode
+        self.spec_tokens = int(spec_tokens) if draft_params is not None \
+            else 0
         n_blocks = num_blocks if num_blocks is not None \
             else num_slots * blocks_for(max_len, block_size)
-        if self.paged:
-            self.pool = PagedCachePool(cfg, num_slots, n_blocks,
-                                       block_size=block_size,
-                                       max_seq=max_seq or max_len)
-            self.max_seq = self.pool.max_seq
-        else:
+
+        def make_pool():
+            if self.paged:
+                return PagedLayout(cfg, num_slots, n_blocks,
+                                   block_size=block_size,
+                                   max_seq=max_seq or max_len,
+                                   pin_prefix=pin_prefix)
             if max_seq is not None and max_seq != max_len:
                 raise ValueError("layout='dense' caps requests at max_len")
-            self.pool = CachePool(cfg, num_slots, max_len,
-                                  block_size=block_size,
-                                  num_blocks=num_blocks)
-            self.max_seq = max_len
+            return SlotLayout(cfg, num_slots, max_len,
+                              block_size=block_size,
+                              num_blocks=num_blocks)
+
+        self.pool = make_pool()
+        self.max_seq = self.pool.max_seq if self.paged else max_len
+        # ALL model calls go through sessions; the drafter is a second
+        # session over its own (mirror) pool — same decode API
+        self.session = DecodeSession(cfg, params, self.pool)
+        self.draft: Optional[DecodeSession] = None
+        if draft_params is not None:
+            self.draft = DecodeSession(cfg, draft_params, make_pool())
         # right-padding prompts is only sound for pure-attention stacks:
         # recurrent layers (mamba/xLSTM) would fold padding into their
         # state, so those families prefill at exact prompt length
@@ -180,6 +182,11 @@ class Scheduler:
         self._can_pad = all(s.kind == "a" for s in lm.layer_specs(cfg))
         self._chunked = self.paged and self._can_pad
         self.prefix_sharing = bool(prefix_sharing) and self._chunked
+        # ragged gather-width grouping only pays on the CPU oracle (the
+        # Pallas kernel already skips per-row via pl.when) and needs
+        # every cache leaf slot-free (attention-only paged stacks)
+        self._group_decode = self.paged and self.pool.supports_row_subset \
+            and jax.default_backend() != "tpu"
         self.queue: deque[Request] = deque()
         self.active: Dict[Any, _Active] = {}
         self.prefilling: Dict[Any, _Active] = {}
@@ -195,6 +202,10 @@ class Scheduler:
         self._pending_params = None
         self._head_share = None
         self._step_count = 0
+
+    @property
+    def params(self):
+        return self.session.params
 
     # -- request intake ----------------------------------------------------
     def _reject(self, msg: str):
@@ -236,17 +247,26 @@ class Scheduler:
     def _can_admit_head(self) -> bool:
         req = self.queue[0]
         total = req.prompt_len + req.max_new
-        if not self.paged:
-            return self.pool.can_admit(total)
-        if not self.pool.free_slots:    # skip prefix hashing when full
+        if self.draft is not None and \
+                not self._pool_can_admit(self.draft.layout, total):
             return False
-        self._head_share = None
-        if self.prefix_sharing:
-            # cache the match: _admit reuses it instead of re-hashing
-            self._head_share = (req.rid,
-                                self.pool.find_shared_prefix(req.prompt))
-        shared = len(self._head_share[1][0]) if self._head_share else 0
-        return self.pool.can_admit(total, shared_blocks=shared)
+        return self._pool_can_admit(self.pool, total, head=True)
+
+    def _pool_can_admit(self, pool, total: int, head: bool = False) -> bool:
+        if not self.paged:
+            return pool.can_admit(total)
+        if not pool.free_slots:         # skip prefix hashing when full
+            return False
+        shared = ()
+        if head:
+            self._head_share = None
+            if self.prefix_sharing:
+                # cache the match: _admit reuses it instead of re-hashing
+                req = self.queue[0]
+                self._head_share = (req.rid,
+                                    pool.find_shared_prefix(req.prompt))
+                shared = self._head_share[1][0]
+        return pool.can_admit(total, shared_pages=shared)
 
     def _admit(self, req: Request) -> None:
         P = req.prompt_len
@@ -254,6 +274,7 @@ class Scheduler:
         if not self.paged:
             self.pool.admit(req.rid, total)
             slot = self.pool.slot_of(req.rid)
+            self._admit_draft(req, slot, total)
             self._prefill_dense(req, slot)
             return
         head = getattr(self, "_head_share", None)
@@ -263,6 +284,7 @@ class Scheduler:
         slot, shared_len = self.pool.admit(
             req.rid, total, shared=shared,
             prompt=req.prompt if self.prefix_sharing else None)
+        self._admit_draft(req, slot, total)
         act = _Active(req=req, slot=slot, pf_pos=shared_len,
                       submit_t=getattr(req, "_submit_t",
                                        time.perf_counter()))
@@ -272,38 +294,41 @@ class Scheduler:
         else:
             self._prefill_onepass_paged(act)
 
+    def _admit_draft(self, req: Request, slot: int, total: int) -> None:
+        """Mirror an admission into the drafter's pool (same slot — the
+        two pools see identical admit/release sequences) and prefill
+        the full prompt there one-shot."""
+        if self.draft is None:
+            return
+        if self.paged:
+            d_slot, _ = self.draft.layout.admit(req.rid, total)
+        else:
+            d_slot = self.draft.layout.admit(req.rid, total)
+        assert d_slot == slot, (d_slot, slot)
+        bucket = self._bucket(req.prompt_len) if self._can_pad else None
+        self.draft.prefill(req.rid, req.prompt, bucket=bucket)
+
     def _prefill_dense(self, req: Request, slot: int) -> None:
         P = req.prompt_len
         bucket = self._bucket(P)
-        toks = np.zeros((1, bucket), np.int32)
-        toks[0, :P] = req.prompt
-        logits, cache = _prefill_fn(
-            self.params, self.cfg, jnp.asarray(toks),
-            jnp.asarray([P - 1], jnp.int32))
-        self.pool.insert(req.rid, cache)
+        last = self.session.prefill(req.rid, req.prompt, bucket=bucket)
         act = _Active(req=req, slot=slot, submit_t=getattr(
             req, "_submit_t", time.perf_counter()))
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += bucket
-        self._start_decoding(act, np.asarray(logits[0, -1]
-                                             .astype(jnp.float32)))
+        self._start_decoding(act, last)
 
     def _prefill_onepass_paged(self, act: _Active) -> None:
         """Exact-length one-shot prefill + page scatter (recurrent /
         hybrid families: their state cannot resume mid-prompt)."""
         req = act.req
         P = req.prompt_len
-        toks = req.prompt[None, :].astype(np.int32)
-        logits, cache = _prefill_fn(
-            self.params, self.cfg, jnp.asarray(toks),
-            jnp.asarray([P - 1], jnp.int32))
-        self.pool.insert_prefill(req.rid, cache, P)
+        last = self.session.prefill(req.rid, req.prompt, bucket=None)
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += P
-        self._start_decoding(act, np.asarray(logits[0, -1]
-                                             .astype(jnp.float32)))
+        self._start_decoding(act, last)
 
     def _prefill_step(self) -> None:
         """Advance chunked prefills: one chunk per prefilling request,
@@ -326,15 +351,11 @@ class Scheduler:
         final = act.pf_pos + n >= P
         Cb = chunk if (not final or n == chunk) \
             else self._bucket(n, cap=chunk)
-        toks = np.zeros((1, Cb), np.int32)
-        toks[0, :n] = req.prompt[act.pf_pos:act.pf_pos + n]
         self.pool.ensure(req.rid, act.pf_pos + n)
         W = self._table_bucket(act.pf_pos + n)
-        logits, self.pool.cache = _chunk_fn(
-            self.params, self.cfg, jnp.asarray(toks), self.pool.cache,
-            jnp.asarray(self.pool.tables[act.slot:act.slot + 1, :W]),
-            jnp.int32(act.pf_pos), jnp.int32(P),
-            jnp.asarray([n - 1], jnp.int32))
+        last = self.session.prefill_chunk(
+            req.rid, req.prompt[act.pf_pos:act.pf_pos + n],
+            hist_len=act.pf_pos, prompt_len=P, chunk_bucket=Cb, width=W)
         act.pf_pos += n
         self.stats.prefills += 1
         self.stats.prefill_chunks += 1
@@ -347,8 +368,7 @@ class Scheduler:
             self.pool.register_prefix(req.rid, req.prompt[:act.pf_pos])
         if final:
             del self.prefilling[req.rid]
-            self._start_decoding(act, np.asarray(logits[0, -1]
-                                                 .astype(jnp.float32)))
+            self._start_decoding(act, last)
 
     def _start_decoding(self, act: _Active, last_logits: np.ndarray) -> None:
         """Sample the first token off the prefill logits and move the
@@ -364,7 +384,9 @@ class Scheduler:
     def _sample(self, logits_row, req: Request, ntok: int) -> int:
         """logits_row: (V,) host array.  Sampling stays on host (Gumbel
         trick for temperature > 0) so the only device dispatch per step
-        is the batched decode itself."""
+        is the batched decode itself.  Deterministic in (seed, ntok) —
+        which is what makes speculative decoding output-identical to
+        target-only decoding at ANY temperature, not just greedy."""
         if req.temperature <= 0.0:
             return int(np.argmax(logits_row))
         rng = np.random.default_rng([req.seed, ntok])
@@ -390,16 +412,20 @@ class Scheduler:
         self.stats.completed += 1
         self.stats.latency.append(time.perf_counter() - act.submit_t)
         slot = self.pool.release(rid)
+        if self.draft is not None:
+            self.draft.layout.release(rid)
         del self.active[rid]
         del self._by_slot[slot]
         self._next_token[slot] = 0
         self._index[slot] = self._idle_index
 
     def set_params(self, params) -> None:
-        """Hot-swap model weights between steps (cache layout unchanged;
-        the prefix cache is flushed — old-weight pages must not be
-        shared into post-swap admissions)."""
-        self.params = params
+        """Hot-swap TARGET weights between steps (cache layout
+        unchanged; the prefix cache is flushed — old-weight pages must
+        not be shared into post-swap admissions).  The drafter keeps
+        its own weights: draft tokens are only proposals, verified
+        against the new target before acceptance."""
+        self.session.set_params(params)
         if self.paged:
             self.pool.invalidate_prefix()
             self._head_share = None
@@ -427,7 +453,8 @@ class Scheduler:
 
     def step(self) -> None:
         """One scheduler iteration: hot-swap check, admission, chunked
-        prefill, one batched decode step, completion."""
+        prefill, one batched decode (or speculative) round,
+        completion."""
         self.stats.start()
         self._maybe_hot_swap()
         self._step_count += 1
@@ -448,36 +475,195 @@ class Scheduler:
         # -- chunked prefill slices (interleaved with decode)
         if self.prefilling:
             self._prefill_step()
-        # -- one decode step over the pool (per-slot write indices)
+        # -- one decode round over the pool (per-slot write indices)
         if self.active:
-            tokens = jnp.asarray(self._next_token[:, None])
-            index = jnp.asarray(self._index)
-            if self.paged:
-                bs = self.pool.block_size
-                for act in self.active.values():
-                    # a new page is only ever needed when the write
-                    # position lands on a page boundary (ensure is
-                    # idempotent; skip the bookkeeping otherwise)
-                    idx = int(self._index[act.slot])
-                    if idx % bs == 0:
-                        self.pool.ensure(act.req.rid, idx + 1)
-                W = self._table_bucket(int(self._index.max()) + 1)
-                tables = jnp.asarray(self.pool.tables[:, :W])
-                logits, self.pool.cache = _decode_paged_fn(
-                    self.params, self.cfg, tokens, self.pool.cache,
-                    index, tables)
+            if self.spec_tokens > 0:
+                self._spec_round()
             else:
-                logits, self.pool.cache = _decode_fn(
-                    self.params, self.cfg, tokens, self.pool.cache, index)
+                self._decode_round()
+        self.stats.sample_step(len(self.queue),
+                               len(self.active) + len(self.prefilling))
+
+    # -- plain decode --------------------------------------------------------
+    def _ensure_decode_pages(self, pool, last_token_pos: Dict[int, int]
+                             ) -> None:
+        """Materialize any page a row's upcoming writes land on.
+        ``last_token_pos[slot]`` is the LAST write position of the
+        round (ensure is idempotent; page boundaries are the only
+        times new pages appear)."""
+        bs = pool.block_size
+        for act in self.active.values():
+            first = int(self._index[act.slot])
+            last = last_token_pos[act.slot]
+            if first // bs != (first - 1) // bs or last // bs != first // bs:
+                pool.ensure(act.req.rid, last + 1)
+
+    def _width_split(self) -> List[tuple]:
+        """Partition active rows for the ragged-gather fix: when one
+        long request's pow2 table width is >= ``_SPLIT_RATIO``x every
+        other row's, split the round into (narrow, wide) groups so the
+        jnp oracle stops paying the long row's gather width for the
+        whole batch.  Everything else stays ONE dispatch — per-call
+        overhead beats gather savings until the spread is pathological.
+        Returns [(width_bucket, [slots])]."""
+        buckets = {act.slot: self._table_bucket(
+            int(self._index[act.slot]) + 1)
+            for act in self.active.values()}
+        wide_w = max(buckets.values())
+        narrow = [s for s, w in buckets.items() if w < wide_w]
+        narrow_w = max((buckets[s] for s in narrow), default=0)
+        if not self._group_decode or not narrow \
+                or wide_w < self._SPLIT_RATIO * narrow_w:
+            return [(wide_w, list(buckets))]
+        wide = [s for s, w in buckets.items() if w == wide_w]
+        return [(narrow_w, narrow), (wide_w, wide)]
+
+    _SPLIT_RATIO = 4
+
+    def _decode_round(self) -> None:
+        if self.paged:
+            targets = {a.slot: int(self._index[a.slot])
+                       for a in self.active.values()}
+            self._ensure_decode_pages(self.pool, targets)
+            groups = self._width_split()
+        else:
+            groups = [(0, None)]
+        self.stats.decode_steps += 1
+        if len(groups) == 1:
+            # common path: one full-batch dispatch
+            width = groups[0][0] if self.paged else None
+            logits = self.session.step(self._next_token[:, None],
+                                       self._index, width=width)
             rows = np.asarray(logits.astype(jnp.float32))
-            self.stats.decode_steps += 1
             self.stats.decode_slot_steps += self.pool.num_slots
             # sample per active slot; finishing frees the slot in-place
             for act in list(self.active.values()):
                 tok = self._sample(rows[act.slot, 0], act.req, act.ntok)
                 self._accept_token(act, tok)
-        self.stats.sample_step(len(self.queue),
-                               len(self.active) + len(self.prefilling))
+            return
+        # ragged split: one subset dispatch per width group (row counts
+        # pow2-bucketed so the compile count stays logarithmic)
+        null = self.pool.null_page
+        for W, slots in groups:
+            n = min(_next_pow2(len(slots)), self.pool.num_slots)
+            tokens = np.zeros((n, 1), np.int32)
+            index = np.full((n,), -1, np.int32)
+            tables = np.full((n, W), null, np.int32)
+            for i, s in enumerate(slots):
+                tokens[i, 0] = self._next_token[s]
+                index[i] = self._index[s]
+                tables[i] = self.pool.tables[s, :W]
+            logits = self.session.step(tokens, index, tables=tables)
+            rows = np.asarray(logits.astype(jnp.float32))
+            self.stats.decode_slot_steps += n
+            self.stats.ragged_splits += 1
+            for i, s in enumerate(slots):
+                act = self._by_slot.get(s)
+                if act is not None:
+                    tok = self._sample(rows[i, 0], act.req, act.ntok)
+                    self._accept_token(act, tok)
+
+    # -- speculative decode --------------------------------------------------
+    def _spec_round(self) -> None:
+        """One population-speculative round.
+
+        The drafter proposes ``spec_tokens`` tokens per row
+        sequentially; the target verifies the row's pending token plus
+        all proposals in ONE (K+1)-token ``session.step``; the accepted
+        prefix (matching proposals + one target token — correction or
+        bonus) is kept, so every emitted token is a TARGET sample and
+        the output stream is identical to target-only decoding.  Rows
+        that reject mid-block restore their recurrent snapshot and
+        replay the accepted prefix with a ``valid`` mask (attention KV
+        needs no rollback: stale tail positions are causally masked and
+        overwritten).
+        """
+        Kv = self.spec_tokens + 1
+        B = self.pool.num_slots
+        acts = list(self.active.values())
+        has_rec = self.pool.has_recurrent
+        base = self._index.copy()
+        # per-row cap: writes at base..base+cap-1 must stay inside the
+        # prompt+max_new reservation (a cap-truncated row finishes this
+        # round anyway)
+        cap = np.zeros((B,), np.int32)
+        for act in acts:
+            cap[act.slot] = min(Kv, act.req.max_new - act.ntok + 1)
+        if self.paged:
+            targets = {a.slot: int(base[a.slot]) + int(cap[a.slot]) - 1
+                       for a in acts}
+            self._ensure_decode_pages(self.pool, targets)
+            self._ensure_decode_pages(self.draft.layout, targets)
+            W = self._table_bucket(int((base + cap).max()))
+        else:
+            W = None
+        block = np.zeros((B, Kv), np.int32)
+        block[:, 0] = self._next_token
+        ntok0 = {act.slot: act.ntok for act in acts}
+
+        # -- draft: Kv sequential single-token steps (the last feeds the
+        # final proposal so drafter and target caches stay aligned when
+        # everything is accepted)
+        d_snap = self.draft.snapshot() if has_rec else ()
+        for t in range(Kv):
+            valid_t = (cap > t).astype(np.int32)
+            idx_t = np.where(self._index >= 0, base + t,
+                             self._idle_index).astype(np.int32)
+            logits = self.draft.step(block[:, t:t + 1], idx_t,
+                                     valid=valid_t, width=W)
+            self.stats.spec_draft_steps += 1
+            if t + 1 >= Kv:
+                break
+            rows = np.asarray(logits.astype(jnp.float32))
+            for act in acts:
+                s = act.slot
+                if t + 1 < cap[s]:
+                    block[s, t + 1] = self._sample(rows[s, 0], act.req,
+                                                   ntok0[s] + t)
+
+        # -- target: verify the whole block in one K-token step
+        t_snap = self.session.snapshot() if has_rec else ()
+        vlogits = self.session.step(block, base, valid=cap, width=W)
+        rows = np.asarray(vlogits.astype(jnp.float32))   # (B, Kv, V)
+        self.stats.decode_steps += 1
+        self.stats.spec_rounds += 1
+        self.stats.decode_slot_steps += B
+
+        # -- acceptance: longest matching prefix + one target token
+        fed_valid = np.zeros((B,), np.int32)
+        for act in acts:
+            s = act.slot
+            c = int(cap[s])
+            n0 = ntok0[s]
+            appended = 0
+            for t in range(c):
+                g = self._sample(rows[s, t], act.req, n0 + t)
+                self._accept_token(act, g)               # may finish
+                appended += 1
+                if act.req.rid not in self.active:
+                    break
+                if t + 1 >= c or g != int(block[s, t + 1]):
+                    break
+            fed_valid[s] = appended
+            self.stats.spec_draft_proposed += max(0, c - 1)
+            self.stats.spec_draft_accepted += max(0, appended - 1)
+
+        # -- rollback: recurrent state of still-active rows that kept
+        # fewer than they fed (attention-only stacks skip this wholesale)
+        if has_rec:
+            rb = np.zeros((B,), bool)
+            replay = np.zeros((B,), np.int32)
+            for act in acts:
+                s = act.slot
+                if act.req.rid in self.active and fed_valid[s] < cap[s]:
+                    rb[s] = True
+                    replay[s] = fed_valid[s]
+            if rb.any():
+                self.session.restore(t_snap, rb)
+                self.session.step(block, base, valid=replay, width=W)
+                self.draft.restore(d_snap, rb)
+                self.draft.step(block, base, valid=replay, width=W)
+                self.stats.spec_replays += 1
 
     def _table_bucket(self, max_tokens: int) -> int:
         """Gather width (block-table columns) for this step: pow2-

@@ -41,29 +41,34 @@ def _prompts(cfg, n, max_len, seed=1):
     (3, 8, 2, 32, 8, 2),     # GQA 4:1
     (2, 4, 1, 64, 4, 4),     # MQA
 ])
+@pytest.mark.parametrize("K", [1, 3])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
-def test_paged_attention_kernel_matches_ref(B, H, Hkv, D, bs, W, dtype):
-    """Pallas gather-decode kernel (interpret) == jnp oracle over
-    scattered pages, null-page rows included."""
+def test_paged_attention_kernel_matches_ref(B, H, Hkv, D, bs, W, K, dtype):
+    """Pallas gather-decode/verify kernel (interpret) == jnp oracle
+    over scattered pages, null-page rows included; K > 1 exercises the
+    speculative-verify staircase (query t reaches lengths + t)."""
     from repro.kernels.ops import paged_attention
     from repro.kernels.ref import paged_attention_ref
 
     P = 9                      # pool pages (+1 null)
     ks = jax.random.split(KEY, 3)
-    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    q = jax.random.normal(ks[0], (B, K, H, D), dtype)
+    if K == 1:                 # exercise the 3D single-token surface
+        q = q[:, 0]
     kp = jax.random.normal(ks[1], (P + 1, bs, Hkv, D), dtype)
     vp = jax.random.normal(ks[2], (P + 1, bs, Hkv, D), dtype)
     rng = np.random.default_rng(0)
     # scattered, non-contiguous tables; trailing entries null
     tables = rng.permutation(P)[:B * W].reshape(B, W).astype(np.int32)
-    lengths = rng.integers(1, W * bs + 1, size=(B,)).astype(np.int32)
+    lengths = rng.integers(1, W * bs - K + 2, size=(B,)).astype(np.int32)
     for b in range(B):
-        used = blocks_for(int(lengths[b]), bs)
+        used = blocks_for(int(lengths[b]) + K - 1, bs)
         tables[b, used:] = P    # null page
     out = paged_attention(q, kp, vp, jnp.asarray(tables),
                           jnp.asarray(lengths), interpret=True)
     ref = paged_attention_ref(q, kp, vp, jnp.asarray(tables),
                               jnp.asarray(lengths))
+    assert out.shape == q.shape
     tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(ref, np.float32),
