@@ -22,10 +22,20 @@ through three configurations at EQUAL KV-cache memory:
   * ``spec``     — the paged configuration plus population speculative
     decoding through the same DecodeSession API: a drafter proposes
     SPEC_TOKENS tokens per round and the target verifies them in one
-    multi-token step.  The drafter here is the target itself — the
-    accept-rate UPPER BOUND (a real deployment drafts with an earlier
-    LTFB population checkpoint); the arm proves the mechanics and
-    asserts token-identical output vs ``paged``.
+    multi-token step (ONE fused draft dispatch + one verify per
+    round).  The drafter here is the target itself — the accept-rate
+    UPPER BOUND (a real deployment drafts with an earlier LTFB
+    population checkpoint); the arm proves the mechanics and asserts
+    token-identical output vs ``paged``.
+  * ``mesh``     — the paged configuration served by the
+    :class:`repro.serve.mesh.MeshScheduler` over a ("data", "model")
+    device mesh (weights tensor-parallel over `model`, decode batch +
+    per-shard page pools over `data`, host-0 admission broadcast);
+    runs when >= MESH_DEVICES devices are visible (CI emulates 8) and
+    asserts token-identical output vs ``paged``.  On emulated CPU
+    devices the wall-clock is a mechanics check, not a speedup claim —
+    the arm exists so BENCH_serving.json tracks the mesh path the
+    moment real accelerators appear.
 
 Reported per config: wall-clock tokens/s, time-to-first-token
 (mean/p95), decode steps, page high-water, prefix-cache hits, and for
@@ -67,6 +77,11 @@ PAGED_SLOTS = 8
 LONG_PROMPT, LONG_NEW = 96, 24
 # draft tokens per speculative round (the spec arm)
 SPEC_TOKENS = 3
+# the mesh arm: data=2 keeps each shard's pool (NUM_BLOCKS/2 pages) big
+# enough for the beyond-ceiling request, model=2 exercises the
+# weights-stationary TP axis
+MESH_SHAPE = (2, 2)
+MESH_DEVICES = MESH_SHAPE[0] * MESH_SHAPE[1]
 
 
 def build_trace(cfg, n_requests: int, seed: int = 0, with_long: bool = True):
@@ -99,8 +114,8 @@ def make_scheduler(cfg, params, mode: str) -> Scheduler:
             cfg, params, num_slots=DENSE_SLOTS, max_len=DENSE_MAX_LEN,
             block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS, layout="dense",
             policy="static" if mode == "static" else "continuous")
-    return Scheduler(
-        cfg, params, num_slots=PAGED_SLOTS, max_len=DENSE_MAX_LEN,
+    paged_kw = dict(
+        num_slots=PAGED_SLOTS, max_len=DENSE_MAX_LEN,
         block_size=BLOCK_SIZE, num_blocks=NUM_BLOCKS, layout="paged",
         max_seq=LONG_PROMPT + LONG_NEW, prefill_chunk=2 * BLOCK_SIZE,
         max_prefills_per_step=3, policy="continuous",
@@ -108,6 +123,11 @@ def make_scheduler(cfg, params, mode: str) -> Scheduler:
         # with an earlier/smaller LTFB population checkpoint instead)
         draft_params=params if mode == "spec" else None,
         spec_tokens=SPEC_TOKENS if mode == "spec" else 0)
+    if mode == "mesh":
+        from repro.serve.mesh import MeshScheduler
+        return MeshScheduler(cfg, params, mesh_shape=MESH_SHAPE,
+                             **paged_kw)
+    return Scheduler(cfg, params, **paged_kw)
 
 
 def serve_once(cfg, params, reqs, mode: str) -> dict:
@@ -139,6 +159,12 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
     # the compile), then run the configs round-robin and report each
     # one's median of 5, so slow-machine drift hits all configs alike
     modes = ("static", "dense", "paged", "spec")
+    if jax.device_count() >= MESH_DEVICES:
+        modes = modes + ("mesh",)
+    else:
+        print(f"# fig14 mesh arm SKIPPED: needs {MESH_DEVICES} devices, "
+              f"have {jax.device_count()} (set XLA_FLAGS="
+              "--xla_force_host_platform_device_count=8)")
     for mode in modes:
         serve_once(cfg, params, reqs, mode)
     runs = {m: [] for m in modes}
@@ -189,6 +215,33 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
           f"verify_rounds={out['spec']['spec_rounds']} "
           f"vs paged decode_steps={out['paged']['decode_steps']}")
 
+    # the mesh arm must schedule the trace identically (same admissions,
+    # nothing rejected) ...
+    if "mesh" in out:
+        assert out["mesh"]["rejected"] == 0 and \
+            out["mesh"]["completed"] == len(reqs), \
+            "mesh arm must admit the whole trace"
+        # ... and be TOKEN-IDENTICAL to single-device serving.  The
+        # identity assertion runs one untimed float32 pass of each:
+        # the timed arms serve in bfloat16, where resharding reorders
+        # accumulation (TP splits the o_proj/lm_head contractions) and
+        # the last mantissa bit can flip an argmax near a tie — a
+        # numerics property of the dtype, not a scheduler divergence.
+        import dataclasses
+        cfg32 = dataclasses.replace(cfg, dtype="float32")
+        params32, _ = init_lm(cfg32, jax.random.PRNGKey(0))
+        reqs32 = build_trace(cfg32, n)
+        p32 = serve_once(cfg32, params32, reqs32, "paged")
+        m32 = serve_once(cfg32, params32, reqs32, "mesh")
+        for rid, toks in p32["_results"].items():
+            assert m32["_results"][rid].tolist() == toks.tolist(), \
+                f"mesh arm diverged from single-device serving on {rid!r}"
+        print(f"# fig14 mesh == paged token-identical at f32 "
+              f"({m32['completed']} requests) on a "
+              f"{MESH_SHAPE[0]}x{MESH_SHAPE[1]} (data, model) mesh; "
+              f"bf16 arm: {out['mesh']['tokens_per_s']:.1f} tok/s on "
+              f"emulated devices (mechanics check, not a speedup claim)")
+
     cont = out["dense"]["tokens_per_s"] / \
         max(out["static"]["tokens_per_s"], 1e-9)
     paged = out["paged"]["tokens_per_s"] / \
@@ -213,10 +266,13 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
                       "pool_tokens": POOL_TOKENS,
                       "dense_max_len": DENSE_MAX_LEN,
                       "long_request": LONG_PROMPT + LONG_NEW,
-                      "spec_tokens": SPEC_TOKENS},
+                      "spec_tokens": SPEC_TOKENS,
+                      "mesh_shape": list(MESH_SHAPE)
+                      if "mesh" in out else None},
             "speedup_paged_vs_dense": paged,
             "speedup_continuous_vs_static": cont,
             "speedup_spec_vs_paged": spec,
+            "mesh_token_identical": "mesh" in out,
             "configs": {m: {
                 "tokens_per_s": d["tokens_per_s"],
                 "ttft_mean_s": d["ttft_mean_s"],

@@ -33,7 +33,7 @@ from repro.configs.registry import dryrun_cells, get_config, get_shape
 from repro.launch import specs as specs_lib
 from repro.launch.mesh import make_ltfb_mesh, make_production_mesh
 from repro.parallel import roofline
-from repro.parallel.sharding import tree_shardings, use_sharding
+from repro.parallel.sharding import serve_rules, tree_shardings, use_sharding
 from repro.train import steps as steps_lib
 
 
@@ -66,10 +66,10 @@ PRESETS = {
     # serve — weights-stationary decode: pure TP over `model` (weights
     # never gathered; per-token collectives are tiny activation
     # all-reduces), batch DP over (pod, data), KV cache seq over `model`.
-    "serve": {"batch": ("pod", "data"), "seq_sp": None,
-              "embed": None, "vocab": "model", "heads_w": "model",
-              "mlp": "model", "experts": "model", "state_w": "model",
-              "kv_seq": "model"},
+    # The rule set lives in parallel/sharding.py because the LIVE
+    # serving mesh (serve/mesh.py) places weights and cache pools with
+    # the same rules this dry-run preset compiles against.
+    "serve": serve_rules(),
 }
 
 

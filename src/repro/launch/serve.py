@@ -70,7 +70,7 @@ def make_registry(args, like_params, metric_fn=None,
 
 def run_lm(args) -> Dict[str, object]:
     from repro.models.lm import init_lm
-    from repro.serve.registry import load_draft
+    from repro.serve.registry import check_draft_compat, load_draft
 
     cfg = get_config(args.arch, smoke=args.smoke)
     like, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
@@ -81,17 +81,28 @@ def run_lm(args) -> Dict[str, object]:
         print(f"[serve] winner: step={registry.step} "
               f"trainer={registry.info.get('trainer')} "
               f"wins={registry.info.get('wins')}")
-    draft_params = None
+    draft_params, draft_cfg = None, None
     if args.draft_ckpt:
-        draft_params, dinfo = load_draft(args.draft_ckpt, like,
-                                         step=args.draft_step)
+        draft_like = like
+        if args.draft_arch and args.draft_arch != args.arch:
+            # a SMALLER draft arch: its own config + param template,
+            # tokenizer-compat asserted before any restore is attempted
+            draft_cfg = get_config(args.draft_arch, smoke=args.smoke)
+            check_draft_compat(cfg, draft_cfg)
+            draft_like, _ = init_lm(draft_cfg,
+                                    jax.random.PRNGKey(args.seed))
+        draft_params, dinfo = load_draft(args.draft_ckpt, draft_like,
+                                         step=args.draft_step,
+                                         expect_vocab=cfg.vocab_size)
         print(f"[serve] drafter: {args.draft_ckpt} "
+              f"arch={(draft_cfg or cfg).name} "
               f"step={dinfo.get('step')} trainer={dinfo.get('trainer')} "
-              f"spec_tokens={args.spec_tokens}")
+              f"spec_tokens={args.spec_tokens} "
+              f"fused={not args.no_spec_fused} adapt={args.spec_adapt}")
     max_len = args.max_len or max(
         parse_lens(args.prompt_lens)) + args.max_new
-    sched = Scheduler(
-        cfg, params, num_slots=args.slots, max_len=max_len,
+    sched_kw = dict(
+        num_slots=args.slots, max_len=max_len,
         block_size=args.block_size, num_blocks=args.num_blocks,
         max_seq=args.max_seq, layout=args.layout,
         policy=args.policy, prefill_chunk=args.prefill_chunk,
@@ -100,7 +111,19 @@ def run_lm(args) -> Dict[str, object]:
         max_prefills_per_step=args.prefill_per_step,
         registry=registry, watch_every=args.watch_every,
         swap_mode=args.swap_mode,
-        draft_params=draft_params, spec_tokens=args.spec_tokens)
+        draft_params=draft_params, spec_tokens=args.spec_tokens,
+        draft_cfg=draft_cfg, spec_fused=not args.no_spec_fused,
+        spec_adapt=args.spec_adapt)
+    if args.mesh:
+        from repro.serve.mesh import MeshScheduler, parse_mesh
+        data, model = parse_mesh(args.mesh)
+        sched = MeshScheduler(cfg, params, mesh_shape=(data, model),
+                              **sched_kw)
+        print(f"[serve] mesh: data={data} model={model} "
+              f"devices={data * model} slots={sched.pool.num_slots} "
+              f"(host-0 scheduler, per-shard page pools)")
+    else:
+        sched = Scheduler(cfg, params, **sched_kw)
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
                           temperature=args.temperature, seed=args.seed)
@@ -127,6 +150,11 @@ def run_lm(args) -> Dict[str, object]:
               f"shared_tokens={pd['prefix_shared_tokens']} "
               f"pinned={pd['pinned_blocks']} "
               f"prefill_chunks={sched.stats.prefill_chunks}")
+    if args.spec_adapt and sched.spec_k_by_rid:
+        ks = sched.spec_k_by_rid
+        print(f"[serve] spec-adapt per-row K (final): "
+              f"{ {r: ks[r] for r in sorted(ks, key=str)} } "
+              f"k_mean={sched.stats.as_dict()['spec_k_mean']:.2f}")
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
               f"hot_swaps={sched.stats.hot_swaps}")
@@ -186,6 +214,13 @@ def main(argv=None) -> int:
                          "tournament winner from")
     ap.add_argument("--watch-every", type=int, default=0,
                     help="poll for newer winners every N steps (0 = off)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve over a device mesh: 'DATA,MODEL' (e.g. "
+                         "'4,2') or 'data=4,model=2' — weights "
+                         "tensor-parallel over `model`, decode batch + "
+                         "every cache leaf (incl. per-shard page pools) "
+                         "over `data`, admission decided on host 0 and "
+                         "broadcast (lm workload)")
     # scheduler
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=0,
@@ -222,11 +257,24 @@ def main(argv=None) -> int:
     ap.add_argument("--draft-step", type=int, default=None,
                     help="population step to draft from (with a dir "
                          "--draft-ckpt; default: earliest)")
+    ap.add_argument("--draft-arch", default=None, choices=sorted(ARCHS),
+                    help="the drafter's arch when it differs from the "
+                         "target (a smaller model; must share the "
+                         "target's vocab/tokenizer — checked at load)")
     ap.add_argument("--spec-tokens", type=int, default=0,
                     help="draft tokens proposed per speculative round "
                          "(0 = off); the target verifies K+1 tokens in "
                          "one multi-token step — output is token-"
                          "identical to target-only decoding")
+    ap.add_argument("--no-spec-fused", action="store_true",
+                    help="disable the fused draft step (K proposals in "
+                         "ONE dispatch via on-device greedy feed + host "
+                         "resample; off = K+1 sequential draft "
+                         "dispatches per round)")
+    ap.add_argument("--spec-adapt", action="store_true",
+                    help="adapt the speculative depth PER ROW from its "
+                         "accept-rate history (within [1, spec-tokens]); "
+                         "per-row K reported in the [serve] metrics")
     ap.add_argument("--swap-mode", default="immediate",
                     choices=("immediate", "drain"),
                     help="hot-swap policy: immediate applies new "

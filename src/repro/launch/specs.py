@@ -52,6 +52,23 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int):
     return _shapes_and_aux(lambda: lm.init_cache(cfg, batch, max_len))
 
 
+def serve_cache_specs(cfg: ModelConfig, num_slots: int, num_pages: int,
+                      block_size: int = 16):
+    """PAGED serving-cache specs (ShapeDtypeStructs + logical axes).
+
+    The stand-in for the live serving mesh's cache pytree: attention
+    layers get ``(num_pages + 1, block_size, Hkv, D)`` pools (axes
+    include ``"pages"``, which the serve rules shard over ``data``),
+    recurrent layers per-slot state rows (``"batch"`` over ``data``).
+    Lets capacity studies resolve the mesh placement of any
+    (arch x pool) cell without allocating a byte — the same axes the
+    runtime (:mod:`repro.serve.mesh`) places the real pools with.
+    """
+    return _shapes_and_aux(
+        lambda: lm.init_cache(cfg, num_slots,
+                              pages=(num_pages, block_size)))
+
+
 def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     B, S = shape.global_batch, shape.seq_len
     if cfg.family == "vlm":

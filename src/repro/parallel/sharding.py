@@ -49,6 +49,7 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check: bool = False):
 #   "heads"    : per-head activation dim — TP
 #   "mlp_act"  : FFN hidden activation — TP
 #   "kv_seq"   : KV-cache sequence dim — TP (flash-decode style)
+#   "pages"    : paged-KV pool page dim — DP over `data` (serving mesh)
 DEFAULT_RULES: Dict[str, Any] = {
     "batch": ("pod", "data"),
     "seq": None,
@@ -71,8 +72,38 @@ DEFAULT_RULES: Dict[str, Any] = {
     "layers": None,
     "period": None,
     "conv": None,
+    "pages": "data",
     None: None,
 }
+
+# serve — weights-stationary decode: pure TP over `model` (weights never
+# gathered; per-token collectives are tiny activation all-reduces), the
+# decode batch DP over (pod, data), and every KV-cache leaf over `data`:
+# dense rows / recurrent state on their batch dim, paged pools on the
+# page dim (each data shard owns a private sub-pool its block tables
+# address — see repro.serve.mesh).  Shared by the dry-run "serve" preset
+# (launch/dryrun.py) and the live serving mesh (serve/mesh.py) so the
+# compile-time capacity study and the runtime agree on the layout.
+SERVE_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq_sp": None,
+    "embed": None,
+    "vocab": "model",
+    "heads_w": "model",
+    "mlp": "model",
+    "experts": "model",
+    "state_w": "model",
+    "kv_seq": "model",
+    "kv_heads": "model",
+    "pages": "data",
+}
+
+
+def serve_rules(**overrides) -> Dict[str, Any]:
+    """The weights-stationary serving rule set (copy; override freely)."""
+    rules = dict(SERVE_RULES)
+    rules.update(overrides)
+    return rules
 
 
 @dataclass
@@ -148,6 +179,17 @@ def use_sharding(mesh: Optional[Mesh], **rule_overrides):
         yield _local.ctx
     finally:
         _local.ctx = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    """Mesh of the active sharding context (None outside one).
+
+    Read at TRACE time: kernel dispatchers (``repro.kernels.ops``) use
+    it to pick a shard_map lowering when model code is being traced
+    under a serving mesh.
+    """
+    ctx = _current()
+    return ctx.mesh if ctx is not None else None
 
 
 def constrain(x: jax.Array, *axes: AxisName) -> jax.Array:

@@ -22,10 +22,15 @@ from repro.serve.session import DecodeSession
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, max_len: int = 1024):
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 1024,
+                 mesh=None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
+        # with a ("data", "model") mesh the batch decodes sharded:
+        # weights-stationary TP over `model`, cache rows over `data`
+        # (see repro.serve.mesh; batch must divide the data axis)
+        self.mesh = mesh
         # one DecodeSession per batch size, created lazily and reused
         # across generate() calls (the layout's pool is allocated once;
         # jitted executables are module-level and shared regardless)
@@ -33,9 +38,15 @@ class Engine:
 
     def _session(self, batch: int) -> DecodeSession:
         if batch not in self._sessions:
-            self._sessions[batch] = DecodeSession(
-                self.cfg, self.params,
-                SlotLayout(self.cfg, batch, self.max_len))
+            if self.mesh is not None:
+                from repro.serve.mesh import make_engine_session
+                self._sessions[batch] = make_engine_session(
+                    self.cfg, self.params, self.mesh, batch,
+                    self.max_len)
+            else:
+                self._sessions[batch] = DecodeSession(
+                    self.cfg, self.params,
+                    SlotLayout(self.cfg, batch, self.max_len))
         sess = self._sessions[batch]
         sess.set_params(self.params)    # pick up any weight swap
         return sess

@@ -423,6 +423,191 @@ class CacheLayout:
 # ---------------------------------------------------------------------------
 
 
+class PageShard:
+    """Host-side accounting for ONE page-pool shard.
+
+    A :class:`BlockManager` over shard-LOCAL page ids plus the prefix
+    cache (copy-on-admit sharing, pinning, weight-epoch invalidation).
+    The ordinary single-device :class:`PagedLayout` holds exactly one;
+    the serving mesh holds one per ``data`` shard, each the private
+    accountant of that shard's slice of the physical pool — admission,
+    eviction and prefix decisions never consult another shard, which is
+    what keeps them host-local on a multi-host mesh.  ``offset`` is the
+    shard's base in the GLOBAL page-id space block tables use: local
+    page ``p`` is global page ``offset + p`` and the shard's null page
+    is ``offset + num_pages``.
+    """
+
+    def __init__(self, num_pages: int, block_size: int,
+                 pin_prefix: bool = False, offset: int = 0):
+        self.blocks = BlockManager(num_pages, block_size)
+        self.blocks.on_reclaim = self._evict
+        self.null_page = num_pages              # local id
+        self.offset = offset
+        self.pin_prefix = bool(pin_prefix)
+        # prefix cache: chained token-chunk key -> canonical physical
+        # page, plus every live page known to hold that content (a
+        # follower that prefilled its own copy before the prefix was
+        # registered is still a valid donor once the original dies)
+        self._prefix: Dict[Any, int] = {}
+        self._key_pages: Dict[Any, set] = {}
+        self._page_key: Dict[int, Any] = {}
+        # per-rid incremental registration cursor: (pages done, last key)
+        self._reg_state: Dict[Any, Tuple[int, Any]] = {}
+        # weight epoch: bumped by invalidate_prefix() on hot swap so
+        # pages computed under old weights are never shared forward
+        self._epoch = 0
+        self._admit_epoch: Dict[Any, int] = {}
+        self.prefix_hits = 0
+        self.prefix_shared_tokens = 0
+
+    # -- prefix sharing ----------------------------------------------------
+    @staticmethod
+    def _chunk_keys(prompt: np.ndarray, block_size: int, start: int = 0,
+                    prev=None):
+        """Chained keys for fully-filled prompt pages ``start..``: key_i
+        commits to ALL tokens up to and including page i (so equal keys
+        mean equal prefixes, not just equal pages).  ``prev`` must be
+        the chain key of page ``start - 1`` when resuming."""
+        keys = []
+        for i in range(start, len(prompt) // block_size):
+            chunk = tuple(int(t) for t in
+                          prompt[i * block_size:(i + 1) * block_size])
+            prev = (prev, chunk)
+            keys.append(prev)
+        return keys
+
+    def probe_prefix(self, key_at, max_pages: int) -> List[int]:
+        """Longest live prefix run in this shard using externally
+        derived chain keys (``key_at(i)`` -> key of page i).  The
+        sharded layout derives the keys ONCE (memoized) and probes
+        every shard with the same supplier, so a D-shard admission
+        check hashes the prompt once, not D times."""
+        pages = []
+        for i in range(max_pages):
+            page = self._prefix.get(key_at(i))
+            if page is None or self.blocks.refcount(page) == 0:
+                break
+            pages.append(page)
+        return pages
+
+    def find_shared_prefix(self, prompt: np.ndarray
+                           ) -> Tuple[List[int], int]:
+        """Longest registered prefix of `prompt` in live LOCAL pages.
+
+        Returns (local page ids, shared token count).  Capped at
+        ``len(prompt) - 1`` so at least one suffix token is always
+        prefilled (its hidden state supplies the first sampled token).
+        Keys are derived lazily page by page, so a miss on page 0 costs
+        one chunk hash — this runs on every admission check.
+        """
+        bs = self.blocks.block_size
+        max_pages = (len(prompt) - 1) // bs
+        pages = self.probe_prefix(_prefix_key_memo(prompt, bs),
+                                  max_pages)
+        return pages, len(pages) * bs
+
+    def admit(self, rid, n_tokens: int,
+              shared: Tuple[List[int], int]) -> None:
+        """Page-budget side of an admission: reserve ``n_tokens`` with
+        ``shared`` (local prefix pages) mapped in, stamp the weight
+        epoch, and resume the registration cursor past the shared
+        pages."""
+        shared_pages, shared_len = shared
+        self.blocks.reserve(rid, n_tokens, shared=shared_pages)
+        self._admit_epoch[rid] = self._epoch
+        if shared_pages:
+            self.prefix_hits += 1
+            self.prefix_shared_tokens += shared_len
+            # registration resumes after the shared pages — their keys
+            # are already in the cache
+            self._reg_state[rid] = (len(shared_pages),
+                                    self._page_key[shared_pages[-1]])
+
+    def register_prefix(self, rid, prompt: np.ndarray) -> None:
+        """Offer `rid`'s fully-filled prompt pages to future requests.
+
+        Incremental: per-chunk calls during chunked prefill only hash
+        the pages filled since the last call, resuming the key chain
+        instead of re-deriving it from page 0 every time.  Requests
+        admitted before the last weight swap are refused — their pages
+        (or their pages' attention context) came from the old model.
+        """
+        if self._admit_epoch.get(rid, -1) != self._epoch:
+            return
+        table = self.blocks.table(rid)
+        start, prev = self._reg_state.get(rid, (0, None))
+        keys = self._chunk_keys(prompt, self.blocks.block_size,
+                                start=start, prev=prev)
+        for i, key in zip(range(start, start + len(keys)), keys):
+            if i >= len(table):
+                break
+            page = table[i]
+            if self._page_key.get(page) != key:
+                self._page_key[page] = key
+                self._key_pages.setdefault(key, set()).add(page)
+                self._prefix.setdefault(key, page)
+            if self.pin_prefix:
+                # eviction-priority residency: the page survives its
+                # holders (reclaimed oldest-first under pressure)
+                self.blocks.pin(page)
+            self._reg_state[rid] = (i + 1, key)
+
+    def _evict(self, released_pages: List[int]) -> None:
+        """Drop freed pages from the prefix cache; if a freed page was
+        the canonical holder of its key, re-point the key at another
+        live copy before giving up on it."""
+        for page in released_pages:
+            key = self._page_key.pop(page, None)
+            if key is None:
+                continue
+            copies = self._key_pages.get(key, set())
+            copies.discard(page)
+            if self._prefix.get(key) == page:
+                if copies:
+                    self._prefix[key] = next(iter(copies))
+                else:
+                    self._prefix.pop(key, None)
+            if not copies:
+                self._key_pages.pop(key, None)
+
+    def release(self, rid) -> None:
+        self._reg_state.pop(rid, None)
+        self._admit_epoch.pop(rid, None)
+        self._evict(self.blocks.free(rid))
+
+    def invalidate_prefix(self) -> None:
+        """Flush the prefix cache (hot swap): pages computed under the
+        old weights must not be mapped into post-swap admissions, and
+        still-prefilling pre-swap requests stop registering (their
+        remaining chunks attend over old-weight history).  Pins die
+        with the index — a pinned page's whole value is being shareable.
+        Live tables and refcounts are untouched."""
+        self._prefix.clear()
+        self._key_pages.clear()
+        self._page_key.clear()
+        self.blocks.unpin_all()
+        self._epoch += 1
+
+
+def _prefix_key_memo(prompt: np.ndarray, block_size: int):
+    """Lazy chain-key supplier for ``prompt``: ``key_at(i)`` hashes
+    chunks only up to page i, memoized — a page-0 miss still costs one
+    hash, and multiple shard probes share one derivation."""
+    keys: List[Any] = []
+
+    def key_at(i: int):
+        while len(keys) <= i:
+            j = len(keys)
+            prev = keys[-1] if keys else None
+            chunk = tuple(int(t) for t in
+                          prompt[j * block_size:(j + 1) * block_size])
+            keys.append((prev, chunk))
+        return keys[i]
+
+    return key_at
+
+
 def _insert_leaf_paged(dst, src, page_ids, offsets):
     """Scatter a (stack, 1, S, Hkv, D) dense prefill leaf into the
     (stack, P+1, bs, Hkv, D) pool at (page_ids[s], offsets[s])."""
@@ -457,135 +642,155 @@ class PagedLayout(CacheLayout):
     is gone.  With ``pin_prefix=True`` registered prompt pages stay
     resident after their holders release (reclaimed oldest-first under
     pressure).
+
+    **Sharded mode** (``data_shards > 1``, the serving mesh): slots and
+    pages split into ``data_shards`` equal groups; group i's slots can
+    only map group i's pages, each group is accounted by its own
+    host-local :class:`PageShard` (admission, prefix cache, pinning,
+    reclaim), and each group ends with its own null page — block
+    tables hold GLOBAL page ids ``shard.offset + local``, which is how
+    the shard_map gather (:func:`repro.kernels.ops.paged_attention`)
+    rebases to a shard-local index without ever touching another
+    shard's pool.  ``placer`` (mesh use) maps the freshly initialized
+    cache pytree + its logical axes to device-placed arrays.
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, num_pages: int,
                  block_size: int = 16, max_seq: Optional[int] = None,
-                 pin_prefix: bool = False):
+                 pin_prefix: bool = False, data_shards: int = 1,
+                 placer=None):
         self.cfg = cfg
         self.block_size = block_size
-        self.max_seq = min(max_seq or num_pages * block_size,
-                           num_pages * block_size)
+        self.data_shards = int(data_shards)
+        if num_slots % self.data_shards or num_pages % self.data_shards:
+            raise ValueError(
+                f"num_slots ({num_slots}) and num_pages ({num_pages}) "
+                f"must be divisible by data_shards ({data_shards})")
+        pps = num_pages // self.data_shards     # usable pages per shard
+        self._slots_per_shard = num_slots // self.data_shards
+        shard_tokens = pps * block_size
+        self.max_seq = min(max_seq or shard_tokens, shard_tokens)
         self.max_blocks_per_seq = blocks_for(self.max_seq, block_size)
-        self.blocks = BlockManager(num_pages, block_size)
-        self.blocks.on_reclaim = self._evict
-        self.null_page = num_pages
+        self.shards = tuple(
+            PageShard(pps, block_size, pin_prefix=pin_prefix,
+                      offset=i * (pps + 1))
+            for i in range(self.data_shards))
+        # shard 0's global null page — THE null page in the single-shard
+        # layout (== num_pages, as before); sharded callers use
+        # null_page_of(slot)
+        self.null_page = pps
         self.pin_prefix = bool(pin_prefix)
+        # physical pool: every shard's pages + its null page,
+        # contiguous in global id order
+        total = self.data_shards * (pps + 1)
         self.cache, axes = lm.init_cache(cfg, num_slots,
-                                         pages=(num_pages, block_size))
+                                         pages=(total - 1, block_size))
         self.paged_mask = tuple(_leaf_is_paged(a)
                                 for a in _axes_leaves(axes))
         self.rec_mask = tuple(not _leaf_is_kv(a)
                               for a in _axes_leaves(axes))
-        self.tables = np.full((num_slots, self.max_blocks_per_seq),
-                              self.null_page, np.int32)
+        if placer is not None:
+            self.cache = placer(self.cache, axes)
         self._init_slots(num_slots)
-        # prefix cache: chained token-chunk key -> canonical physical
-        # page, plus every live page known to hold that content (a
-        # follower that prefilled its own copy before the prefix was
-        # registered is still a valid donor once the original dies)
-        self._prefix: Dict[Any, int] = {}
-        self._key_pages: Dict[Any, set] = {}
-        self._page_key: Dict[int, Any] = {}
-        # per-rid incremental registration cursor: (pages done, last key)
-        self._reg_state: Dict[Any, Tuple[int, Any]] = {}
-        # weight epoch: bumped by invalidate_prefix() on hot swap so
-        # pages computed under old weights are never shared forward
-        self._epoch = 0
-        self._admit_epoch: Dict[Any, int] = {}
-        self.prefix_hits = 0
-        self.prefix_shared_tokens = 0
+        self.tables = np.empty((num_slots, self.max_blocks_per_seq),
+                               np.int32)
+        for s in range(num_slots):
+            self.tables[s, :] = self.null_page_of(s)
+        self._shard_of_rid: Dict[Any, int] = {}
+        self._share_shard: Optional[int] = None
+        # pool-WIDE concurrent page peak (sharded mode): summing the
+        # per-shard high waters would overstate it when shards peak at
+        # different times
+        self._hw_total = 0
+
+    # -- shard routing -----------------------------------------------------
+    def shard_of_slot(self, slot: int) -> int:
+        return slot // self._slots_per_shard
+
+    def null_page_of(self, slot: int) -> int:
+        shard = self.shards[self.shard_of_slot(slot)]
+        return shard.offset + shard.null_page
+
+    @property
+    def blocks(self) -> BlockManager:
+        """Shard 0's manager — THE manager in the single-shard layout;
+        geometry reference (block_size / num_blocks are per-shard and
+        identical across shards) for sharded callers."""
+        return self.shards[0].blocks
+
+    @property
+    def prefix_hits(self) -> int:
+        return sum(s.prefix_hits for s in self.shards)
+
+    @property
+    def prefix_shared_tokens(self) -> int:
+        return sum(s.prefix_shared_tokens for s in self.shards)
+
+    def _free_slots_in(self, shard_i: int) -> List[int]:
+        lo = shard_i * self._slots_per_shard
+        hi = lo + self._slots_per_shard
+        return [s for s in self._free_slots if lo <= s < hi]
+
+    def _choose_shard(self, n_tokens: int,
+                      shared_pages: Sequence[int] = (),
+                      hint: Optional[int] = None) -> Optional[int]:
+        """Deterministic admission target: the prefix-hinted shard when
+        it still fits, else the free-slot shard with the most available
+        pages (lowest index on ties) — None when nowhere fits."""
+        if hint is not None and self._free_slots_in(hint) and \
+                self.shards[hint].blocks.can_allocate(
+                    n_tokens, shared=shared_pages):
+            return hint
+        best, best_avail = None, -1
+        for i, shard in enumerate(self.shards):
+            if not self._free_slots_in(i):
+                continue
+            if not shard.blocks.can_allocate(n_tokens):
+                continue
+            if shard.blocks.available_blocks > best_avail:
+                best, best_avail = i, shard.blocks.available_blocks
+        return best
+
+    def peek_shard(self, n_tokens: int,
+                   shared_pages: Sequence[int] = ()) -> Optional[int]:
+        """The shard :meth:`admit` would pick right now (no mutation) —
+        lets the mesh scheduler pre-check the drafter's mirror pool in
+        the SAME shard before committing an admission."""
+        hint = self._share_shard if shared_pages else None
+        return self._choose_shard(n_tokens, shared_pages, hint)
 
     # -- prefix sharing ----------------------------------------------------
-    @staticmethod
-    def _chunk_keys(prompt: np.ndarray, block_size: int, start: int = 0,
-                    prev=None):
-        """Chained keys for fully-filled prompt pages ``start..``: key_i
-        commits to ALL tokens up to and including page i (so equal keys
-        mean equal prefixes, not just equal pages).  ``prev`` must be
-        the chain key of page ``start - 1`` when resuming."""
-        keys = []
-        for i in range(start, len(prompt) // block_size):
-            chunk = tuple(int(t) for t in
-                          prompt[i * block_size:(i + 1) * block_size])
-            prev = (prev, chunk)
-            keys.append(prev)
-        return keys
-
     def find_shared_prefix(self, prompt: np.ndarray
                            ) -> Tuple[List[int], int]:
-        """Longest registered prefix of `prompt` in live pages.
-
-        Returns (page ids, shared token count).  Capped at
-        ``len(prompt) - 1`` so at least one suffix token is always
-        prefilled (its hidden state supplies the first sampled token).
-        Keys are derived lazily page by page, so a miss on page 0 costs
-        one chunk hash — this runs on every admission check.
-        """
+        """Longest registered prefix of `prompt` over the shards an
+        admission could land in (LOCAL page ids of the winning shard,
+        recorded for the admit that follows).  Single-shard: exactly
+        the PR-3/4 behavior.  The chain keys are derived once and
+        shared by every shard's probe."""
         bs = self.block_size
         max_pages = (len(prompt) - 1) // bs
-        pages, key = [], None
-        for i in range(max_pages):
-            key = (key, tuple(int(t) for t in prompt[i * bs:(i + 1) * bs]))
-            page = self._prefix.get(key)
-            if page is None or self.blocks.refcount(page) == 0:
-                break
-            pages.append(page)
-        return pages, len(pages) * bs
+        key_at = _prefix_key_memo(prompt, bs)
+        best, best_shard = ([], 0), None
+        for i, shard in enumerate(self.shards):
+            if self.data_shards > 1 and not self._free_slots_in(i):
+                continue        # a match in a slot-full shard is unusable
+            pages = shard.probe_prefix(key_at, max_pages)
+            if len(pages) * bs > best[1]:
+                best, best_shard = (pages, len(pages) * bs), i
+        self._share_shard = best_shard if best[0] else None
+        return best
 
     def register_prefix(self, rid, prompt: np.ndarray) -> None:
-        """Offer `rid`'s fully-filled prompt pages to future requests.
-
-        Incremental: per-chunk calls during chunked prefill only hash
-        the pages filled since the last call, resuming the key chain
-        instead of re-deriving it from page 0 every time.  Requests
-        admitted before the last weight swap are refused — their pages
-        (or their pages' attention context) came from the old model.
-        """
-        if self._admit_epoch.get(rid, -1) != self._epoch:
-            return
-        table = self.blocks.table(rid)
-        start, prev = self._reg_state.get(rid, (0, None))
-        keys = self._chunk_keys(prompt, self.block_size, start=start,
-                                prev=prev)
-        for i, key in zip(range(start, start + len(keys)), keys):
-            if i >= len(table):
-                break
-            page = table[i]
-            if self._page_key.get(page) != key:
-                self._page_key[page] = key
-                self._key_pages.setdefault(key, set()).add(page)
-                self._prefix.setdefault(key, page)
-            if self.pin_prefix:
-                # eviction-priority residency: the page survives its
-                # holders (reclaimed oldest-first under pressure)
-                self.blocks.pin(page)
-            self._reg_state[rid] = (i + 1, key)
-
-    def _evict(self, released_pages: List[int]) -> None:
-        """Drop freed pages from the prefix cache; if a freed page was
-        the canonical holder of its key, re-point the key at another
-        live copy before giving up on it."""
-        for page in released_pages:
-            key = self._page_key.pop(page, None)
-            if key is None:
-                continue
-            copies = self._key_pages.get(key, set())
-            copies.discard(page)
-            if self._prefix.get(key) == page:
-                if copies:
-                    self._prefix[key] = next(iter(copies))
-                else:
-                    self._prefix.pop(key, None)
-            if not copies:
-                self._key_pages.pop(key, None)
+        self.shards[self._shard_of_rid[rid]].register_prefix(rid, prompt)
 
     # -- slot / page lifecycle ---------------------------------------------
     @property
     def supports_row_subset(self) -> bool:
         # with no recurrent rows, every cache leaf is a shared pool —
-        # a decode step may cover any subset of slots (ragged grouping)
-        return not self.has_recurrent
+        # a decode step may cover any subset of slots (ragged grouping;
+        # single-shard only: sharded steps must keep every row in its
+        # shard's batch partition)
+        return not self.has_recurrent and self.data_shards == 1
 
     def step_kwargs(self, width: Optional[int] = None,
                     rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
@@ -595,20 +800,24 @@ class PagedLayout(CacheLayout):
 
     def can_admit(self, n_tokens: int,
                   shared_pages: Sequence[int] = ()) -> bool:
-        return bool(self._free_slots) and n_tokens <= self.max_seq \
-            and self.blocks.can_allocate(n_tokens, shared=shared_pages)
+        if not self._free_slots or n_tokens > self.max_seq:
+            return False
+        hint = self._share_shard if shared_pages else None
+        return self._choose_shard(n_tokens, shared_pages, hint) is not None
 
     def admit(self, rid, n_tokens: int,
               prompt: Optional[np.ndarray] = None,
-              shared: Optional[Tuple[List[int], int]] = None
-              ) -> Tuple[int, int]:
+              shared: Optional[Tuple[List[int], int]] = None,
+              slot: Optional[int] = None) -> Tuple[int, int]:
         """Claim a slot + a token-budget reservation for `rid`.
 
         With `prompt` given, maps any prefix-cached pages into the new
         table (copy-on-admit sharing); pass ``shared`` to reuse a
         :meth:`find_shared_prefix` result the admission check already
-        computed instead of hashing the prompt again.  Returns
-        (slot, shared_len).
+        computed instead of hashing the prompt again.  ``slot`` forces
+        a specific slot (the drafter's mirror pool must admit into the
+        target's slot so the two decode batches stay row-aligned).
+        Returns (slot, shared_len).
         """
         if not self._free_slots:
             raise RuntimeError("no free cache slots")
@@ -620,29 +829,49 @@ class PagedLayout(CacheLayout):
             shared = ([], 0) if prompt is None else \
                 self.find_shared_prefix(prompt)
         shared_pages, shared_len = shared
-        self.blocks.reserve(rid, n_tokens, shared=shared_pages)
-        slot = self._free_slots.pop()
+        hint = self._share_shard if shared_pages else None
+        if slot is None:
+            shard_i = self._choose_shard(n_tokens, shared_pages, hint)
+            if shard_i is None:
+                shard_i = self.shard_of_slot(self._free_slots[-1])
+            # LIFO within the shard, matching the old single-list pop()
+            slot = self._free_slots_in(shard_i)[-1]
+        else:
+            if slot not in self._free_slots:
+                raise RuntimeError(f"slot {slot} is not free")
+            shard_i = self.shard_of_slot(slot)
+        if hint is not None and hint != shard_i:
+            # the prefix lives in another shard's pool — unusable here
+            shared_pages, shared_len = [], 0
+        self.shards[shard_i].admit(rid, n_tokens,
+                                   (shared_pages, shared_len))
+        self._free_slots.remove(slot)
         self._slot_of[rid] = slot
-        self._admit_epoch[rid] = self._epoch
-        self.tables[slot, :] = self.null_page
+        self._shard_of_rid[rid] = shard_i
+        off = self.shards[shard_i].offset
+        self.tables[slot, :] = self.null_page_of(slot)
         if shared_pages:
-            self.tables[slot, :len(shared_pages)] = shared_pages
-            self.prefix_hits += 1
-            self.prefix_shared_tokens += shared_len
-            # registration resumes after the shared pages — their keys
-            # are already in the cache
-            self._reg_state[rid] = (len(shared_pages),
-                                    self._page_key[shared_pages[-1]])
+            self.tables[slot, :len(shared_pages)] = \
+                off + np.asarray(shared_pages, np.int32)
+        self._note_usage()
         return slot, shared_len
 
     def ensure(self, rid, n_tokens: int) -> None:
         """Materialize pages so `rid` can hold `n_tokens`; updates the
-        slot's block table in place."""
+        slot's block table in place (global ids)."""
         slot = self._slot_of[rid]
-        have = len(self.blocks.table(rid))
-        new = self.blocks.ensure(rid, n_tokens)
+        shard = self.shards[self._shard_of_rid[rid]]
+        have = len(shard.blocks.table(rid))
+        new = shard.blocks.ensure(rid, n_tokens)
         if new:
-            self.tables[slot, have:have + len(new)] = new
+            self.tables[slot, have:have + len(new)] = \
+                shard.offset + np.asarray(new, np.int32)
+            self._note_usage()
+
+    def _note_usage(self) -> None:
+        if self.data_shards > 1:
+            used = sum(s.blocks.used_blocks for s in self.shards)
+            self._hw_total = max(self._hw_total, used)
 
     def insert_prefill(self, rid, prefill_cache, prompt_len: int) -> None:
         """Scatter a (batch=1) dense prefill cache into the pool.
@@ -653,14 +882,15 @@ class PagedLayout(CacheLayout):
         """
         self.ensure(rid, prompt_len)
         slot = self._slot_of[rid]
-        table = self.blocks.table(rid)
+        shard = self.shards[self._shard_of_rid[rid]]
+        table = [shard.offset + p for p in shard.blocks.table(rid)]
         # per-token page targets; positions past prompt_len (padding)
-        # are dropped onto the null page
+        # are dropped onto the row's shard's null page
         kv_len = _first_kv_len(prefill_cache, self.paged_mask)
         if kv_len is None:          # pure-recurrent stack: no KV pages
             kv_len = prompt_len
         pos = np.arange(kv_len)
-        pids = np.full((kv_len,), self.null_page, np.int32)
+        pids = np.full((kv_len,), self.null_page_of(slot), np.int32)
         valid = pos < prompt_len
         pids[valid] = np.asarray(table, np.int32)[pos[valid]
                                                   // self.block_size]
@@ -673,24 +903,14 @@ class PagedLayout(CacheLayout):
         """Free `rid`'s slot + page refs; returns the freed slot."""
         slot = self._slot_of.pop(rid)
         self._free_slots.append(slot)
-        self.tables[slot, :] = self.null_page
-        self._reg_state.pop(rid, None)
-        self._admit_epoch.pop(rid, None)
-        self._evict(self.blocks.free(rid))
+        self.tables[slot, :] = self.null_page_of(slot)
+        self.shards[self._shard_of_rid.pop(rid)].release(rid)
         return slot
 
     def invalidate_prefix(self) -> None:
-        """Flush the prefix cache (hot swap): pages computed under the
-        old weights must not be mapped into post-swap admissions, and
-        still-prefilling pre-swap requests stop registering (their
-        remaining chunks attend over old-weight history).  Pins die
-        with the index — a pinned page's whole value is being shareable.
-        Live tables and refcounts are untouched."""
-        self._prefix.clear()
-        self._key_pages.clear()
-        self._page_key.clear()
-        self.blocks.unpin_all()
-        self._epoch += 1
+        """Flush every shard's prefix cache + pins (hot swap)."""
+        for shard in self.shards:
+            shard.invalidate_prefix()
 
     def table_width_for(self, max_tokens: int) -> int:
         """Block-table columns needed to cover `max_tokens` (the
@@ -700,11 +920,22 @@ class PagedLayout(CacheLayout):
                    blocks_for(max(max_tokens, 1), self.block_size))
 
     def as_dict(self) -> Dict[str, int]:
-        return {"num_slots": self.num_slots, "max_seq": self.max_seq,
-                "free_slots": self.free_slots,
-                "prefix_hits": self.prefix_hits,
-                "prefix_shared_tokens": self.prefix_shared_tokens,
-                **self.blocks.as_dict()}
+        d = {"num_slots": self.num_slots, "max_seq": self.max_seq,
+             "free_slots": self.free_slots,
+             "prefix_hits": self.prefix_hits,
+             "prefix_shared_tokens": self.prefix_shared_tokens,
+             "data_shards": self.data_shards}
+        agg = self.shards[0].blocks.as_dict()
+        for shard in self.shards[1:]:
+            for k, v in shard.blocks.as_dict().items():
+                if k != "block_size":
+                    agg[k] += v
+        if self.data_shards > 1:
+            # the pool-wide CONCURRENT peak, not the sum of per-shard
+            # peaks (which overstates when shards peak at different
+            # times)
+            agg["high_water_blocks"] = self._hw_total
+        return {**d, **agg}
 
 
 def _first_kv_len(prefill_cache, paged_mask) -> Optional[int]:
@@ -763,7 +994,8 @@ class SlotLayout(CacheLayout):
     """
 
     def __init__(self, cfg: ModelConfig, num_slots: int, max_len: int,
-                 block_size: int = 16, num_blocks: Optional[int] = None):
+                 block_size: int = 16, num_blocks: Optional[int] = None,
+                 placer=None):
         self.cfg = cfg
         self.max_len = max_len
         self.blocks = BlockManager(
@@ -773,6 +1005,8 @@ class SlotLayout(CacheLayout):
         self.cache, axes = lm.init_cache(cfg, num_slots, max_len)
         self.rec_mask = tuple(not _leaf_is_kv(a)
                               for a in _axes_leaves(axes))
+        if placer is not None:
+            self.cache = placer(self.cache, axes)
         self._init_slots(num_slots)
 
     def can_admit(self, n_tokens: int) -> bool:
@@ -780,8 +1014,11 @@ class SlotLayout(CacheLayout):
         return bool(self._free_slots) and n_tokens <= self.max_len \
             and self.blocks.can_allocate(n_tokens)
 
-    def admit(self, rid, n_tokens: int) -> int:
-        """Claim a slot + pages for `rid`; returns the slot index."""
+    def admit(self, rid, n_tokens: int,
+              slot: Optional[int] = None) -> int:
+        """Claim a slot + pages for `rid`; returns the slot index.
+        ``slot`` forces a specific one (drafter mirror pools must stay
+        row-aligned with the target's)."""
         if not self._free_slots:
             raise RuntimeError("no free cache slots")
         if n_tokens > self.max_len:
@@ -789,7 +1026,10 @@ class SlotLayout(CacheLayout):
                 f"request needs {n_tokens} tokens > pool max_len "
                 f"{self.max_len}")
         self.blocks.allocate(rid, n_tokens)
-        slot = self._free_slots.pop()
+        if slot is None:
+            slot = self._free_slots.pop()
+        else:
+            self._free_slots.remove(slot)
         self._slot_of[rid] = slot
         return slot
 

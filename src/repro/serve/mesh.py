@@ -1,0 +1,469 @@
+"""Multi-host serving mesh: sharded decode with a host-0 scheduler.
+
+Training already runs on a device mesh; this module puts the SERVING
+stack on one.  The existing :class:`repro.serve.session.DecodeSession`
+/ :class:`repro.serve.kv_cache.CacheLayout` machinery is reused
+unchanged — the mesh runtime only decides *where things live* and *who
+decides*:
+
+**Axis layout** (the dry-run "serve" preset,
+:data:`repro.parallel.sharding.SERVE_RULES`):
+
+  * **weights** — stationary, tensor-parallel over ``model`` (vocab /
+    head / mlp / expert dims); never gathered, per-token collectives
+    are tiny activation all-reduces;
+  * **decode batch** — the ``num_slots`` rows split over ``data``:
+    tokens, write indices, block tables, logits;
+  * **cache leaves** — every one over ``data``: dense KV rows and
+    recurrent state on their batch dim, paged pools on the PAGE dim.
+    The paged pool becomes ``data``-many private sub-pools, each with
+    its own null page, each accounted by a host-local
+    :class:`repro.serve.kv_cache.PageShard`; block tables hold global
+    page ids and the shard_map gather dispatch
+    (:func:`repro.kernels.ops.paged_attention`) rebases them
+    per-shard, so decode NEVER moves a KV page across ``data``.
+
+**Control plane**: scheduling state (queue, slot maps, block
+managers, prefix caches) is replicated host-side and evolves
+deterministically — with two exceptions, both decided by **host 0**
+and broadcast as a :class:`StepPlan` each step:
+
+  * *admission* — which queued requests enter the batch this step
+    (and implicitly which pinned pages get reclaimed for them);
+  * *hot swap* — whether a newer tournament winner was found on disk
+    (filesystem reads race the trainer; followers load exactly the
+    broadcast step).
+
+After the plan lands, every host executes the SAME jitted prefill /
+decode dispatches on the sharded arrays.  In this container jax runs
+single-process (multi-host is emulated with
+``--xla_force_host_platform_device_count``); the plan still round-trips
+through its wire encoding on every step, and the follower path is the
+``step(plan=...)`` replay the tests drive a second scheduler replica
+with.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch import specs as specs_lib
+from repro.models import lm
+from repro.parallel.sharding import (serve_rules, tree_shardings,
+                                     use_sharding)
+from repro.serve.kv_cache import PagedLayout, SlotLayout, blocks_for
+from repro.serve.scheduler import Scheduler
+from repro.serve.session import DecodeSession, _draft_unroll
+
+
+# ---------------------------------------------------------------------------
+# mesh construction
+# ---------------------------------------------------------------------------
+
+
+def parse_mesh(spec: str) -> Tuple[int, int]:
+    """Parse ``--mesh`` values: "4,2" / "data=4,model=2" / "8" (pure
+    data parallelism) -> (data, model)."""
+    parts = [p.strip() for p in spec.split(",") if p.strip()]
+    named = {}
+    sizes = []
+    for p in parts:
+        if "=" in p:
+            k, v = p.split("=", 1)
+            named[k.strip()] = int(v)
+        else:
+            sizes.append(int(p))
+    if named:
+        return named.get("data", 1), named.get("model", 1)
+    if len(sizes) == 1:
+        return sizes[0], 1
+    if len(sizes) == 2:
+        return sizes[0], sizes[1]
+    raise ValueError(f"cannot parse mesh spec {spec!r}")
+
+
+def make_serve_mesh(data: int, model: int = 1):
+    """("data", "model") mesh over the first data*model visible devices."""
+    from jax.sharding import Mesh
+    n = data * model
+    devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"serving mesh {data}x{model} needs {n} devices, have "
+            f"{len(devices)} (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N to emulate)")
+    return Mesh(np.asarray(devices[:n]).reshape(data, model),
+                ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> Tuple[int, int]:
+    axes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return axes.get("data", 1), axes.get("model", 1)
+
+
+# ---------------------------------------------------------------------------
+# the host-0 decision record
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class StepPlan:
+    """One scheduler step's broadcastable decisions.
+
+    ``winner`` — registry step of a newly found tournament winner
+    (None: no swap this step); ``admits`` — rids admitted, in order.
+    Everything else the schedulers do is a deterministic function of
+    replicated state, so this is the WHOLE control-plane wire format.
+    Request ids must be JSON scalars (int / str) to be mesh-servable.
+    """
+    winner: Optional[int] = None
+    admits: List[Any] = field(default_factory=list)
+
+    def encode(self) -> bytes:
+        return json.dumps({"winner": self.winner,
+                           "admits": list(self.admits)}).encode()
+
+    @classmethod
+    def decode(cls, payload: bytes) -> "StepPlan":
+        d = json.loads(payload.decode())
+        return cls(winner=d["winner"], admits=d["admits"])
+
+
+def broadcast_plan(plan: StepPlan) -> StepPlan:
+    """Host-0 -> all-hosts broadcast of a step plan.
+
+    Multi-process: two ``broadcast_one_to_all`` rounds (length, then
+    the padded byte buffer).  Single-process (this container): the
+    encode -> decode round trip still runs, so the wire format is
+    exercised by every CI step, not just the multi-host deployment.
+    """
+    payload = plan.encode()
+    if jax.process_count() > 1:  # pragma: no cover (single-process CI)
+        from jax.experimental import multihost_utils
+        n = int(multihost_utils.broadcast_one_to_all(
+            np.int32(len(payload))))
+        # followers contribute zeros: their local plan is discarded by
+        # the broadcast, and its length need not match host 0's
+        buf = np.zeros((n,), np.uint8)
+        if jax.process_index() == 0:
+            buf[:n] = np.frombuffer(payload, np.uint8)[:n]
+        payload = multihost_utils.broadcast_one_to_all(buf).tobytes()
+    return StepPlan.decode(payload)
+
+
+# ---------------------------------------------------------------------------
+# sharded decode session
+# ---------------------------------------------------------------------------
+
+# The serving-mesh rule set the mesh jits trace under.  Two runtime
+# overrides on the dry-run preset: dense KV rows shard their HEADS
+# over `model` instead of the sequence dim (the per-row decode scatter
+# into the seq dim must stay shard-local), and recurrent STATE rows
+# stay whole per slot (splitting the state contraction over `model`
+# would reorder f32 accumulation and cost mesh-vs-single-device token
+# identity for hybrid/ssm stacks).
+MESH_SERVE_RULES = serve_rules(kv_seq=None, state=None)
+
+
+# Mesh-DEDICATED jitted entry points, with the Mesh itself a STATIC
+# argument.  This is load-bearing, not a convenience: jax caches traced
+# jaxprs by aval (sharding excluded), so if the mesh path shared the
+# single-device session's jits, whichever traced first would bake its
+# trace-time decisions — `constrain` targets and the shard_map
+# paged-gather dispatch — into the other's lowering.  A separate
+# function object keyed on the mesh guarantees every mesh trace happens
+# inside the mesh's sharding context, and two meshes never alias.
+
+
+@partial(jax.jit, static_argnums=(1, 2), donate_argnums=(4,))
+def _mesh_step_fn(params, cfg, mesh, tokens, cache, index, valid):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return lm.lm_decode(params, cfg, tokens, cache, index,
+                            valid=valid)
+
+
+@partial(jax.jit, static_argnums=(1, 2), donate_argnums=(4,))
+def _mesh_step_tables_fn(params, cfg, mesh, tokens, cache, index,
+                         tables, valid):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return lm.lm_decode(params, cfg, tokens, cache, index,
+                            tables=tables, valid=valid)
+
+
+@partial(jax.jit, static_argnums=(1, 2))
+def _mesh_prefill_fn(params, cfg, mesh, toks, last_pos):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return lm.lm_prefill(params, cfg, {"tokens": toks},
+                             last_pos=last_pos)
+
+
+@partial(jax.jit, static_argnums=(1, 2), donate_argnums=(4,))
+def _mesh_chunk_fn(params, cfg, mesh, toks, cache, tables, hist, plen,
+                   last_pos):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return lm.lm_prefill(params, cfg, {"tokens": toks},
+                             last_pos=last_pos, cache=cache,
+                             tables=tables, hist_len=hist,
+                             prompt_len=plen)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 7), donate_argnums=(4,))
+def _mesh_draft_fn(params, cfg, mesh, tok0, cache, index, valid, steps):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return _draft_unroll(params, cfg, tok0, cache, index, valid,
+                             steps, None)
+
+
+@partial(jax.jit, static_argnums=(1, 2, 7), donate_argnums=(4,))
+def _mesh_draft_tables_fn(params, cfg, mesh, tok0, cache, index, valid,
+                          steps, tables):
+    with use_sharding(mesh, **MESH_SERVE_RULES):
+        return _draft_unroll(params, cfg, tok0, cache, index, valid,
+                             steps, tables)
+
+
+class MeshDecodeSession(DecodeSession):
+    """A DecodeSession whose model calls trace under the serving mesh.
+
+    All host-side marshalling is inherited; only the jit-indirection
+    hooks are overridden to bind the mesh-dedicated jits above (the
+    Mesh injected as their static argument), so every trace runs
+    inside :func:`use_sharding`: ``constrain`` calls in the model
+    resolve against the mesh (activations stay ``data``-sharded) and
+    the paged-gather dispatch in ``kernels/ops.py`` lowers to its
+    shard_map form.  ``params`` is the RAW (host / single-device)
+    tree; the session places it — and re-places on ``set_params`` hot
+    swaps, skipping the transfer when handed the same object (the
+    engine calls ``set_params`` before every generate).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, layout, mesh, rules,
+                 placer):
+        super().__init__(cfg, params, layout)
+        self.mesh = mesh
+        self.rules = rules
+        self._place = placer
+        self._src_params = None
+        self.set_params(params)
+
+    def set_params(self, params) -> None:
+        if params is self._src_params:
+            return
+        self._src_params = params
+        self.params = self._place(params)
+
+    # -- jit indirection: mesh-dedicated executables -------------------------
+    def _call_prefill(self, params, cfg, *args):
+        return _mesh_prefill_fn(params, cfg, self.mesh, *args)
+
+    def _call_chunk(self, params, cfg, *args):
+        return _mesh_chunk_fn(params, cfg, self.mesh, *args)
+
+    def _call_step(self, params, cfg, *args):
+        return _mesh_step_fn(params, cfg, self.mesh, *args)
+
+    def _call_step_tables(self, params, cfg, *args):
+        return _mesh_step_tables_fn(params, cfg, self.mesh, *args)
+
+    def _call_draft(self, params, cfg, *args):
+        return _mesh_draft_fn(params, cfg, self.mesh, *args)
+
+    def _call_draft_tables(self, params, cfg, *args):
+        return _mesh_draft_tables_fn(params, cfg, self.mesh, *args)
+
+    def step(self, tokens: np.ndarray, index: np.ndarray,
+             valid: Optional[np.ndarray] = None,
+             width: Optional[int] = None,
+             rows: Optional[np.ndarray] = None,
+             tables: Optional[np.ndarray] = None) -> jax.Array:
+        if rows is not None or tables is not None:
+            raise ValueError(
+                "row-subset / explicit-table steps cannot run on the "
+                "mesh (rows must stay in their data shard)")
+        return super().step(tokens, index, valid=valid, width=width)
+
+
+def cache_placer(mesh, rules):
+    """(cache, axes) -> device-placed cache, under the serve rules —
+    the ONE placement implementation every mesh session/layout uses."""
+    def place(cache, axes):
+        return jax.device_put(
+            cache, tree_shardings(mesh, axes, cache, **rules))
+    return place
+
+
+def param_placer(mesh, rules, cfg: ModelConfig):
+    """params -> device-placed params for ``cfg``.  The logical axes
+    come from one eval_shape at closure build time, so hot swaps
+    re-place with cached axes."""
+    _, axes = specs_lib.param_specs(cfg)
+
+    def place(params):
+        return jax.device_put(
+            params, tree_shardings(mesh, axes, params, **rules))
+    return place
+
+
+def make_engine_session(cfg: ModelConfig, params, mesh, batch: int,
+                        max_len: int) -> MeshDecodeSession:
+    """A mesh-sharded SlotLayout session for the batch Engine path."""
+    rules = MESH_SERVE_RULES
+    data, _ = mesh_axis_sizes(mesh)
+    if batch % data:
+        raise ValueError(
+            f"engine batch {batch} must be divisible by the mesh data "
+            f"axis ({data})")
+    layout = SlotLayout(cfg, batch, max_len,
+                        placer=cache_placer(mesh, rules))
+    return MeshDecodeSession(cfg, params, layout, mesh, rules,
+                             param_placer(mesh, rules, cfg))
+
+
+# ---------------------------------------------------------------------------
+# the mesh scheduler
+# ---------------------------------------------------------------------------
+
+
+class MeshScheduler(Scheduler):
+    """Continuous-batching scheduler over a ("data", "model") mesh.
+
+    All scheduling semantics are inherited — admission by token
+    budget, chunked prefill, prefix sharing/pinning per shard,
+    drain-aware hot swap, speculative decoding — with three mesh
+    specifics:
+
+    * **geometry** — ``num_slots`` / ``num_blocks`` are rounded up to
+      multiples of the ``data`` axis; each request's pages live wholly
+      in its slot's shard, so the per-request cap is the SHARD's
+      capacity, not the pool's;
+    * **decisions** — :meth:`step` produces a :class:`StepPlan` on
+      host 0 and routes it through :func:`broadcast_plan`; a follower
+      replica replays with ``step(plan=...)`` and must land in an
+      identical state (asserted, and tested);
+    * **dispatch** — every session is a :class:`MeshDecodeSession`;
+      the ragged width-split subset dispatch is disabled (a subset of
+      rows cannot be re-sharded over ``data`` without breaking the
+      slot <-> shard alignment).
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, mesh=None,
+                 mesh_shape: Optional[Tuple[int, int]] = None, **kwargs):
+        if mesh is None:
+            if mesh_shape is None:
+                mesh_shape = (jax.device_count(), 1)
+            mesh = make_serve_mesh(*mesh_shape)
+        self.mesh = mesh
+        self.data_shards, self.model_shards = mesh_axis_sizes(mesh)
+        self.rules = MESH_SERVE_RULES
+        D = self.data_shards
+        num_slots = kwargs.get("num_slots", 8)
+        kwargs["num_slots"] = -(-num_slots // D) * D
+        max_len = kwargs.get("max_len", 1024)
+        block_size = kwargs.get("block_size", 16)
+        n_blocks = kwargs.get("num_blocks")
+        if n_blocks is None:
+            n_blocks = kwargs["num_slots"] * blocks_for(max_len,
+                                                        block_size)
+        kwargs["num_blocks"] = -(-n_blocks // D) * D
+        super().__init__(cfg, params, **kwargs)
+        # subset dispatch cannot keep rows in their shard's partition
+        self._group_decode = False
+
+    # -- construction hooks --------------------------------------------------
+    def _make_layout(self, cfg: ModelConfig):
+        g = self._geom
+        placer = cache_placer(self.mesh, self.rules)
+        if self.paged:
+            return PagedLayout(cfg, g["num_slots"], g["n_blocks"],
+                               block_size=g["block_size"],
+                               max_seq=g["max_seq"],
+                               pin_prefix=g["pin_prefix"],
+                               data_shards=self.data_shards,
+                               placer=placer)
+        return SlotLayout(cfg, g["num_slots"], g["max_len"],
+                          block_size=g["block_size"],
+                          num_blocks=g["num_blocks"],
+                          placer=placer)
+
+    def _make_session(self, cfg: ModelConfig, params,
+                      layout) -> DecodeSession:
+        return MeshDecodeSession(
+            cfg, params, layout, self.mesh, self.rules,
+            param_placer(self.mesh, self.rules, cfg))
+
+    # -- admission (shard-aligned drafter) -----------------------------------
+    def _can_admit_head(self) -> bool:
+        if not self.paged or self.draft is None \
+                or self.data_shards == 1:
+            return super()._can_admit_head()
+        req = self.queue[0]
+        total = req.prompt_len + req.max_new
+        if not self._pool_can_admit(self.pool, total, head=True):
+            return False
+        head = self._head_share
+        shared = head[1][0] if head is not None and head[0] == req.rid \
+            else ()
+        shard = self.pool.peek_shard(total, shared)
+        if shard is None:
+            return False
+        # the drafter's mirror admit lands at the SAME slot, hence the
+        # same shard — its capacity must hold there, not just anywhere
+        return self.draft.layout.shards[shard].blocks.can_allocate(total)
+
+    # -- host-0 plan / broadcast / replay ------------------------------------
+    def step(self, plan: Optional[StepPlan] = None) -> StepPlan:
+        """One scheduler iteration.
+
+        ``plan=None`` on host 0: poll + decide + broadcast (the plan
+        ALWAYS round-trips its wire encoding, single-process included).
+        ``plan=...``: the follower replay path — apply host 0's
+        decisions verbatim, then run the identical jitted phases.
+        Returns the plan that was executed.
+        """
+        self.stats.start()
+        if plan is None and jax.process_index() == 0:
+            winner = self._poll_registry()
+            self._step_count += 1
+            self._apply_swap(winner)
+            admits = self._admission_phase()
+            plan = broadcast_plan(StepPlan(winner=winner, admits=admits))
+        else:
+            if plan is None:  # pragma: no cover (multi-host follower)
+                plan = broadcast_plan(StepPlan())
+            self._step_count += 1
+            if plan.winner is not None and self.registry is not None:
+                self.registry.load_step(plan.winner)
+                self._apply_swap(plan.winner)
+            else:
+                # no registry attached: there is nothing to swap to —
+                # but still run the pending-drain half of the check
+                self._apply_swap(None)
+            self._replay_admissions(plan.admits)
+        self._prefill_phase()
+        self._decode_phase()
+        self.stats.sample_step(len(self.queue),
+                               len(self.active) + len(self.prefilling))
+        return plan
+
+    def _replay_admissions(self, admits: List[Any]) -> None:
+        """Apply host 0's admission decisions on a follower: the local
+        queue must agree (requests are submitted identically on every
+        host), and local accounting must accept each admission — any
+        divergence is a hard error, not a silent drift."""
+        for rid in admits:
+            if not self.queue or self.queue[0].rid != rid:
+                raise RuntimeError(
+                    f"follower queue diverged from host 0: expected "
+                    f"{rid!r} at the head, have "
+                    f"{self.queue[0].rid if self.queue else None!r}")
+            if not self._can_admit_head():
+                raise RuntimeError(
+                    f"follower cannot admit {rid!r}: scheduler state "
+                    "diverged from host 0")
+            self._admit(self.queue.popleft())

@@ -40,6 +40,8 @@ class ServeStats:
     spec_draft_proposed: int = 0   # draft tokens offered for verify
     spec_draft_accepted: int = 0   # draft tokens the target kept
     spec_replays: int = 0          # rollback replay steps (recurrent)
+    spec_k_sum: int = 0            # proposals offered, summed per row-round
+    spec_k_rows: int = 0           # row-rounds that offered proposals
     ragged_splits: int = 0         # width-split subset decode dispatches
     hot_swaps: int = 0
     steps: int = 0
@@ -97,6 +99,7 @@ class ServeStats:
             "spec_replays": self.spec_replays,
             "spec_accept_rate": self.spec_draft_accepted
             / max(self.spec_draft_proposed, 1),
+            "spec_k_mean": self.spec_k_sum / max(self.spec_k_rows, 1),
             "ragged_splits": self.ragged_splits,
             "hot_swaps": self.hot_swaps,
             "wall_s": wall,
@@ -138,4 +141,5 @@ class ServeStats:
                 f"accepted={d['spec_draft_accepted']}"
                 f"/{d['spec_draft_proposed']} "
                 f"draft_steps={d['spec_draft_steps']} "
-                f"replays={d['spec_replays']}")
+                f"replays={d['spec_replays']} "
+                f"k_mean={d['spec_k_mean']:.2f}")

@@ -50,27 +50,72 @@ def population_steps(ckpt_dir: str) -> List[int]:
                   if f.startswith("step_") and f.endswith(".manifest"))
 
 
+def check_draft_compat(target_cfg, draft_cfg) -> None:
+    """Serving a draft arch different from the target's is fine — the
+    drafter only PROPOSES tokens — but the two must share a token
+    space: draft samples index the target's embedding, so an unequal
+    vocab is a tokenizer mismatch, not a shape detail.  Raises a clear
+    ValueError instead of letting the embedding lookup break later."""
+    if draft_cfg.vocab_size != target_cfg.vocab_size:
+        raise ValueError(
+            f"draft arch {draft_cfg.name!r} has vocab_size "
+            f"{draft_cfg.vocab_size} but the target {target_cfg.name!r} "
+            f"has {target_cfg.vocab_size}: the two models are tokenizer-"
+            "incompatible — draft proposals would index the wrong "
+            "embedding rows. Pick a drafter trained on the same "
+            "tokenizer (any LTFB population checkpoint of the target "
+            "arch qualifies).")
+
+
+def _embed_vocab(params: Params) -> Optional[int]:
+    embed = params.get("embed") if isinstance(params, dict) else None
+    return None if embed is None else int(embed.shape[0])
+
+
 def load_draft(path: str, like_params: Params,
-               step: Optional[int] = None) -> Tuple[Params, dict]:
+               step: Optional[int] = None,
+               expect_vocab: Optional[int] = None) -> Tuple[Params, dict]:
     """Load a DRAFTER for population speculative decoding.
 
     The LTFB population is a free source of draft models: any
     earlier/smaller checkpoint proposes tokens the current winner
     verifies.  ``path`` is either a self-contained ``.ckpt`` file or a
     population checkpoint dir — there the EARLIEST step's winner is
-    used by default (``step`` overrides), exported on demand.  Returns
-    (params, info).
+    used by default (``step`` overrides), exported on demand.
+    ``like_params`` is the DRAFT arch's parameter template (which may
+    be smaller than the target's); ``expect_vocab`` is the TARGET's
+    vocab size — checked against the restored embedding so an
+    incompatible drafter fails with a clear error instead of shape
+    breakage mid-serve.  Returns (params, info).
     """
     if os.path.isfile(path):
+        params, meta = _restore_draft(path, like_params)
+    else:
+        steps = population_steps(path)
+        if not steps:
+            raise FileNotFoundError(f"no population checkpoint in {path!r}")
+        s = step if step is not None else steps[0]
+        if not os.path.exists(winner_path(path, s)):
+            export_winner(path, like_params, step=s)
+        params, meta = _restore_draft(winner_path(path, s), like_params)
+    if expect_vocab is not None:
+        got = _embed_vocab(params)
+        if got is not None and got != expect_vocab:
+            raise ValueError(
+                f"draft checkpoint {path!r} has vocab_size {got} but "
+                f"the serving target expects {expect_vocab}: the "
+                "drafter is tokenizer-incompatible with the target.")
+    return params, meta
+
+
+def _restore_draft(path: str, like_params: Params) -> Tuple[Params, dict]:
+    try:
         tree, meta = ckpt.restore(path, {"params": like_params})
-        return tree["params"], meta
-    steps = population_steps(path)
-    if not steps:
-        raise FileNotFoundError(f"no population checkpoint in {path!r}")
-    s = step if step is not None else steps[0]
-    if not os.path.exists(winner_path(path, s)):
-        export_winner(path, like_params, step=s)
-    tree, meta = ckpt.restore(winner_path(path, s), {"params": like_params})
+    except Exception as e:
+        raise ValueError(
+            f"draft checkpoint {path!r} does not match the draft arch's "
+            f"parameter tree (wrong --draft-arch for this checkpoint?): "
+            f"{type(e).__name__}: {e}") from e
     return tree["params"], meta
 
 
@@ -172,6 +217,19 @@ class ModelRegistry:
             self._maybe_export()
         step = latest_winner_step(self.ckpt_dir)
         if step is None or step <= self.step:
+            return False
+        return self.load_step(step)
+
+    def load_step(self, step: int) -> bool:
+        """Load a SPECIFIC exported winner (no newer-than scan).
+
+        The mesh-follower path: host 0 polls the filesystem, decides,
+        and broadcasts the winning step; followers load exactly that
+        step so every host swaps to the same weights on the same
+        scheduler step even if their filesystem views are racing the
+        trainer's writes.
+        """
+        if step == self.step:
             return False
         tree, meta = ckpt.restore(winner_path(self.ckpt_dir, step),
                                   {"params": self.like_params})

@@ -124,7 +124,10 @@ class Scheduler:
                  min_prefill_bucket: int = 8,
                  registry=None, watch_every: int = 0,
                  swap_mode: str = "immediate",
-                 draft_params=None, spec_tokens: int = 0):
+                 draft_params=None, spec_tokens: int = 0,
+                 draft_cfg: Optional[ModelConfig] = None,
+                 spec_fused: bool = True,
+                 spec_adapt: bool = False):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -150,29 +153,36 @@ class Scheduler:
         self.swap_mode = swap_mode
         self.spec_tokens = int(spec_tokens) if draft_params is not None \
             else 0
+        self.spec_fused = bool(spec_fused)
+        self.spec_adapt = bool(spec_adapt)
+        # the drafter may be a SMALLER arch than the target (per-session
+        # configs); vocab compatibility is a hard precondition — draft
+        # token ids index the target's embedding
+        self.draft_cfg = draft_cfg if draft_cfg is not None else cfg
+        if draft_params is not None and self.draft_cfg is not cfg:
+            from repro.serve.registry import check_draft_compat
+            check_draft_compat(cfg, self.draft_cfg)
+        if max_seq is not None and max_seq != max_len and not self.paged:
+            raise ValueError("layout='dense' caps requests at max_len")
         n_blocks = num_blocks if num_blocks is not None \
             else num_slots * blocks_for(max_len, block_size)
-
-        def make_pool():
-            if self.paged:
-                return PagedLayout(cfg, num_slots, n_blocks,
-                                   block_size=block_size,
-                                   max_seq=max_seq or max_len,
-                                   pin_prefix=pin_prefix)
-            if max_seq is not None and max_seq != max_len:
-                raise ValueError("layout='dense' caps requests at max_len")
-            return SlotLayout(cfg, num_slots, max_len,
-                              block_size=block_size,
-                              num_blocks=num_blocks)
-
-        self.pool = make_pool()
+        # geometry the layout factory reads (subclasses reuse it when
+        # building mesh-sharded pools)
+        self._geom = {"num_slots": num_slots, "max_len": max_len,
+                      "block_size": block_size, "n_blocks": n_blocks,
+                      "num_blocks": num_blocks,
+                      "max_seq": max_seq or max_len,
+                      "pin_prefix": pin_prefix}
+        self.pool = self._make_layout(cfg)
         self.max_seq = self.pool.max_seq if self.paged else max_len
         # ALL model calls go through sessions; the drafter is a second
-        # session over its own (mirror) pool — same decode API
-        self.session = DecodeSession(cfg, params, self.pool)
+        # session over its own (mirror-geometry) pool — same decode API
+        self.session = self._make_session(cfg, params, self.pool)
         self.draft: Optional[DecodeSession] = None
         if draft_params is not None:
-            self.draft = DecodeSession(cfg, draft_params, make_pool())
+            self.draft = self._make_session(
+                self.draft_cfg, draft_params,
+                self._make_layout(self.draft_cfg))
         # right-padding prompts is only sound for pure-attention stacks:
         # recurrent layers (mamba/xLSTM) would fold padding into their
         # state, so those families prefill at exact prompt length
@@ -180,6 +190,8 @@ class Scheduler:
         # and one-shot: chunked prefill needs mid-prompt resume, which
         # only the paged attention path supports.
         self._can_pad = all(s.kind == "a" for s in lm.layer_specs(cfg))
+        self._draft_can_pad = all(
+            s.kind == "a" for s in lm.layer_specs(self.draft_cfg))
         self._chunked = self.paged and self._can_pad
         self.prefix_sharing = bool(prefix_sharing) and self._chunked
         # ragged gather-width grouping only pays on the CPU oracle (the
@@ -190,6 +202,11 @@ class Scheduler:
         self.queue: deque[Request] = deque()
         self.active: Dict[Any, _Active] = {}
         self.prefilling: Dict[Any, _Active] = {}
+        # one-shot prefills admitted this step, run AFTER the admission
+        # phase completes (on a mesh: after host 0's decisions are
+        # broadcast — device work must be identical on every host)
+        self._pending_onepass: List[_Active] = []
+        self._pending_draft: List[Request] = []
         self._by_slot: Dict[int, _Active] = {}
         self._next_token = np.zeros((num_slots,), np.int32)
         # paged decode uses -1 as the "row holds no request" sentinel
@@ -197,11 +214,33 @@ class Scheduler:
         # the slot's own, writes are harmless)
         self._idle_index = -1 if self.paged else 0
         self._index = np.full((num_slots,), self._idle_index, np.int32)
+        # per-row speculative depth (spec_adapt): proposals offered next
+        # round for the request in each slot, adapted from its accept
+        # history within [1, spec_tokens]
+        self._spec_k = np.full((num_slots,), max(self.spec_tokens, 1),
+                               np.int32)
+        self.spec_k_by_rid: Dict[Any, int] = {}
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = ServeStats(slots=num_slots)
         self._pending_params = None
         self._head_share = None
         self._step_count = 0
+
+    # -- construction hooks (the mesh scheduler overrides these) ------------
+    def _make_layout(self, cfg: ModelConfig):
+        g = self._geom
+        if self.paged:
+            return PagedLayout(cfg, g["num_slots"], g["n_blocks"],
+                               block_size=g["block_size"],
+                               max_seq=g["max_seq"],
+                               pin_prefix=g["pin_prefix"])
+        return SlotLayout(cfg, g["num_slots"], g["max_len"],
+                          block_size=g["block_size"],
+                          num_blocks=g["num_blocks"])
+
+    def _make_session(self, cfg: ModelConfig, params,
+                      layout) -> DecodeSession:
+        return DecodeSession(cfg, params, layout)
 
     @property
     def params(self):
@@ -238,8 +277,9 @@ class Scheduler:
         self.queue.append(req)
 
     # -- scheduling ---------------------------------------------------------
-    def _bucket(self, n: int, cap: Optional[int] = None) -> int:
-        if not self._can_pad:
+    def _bucket(self, n: int, cap: Optional[int] = None,
+                can_pad: Optional[bool] = None) -> int:
+        if not (self._can_pad if can_pad is None else can_pad):
             return n
         cap = cap or self.max_seq
         return min(max(self.min_prefill_bucket, _next_pow2(n)), cap)
@@ -269,13 +309,19 @@ class Scheduler:
         return pool.can_admit(total, shared_pages=shared)
 
     def _admit(self, req: Request) -> None:
+        """Claim slot + pages (host-side accounting ONLY — the prefill
+        dispatch is deferred to :meth:`_prefill_phase`, so on a mesh
+        every host issues identical device work after the admission
+        decisions are broadcast)."""
         P = req.prompt_len
         total = P + req.max_new
         if not self.paged:
-            self.pool.admit(req.rid, total)
-            slot = self.pool.slot_of(req.rid)
+            slot = self.pool.admit(req.rid, total)
             self._admit_draft(req, slot, total)
-            self._prefill_dense(req, slot)
+            act = _Active(req=req, slot=slot, submit_t=getattr(
+                req, "_submit_t", time.perf_counter()))
+            self._spec_k[slot] = max(self.spec_tokens, 1)
+            self._pending_onepass.append(act)
             return
         head = getattr(self, "_head_share", None)
         shared = head[1] if head is not None and head[0] == req.rid \
@@ -288,32 +334,37 @@ class Scheduler:
         act = _Active(req=req, slot=slot, pf_pos=shared_len,
                       submit_t=getattr(req, "_submit_t",
                                        time.perf_counter()))
+        self._spec_k[slot] = max(self.spec_tokens, 1)
         if self._chunked:
             # chunk slices run in _prefill_step, interleaved with decode
             self.prefilling[req.rid] = act
         else:
-            self._prefill_onepass_paged(act)
+            self._pending_onepass.append(act)
 
     def _admit_draft(self, req: Request, slot: int, total: int) -> None:
-        """Mirror an admission into the drafter's pool (same slot — the
-        two pools see identical admit/release sequences) and prefill
-        the full prompt there one-shot."""
+        """Mirror an admission into the drafter's pool at the SAME slot
+        (the two decode batches must stay row-aligned); the drafter's
+        one-shot prompt prefill is deferred with the target's."""
         if self.draft is None:
             return
         if self.paged:
-            d_slot, _ = self.draft.layout.admit(req.rid, total)
+            d_slot, _ = self.draft.layout.admit(req.rid, total, slot=slot)
         else:
-            d_slot = self.draft.layout.admit(req.rid, total)
+            d_slot = self.draft.layout.admit(req.rid, total, slot=slot)
         assert d_slot == slot, (d_slot, slot)
-        bucket = self._bucket(req.prompt_len) if self._can_pad else None
+        self._pending_draft.append(req)
+
+    def _prefill_draft(self, req: Request) -> None:
+        bucket = self._bucket(req.prompt_len,
+                              can_pad=self._draft_can_pad) \
+            if self._draft_can_pad else None
         self.draft.prefill(req.rid, req.prompt, bucket=bucket)
 
-    def _prefill_dense(self, req: Request, slot: int) -> None:
+    def _prefill_dense(self, act: _Active) -> None:
+        req = act.req
         P = req.prompt_len
         bucket = self._bucket(P)
         last = self.session.prefill(req.rid, req.prompt, bucket=bucket)
-        act = _Active(req=req, slot=slot, submit_t=getattr(
-            req, "_submit_t", time.perf_counter()))
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += bucket
@@ -409,6 +460,8 @@ class Scheduler:
     def _finish(self, act: _Active) -> None:
         rid = act.req.rid
         self.results[rid] = np.asarray(act.tokens, np.int32)
+        if self.spec_adapt:
+            self.spec_k_by_rid[rid] = int(self._spec_k[act.slot])
         self.stats.completed += 1
         self.stats.latency.append(time.perf_counter() - act.submit_t)
         slot = self.pool.release(rid)
@@ -436,10 +489,21 @@ class Scheduler:
         """True while new weights wait for in-flight requests to finish."""
         return self._pending_params is not None
 
-    def _maybe_hot_swap(self) -> None:
+    def _poll_registry(self) -> Optional[int]:
+        """Poll for a newer winner; returns its step when one was
+        loaded.  The ONLY nondeterministic scheduler decision (it reads
+        the filesystem) — on a mesh, host 0 polls and broadcasts the
+        answer so every host swaps to the same winner on the same step."""
         if self.registry is not None and self.watch_every > 0 \
                 and self._step_count % self.watch_every == 0 \
                 and self.registry.refresh():
+            return getattr(self.registry, "step", 0)
+        return None
+
+    def _apply_swap(self, winner: Optional[int]) -> None:
+        """Deterministic half of the hot-swap: given host 0's poll
+        result, apply/defer the swap per ``swap_mode``."""
+        if winner is not None:
             if self.swap_mode == "drain" and (self.active
                                               or self.prefilling):
                 self._pending_params = self.registry.params
@@ -451,6 +515,51 @@ class Scheduler:
             self.set_params(self._pending_params)
             self._pending_params = None
 
+    def _maybe_hot_swap(self) -> None:
+        self._apply_swap(self._poll_registry())
+
+    def _admission_phase(self) -> List[Any]:
+        """Pop admissible queued requests and claim their slots/pages
+        (host accounting only); returns the admitted rids in order —
+        the decision record a mesh broadcasts."""
+        admitted: List[Any] = []
+        in_flight = bool(self.active or self.prefilling)
+        if self.draining:
+            return admitted
+        if self.policy == "static":
+            if not in_flight:
+                while self.queue and self._can_admit_head():
+                    admitted.append(self.queue[0].rid)
+                    self._admit(self.queue.popleft())
+        else:
+            while (len(admitted) < self.max_prefills_per_step
+                   and self.queue and self._can_admit_head()):
+                admitted.append(self.queue[0].rid)
+                self._admit(self.queue.popleft())
+        return admitted
+
+    def _prefill_phase(self) -> None:
+        """Run the device work admission deferred: drafter mirrors,
+        one-shot prefills, then one round of chunked-prefill slices."""
+        for req in self._pending_draft:
+            self._prefill_draft(req)
+        self._pending_draft.clear()
+        for act in self._pending_onepass:
+            if self.paged:
+                self._prefill_onepass_paged(act)
+            else:
+                self._prefill_dense(act)
+        self._pending_onepass.clear()
+        if self.prefilling:
+            self._prefill_step()
+
+    def _decode_phase(self) -> None:
+        if self.active:
+            if self.spec_tokens > 0:
+                self._spec_round()
+            else:
+                self._decode_round()
+
     def step(self) -> None:
         """One scheduler iteration: hot-swap check, admission, chunked
         prefill, one batched decode (or speculative) round,
@@ -458,29 +567,9 @@ class Scheduler:
         self.stats.start()
         self._maybe_hot_swap()
         self._step_count += 1
-        # -- admission (paused while draining onto new weights)
-        in_flight = bool(self.active or self.prefilling)
-        if self.draining:
-            pass
-        elif self.policy == "static":
-            if not in_flight:
-                while self.queue and self._can_admit_head():
-                    self._admit(self.queue.popleft())
-        else:
-            admitted = 0
-            while (admitted < self.max_prefills_per_step and self.queue
-                   and self._can_admit_head()):
-                self._admit(self.queue.popleft())
-                admitted += 1
-        # -- chunked prefill slices (interleaved with decode)
-        if self.prefilling:
-            self._prefill_step()
-        # -- one decode round over the pool (per-slot write indices)
-        if self.active:
-            if self.spec_tokens > 0:
-                self._spec_round()
-            else:
-                self._decode_round()
+        self._admission_phase()
+        self._prefill_phase()
+        self._decode_phase()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
 
@@ -567,28 +656,49 @@ class Scheduler:
     def _spec_round(self) -> None:
         """One population-speculative round.
 
-        The drafter proposes ``spec_tokens`` tokens per row
-        sequentially; the target verifies the row's pending token plus
-        all proposals in ONE (K+1)-token ``session.step``; the accepted
+        The drafter proposes up to ``spec_tokens`` tokens per row
+        (``spec_adapt`` modulates the depth per row from its accept
+        history); the target verifies the row's pending token plus all
+        proposals in ONE (K+1)-token ``session.step``; the accepted
         prefix (matching proposals + one target token — correction or
         bonus) is kept, so every emitted token is a TARGET sample and
-        the output stream is identical to target-only decoding.  Rows
-        that reject mid-block restore their recurrent snapshot and
-        replay the accepted prefix with a ``valid`` mask (attention KV
-        needs no rollback: stale tail positions are causally masked and
-        overwritten).
+        the output stream is identical to target-only decoding.
+
+        **Fused drafting** (``spec_fused``, the default): the whole
+        draft block is ONE dispatch — ``session.draft_block`` unrolls
+        K+1 single-token decodes on device, feeding each greedy argmax
+        into the next — and the host then RESAMPLES the proposals from
+        the returned logits with the request's real sampling function.
+        A round is 2 dispatches (draft + verify) instead of K+2.  At
+        temperature 0 host resample == device greedy, so the drafter's
+        cache is exactly right; at temperature > 0 a resample that
+        diverges from the device feed leaves wrong tokens in the
+        drafter's history, which the rollback below repairs (token
+        identity is untouched either way — emitted tokens only ever
+        come from the target).
+
+        Rollback: the TARGET restores its recurrent snapshot + replays
+        the accepted prefix when it kept fewer tokens than it fed
+        (attention KV needs none: stale tail positions are causally
+        masked and overwritten).  The DRAFTER additionally repairs
+        rows whose device-fed block diverged from the host-resampled
+        block — a replay write for attention KV, restore + replay for
+        recurrent state.
         """
-        Kv = self.spec_tokens + 1
         B = self.pool.num_slots
         acts = list(self.active.values())
-        has_rec = self.pool.has_recurrent
+        t_rec = self.pool.has_recurrent
+        d_rec = self.draft.layout.has_recurrent
         base = self._index.copy()
         # per-row cap: writes at base..base+cap-1 must stay inside the
         # prompt+max_new reservation (a cap-truncated row finishes this
         # round anyway)
         cap = np.zeros((B,), np.int32)
         for act in acts:
-            cap[act.slot] = min(Kv, act.req.max_new - act.ntok + 1)
+            k_row = int(self._spec_k[act.slot]) if self.spec_adapt \
+                else self.spec_tokens
+            cap[act.slot] = min(k_row + 1, act.req.max_new - act.ntok + 1)
+        Kv = int(cap.max())
         if self.paged:
             targets = {a.slot: int(base[a.slot]) + int(cap[a.slot]) - 1
                        for a in acts}
@@ -601,28 +711,42 @@ class Scheduler:
         block[:, 0] = self._next_token
         ntok0 = {act.slot: act.ntok for act in acts}
 
-        # -- draft: Kv sequential single-token steps (the last feeds the
-        # final proposal so drafter and target caches stay aligned when
-        # everything is accepted)
-        d_snap = self.draft.snapshot() if has_rec else ()
-        for t in range(Kv):
-            valid_t = (cap > t).astype(np.int32)
-            idx_t = np.where(self._index >= 0, base + t,
-                             self._idle_index).astype(np.int32)
-            logits = self.draft.step(block[:, t:t + 1], idx_t,
-                                     valid=valid_t, width=W)
+        d_snap = self.draft.snapshot() if d_rec else ()
+        if self.spec_fused:
+            # -- fused draft: ONE dispatch for the whole block
+            dlogits, dev = self.draft.draft_block(
+                self._next_token[:, None], base, Kv, valid=cap, width=W)
+            drows = np.asarray(dlogits.astype(jnp.float32))  # (B, Kv, V)
+            dev = np.asarray(dev)                            # (B, Kv)
             self.stats.spec_draft_steps += 1
-            if t + 1 >= Kv:
-                break
-            rows = np.asarray(logits.astype(jnp.float32))
             for act in acts:
                 s = act.slot
-                if t + 1 < cap[s]:
-                    block[s, t + 1] = self._sample(rows[s, 0], act.req,
+                for t in range(int(cap[s]) - 1):
+                    block[s, t + 1] = self._sample(drows[s, t], act.req,
                                                    ntok0[s] + t)
+        else:
+            # -- sequential draft: Kv single-token steps (the last
+            # feeds the final proposal so drafter and target caches
+            # stay aligned when everything is accepted)
+            for t in range(Kv):
+                valid_t = (cap > t).astype(np.int32)
+                idx_t = np.where(self._index >= 0, base + t,
+                                 self._idle_index).astype(np.int32)
+                logits = self.draft.step(block[:, t:t + 1], idx_t,
+                                         valid=valid_t, width=W)
+                self.stats.spec_draft_steps += 1
+                if t + 1 >= Kv:
+                    break
+                rows = np.asarray(logits.astype(jnp.float32))
+                for act in acts:
+                    s = act.slot
+                    if t + 1 < cap[s]:
+                        block[s, t + 1] = self._sample(rows[s, 0], act.req,
+                                                       ntok0[s] + t)
+            dev = block          # the drafter was fed the host block
 
         # -- target: verify the whole block in one K-token step
-        t_snap = self.session.snapshot() if has_rec else ()
+        t_snap = self.session.snapshot() if t_rec else ()
         vlogits = self.session.step(block, base, valid=cap, width=W)
         rows = np.asarray(vlogits.astype(jnp.float32))   # (B, Kv, V)
         self.stats.decode_steps += 1
@@ -645,25 +769,60 @@ class Scheduler:
                 if t + 1 >= c or g != int(block[s, t + 1]):
                     break
             fed_valid[s] = appended
-            self.stats.spec_draft_proposed += max(0, c - 1)
-            self.stats.spec_draft_accepted += max(0, appended - 1)
+            offered = max(0, c - 1)
+            accepted = max(0, appended - 1)
+            self.stats.spec_draft_proposed += offered
+            self.stats.spec_draft_accepted += accepted
+            if offered:
+                self.stats.spec_k_sum += offered
+                self.stats.spec_k_rows += 1
+                if self.spec_adapt:
+                    self._adapt_depth(act, offered, accepted)
 
-        # -- rollback: recurrent state of still-active rows that kept
-        # fewer than they fed (attention-only stacks skip this wholesale)
-        if has_rec:
-            rb = np.zeros((B,), bool)
-            replay = np.zeros((B,), np.int32)
-            for act in acts:
-                s = act.slot
-                if act.req.rid in self.active and fed_valid[s] < cap[s]:
-                    rb[s] = True
-                    replay[s] = fed_valid[s]
-            if rb.any():
-                self.session.restore(t_snap, rb)
-                self.session.step(block, base, valid=replay, width=W)
-                self.draft.restore(d_snap, rb)
-                self.draft.step(block, base, valid=replay, width=W)
-                self.stats.spec_replays += 1
+        # -- rollback
+        rb_t = np.zeros((B,), bool)
+        rep_t = np.zeros((B,), np.int32)
+        rb_d = np.zeros((B,), bool)
+        rep_d = np.zeros((B,), np.int32)
+        for act in acts:
+            s = act.slot
+            if act.req.rid not in self.active:
+                continue
+            fed = int(fed_valid[s])
+            if fed < cap[s]:
+                # target kept fewer than it fed: recurrent state (if
+                # any) rolls back to the accepted prefix
+                rb_t[s] = True
+                rep_t[s] = fed
+            diverged = dev[s, 1:fed].tolist() != block[s, 1:fed].tolist()
+            if diverged or (d_rec and fed < cap[s]):
+                rb_d[s] = True
+                rep_d[s] = fed
+        if t_rec and rb_t.any():
+            self.session.restore(t_snap, rb_t)
+            self.session.step(block, base, valid=rep_t, width=W)
+            self.stats.spec_replays += 1
+        if rb_d.any():
+            if d_rec:
+                self.draft.restore(d_snap, rb_d)
+            self.draft.step(block, base, valid=rep_d, width=W)
+            self.stats.spec_replays += 1
+
+    def _adapt_depth(self, act: _Active, offered: int,
+                     accepted: int) -> None:
+        """Per-row speculative depth policy (``--spec-adapt``):
+        additive increase on a fully accepted block, halve on a
+        complete rejection, otherwise settle at what the row just
+        proved it can absorb — bounded to [1, spec_tokens]."""
+        k = int(self._spec_k[act.slot])
+        if accepted >= offered:
+            k = min(self.spec_tokens, k + 1)
+        elif accepted == 0:
+            k = max(1, k // 2)
+        else:
+            k = max(1, min(k, accepted + 1))
+        self._spec_k[act.slot] = k
+        self.spec_k_by_rid[act.req.rid] = k
 
     def _table_bucket(self, max_tokens: int) -> int:
         """Gather width (block-table columns) for this step: pow2-

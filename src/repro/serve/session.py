@@ -66,6 +66,47 @@ def _step_tables_fn(params, cfg, tokens, cache, index, tables, valid):
                         valid=valid)
 
 
+def _draft_unroll(params, cfg, tok0, cache, index, valid, steps, tables):
+    """`steps` single-token decodes in ONE jitted dispatch, each feeding
+    the next token by on-device greedy argmax — the fused drafter round.
+    Step t is real for row b iff ``t < valid[b]`` (null-routed paged
+    writes + frozen recurrent state beyond, exactly like a masked
+    multi-token step).  Returns (logits (B, steps, V), the tokens
+    actually fed (B, steps), new cache)."""
+    tok = tok0
+    fed, logits_all = [], []
+    for t in range(steps):
+        valid_t = jnp.minimum(jnp.maximum(valid - t, 0), 1)
+        if tables is None:
+            idx_t = index + t
+            logits, cache = lm.lm_decode(params, cfg, tok, cache, idx_t,
+                                         valid=valid_t)
+        else:
+            idx_t = jnp.where(index >= 0, index + t, -1)
+            logits, cache = lm.lm_decode(params, cfg, tok, cache, idx_t,
+                                         tables=tables, valid=valid_t)
+        fed.append(tok[:, 0])
+        logits_all.append(logits[:, 0])
+        # greedy device feed; the host resamples from the returned
+        # logits with the request's true sampling function afterwards
+        tok = jnp.argmax(logits[:, 0].astype(jnp.float32),
+                         axis=-1).astype(jnp.int32)[:, None]
+    return (jnp.stack(logits_all, axis=1), jnp.stack(fed, axis=1), cache)
+
+
+@partial(jax.jit, static_argnums=(1, 6), donate_argnums=(3,))
+def _draft_fn(params, cfg, tok0, cache, index, valid, steps):
+    return _draft_unroll(params, cfg, tok0, cache, index, valid, steps,
+                         None)
+
+
+@partial(jax.jit, static_argnums=(1, 6), donate_argnums=(3,))
+def _draft_tables_fn(params, cfg, tok0, cache, index, valid, steps,
+                     tables):
+    return _draft_unroll(params, cfg, tok0, cache, index, valid, steps,
+                         tables)
+
+
 class DecodeSession:
     """Weights + a cache layout, driven through one decode API.
 
@@ -89,6 +130,29 @@ class DecodeSession:
         """Hot-swap weights (cache layout depends only on the config)."""
         self.params = params
 
+    # -- jit indirection ---------------------------------------------------
+    # Every dispatch goes through one of these hooks so a subclass can
+    # swap in DIFFERENT jitted executables (the serving mesh binds
+    # mesh-dedicated jits with the Mesh as a static arg) while the
+    # host-side marshalling above/below stays in exactly one place.
+    def _call_prefill(self, *args):
+        return _prefill_fn(*args)
+
+    def _call_chunk(self, *args):
+        return _chunk_fn(*args)
+
+    def _call_step(self, *args):
+        return _step_fn(*args)
+
+    def _call_step_tables(self, *args):
+        return _step_tables_fn(*args)
+
+    def _call_draft(self, *args):
+        return _draft_fn(*args)
+
+    def _call_draft_tables(self, *args):
+        return _draft_tables_fn(*args)
+
     # -- prefill -----------------------------------------------------------
     def prefill(self, rid, prompt: np.ndarray,
                 bucket: Optional[int] = None) -> np.ndarray:
@@ -103,7 +167,7 @@ class DecodeSession:
         L = bucket or P
         toks = np.zeros((1, L), np.int32)
         toks[0, :P] = prompt
-        logits, cache = _prefill_fn(
+        logits, cache = self._call_prefill(
             self.params, self.cfg, jnp.asarray(toks),
             jnp.asarray([P - 1], jnp.int32))
         if self.paged:
@@ -115,7 +179,8 @@ class DecodeSession:
     def prefill_batch(self, tokens: jax.Array) -> jax.Array:
         """Uniform-length batch prefill filling EVERY slot row (the
         engine path; slot layouts only).  Returns logits (B, 1, V)."""
-        logits, cache = _prefill_fn(self.params, self.cfg, tokens, None)
+        logits, cache = self._call_prefill(self.params, self.cfg,
+                                           tokens, None)
         self.layout.insert_batch(cache)
         return logits
 
@@ -134,7 +199,7 @@ class DecodeSession:
         toks = np.zeros((1, chunk_bucket), np.int32)
         toks[0, :n] = chunk
         slot = self.layout.slot_of(rid)
-        logits, self.layout.cache = _chunk_fn(
+        logits, self.layout.cache = self._call_chunk(
             self.params, self.cfg, jnp.asarray(toks), self.layout.cache,
             jnp.asarray(self.layout.tables[slot:slot + 1, :width]),
             jnp.int32(hist_len), jnp.int32(prompt_len),
@@ -167,13 +232,46 @@ class DecodeSession:
                                                  rows=rows)["tables"]
             else:
                 tables = jnp.asarray(tables)
-            logits, self.layout.cache = _step_tables_fn(
+            logits, self.layout.cache = self._call_step_tables(
                 self.params, self.cfg, tok, self.layout.cache, idx,
                 tables, v)
         else:
-            logits, self.layout.cache = _step_fn(
+            logits, self.layout.cache = self._call_step(
                 self.params, self.cfg, tok, self.layout.cache, idx, v)
         return logits
+
+    def draft_block(self, tok0: np.ndarray, index: np.ndarray,
+                    steps: int, valid: Optional[np.ndarray] = None,
+                    width: Optional[int] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+        """Fused drafter round: ``steps`` unrolled single-token decodes
+        in ONE dispatch, each feeding the next token by on-device
+        greedy argmax.
+
+        tok0: (B, 1) the pending token per row; index: (B,) its write
+        position (-1 = idle row on paged layouts); valid: (B,) real
+        steps per row (rows freeze beyond, like a masked multi-token
+        step); width: block-table columns (paged).  Returns (logits
+        (B, steps, V), fed tokens (B, steps)) still on device — the
+        caller resamples proposals from the logits with the request's
+        real sampling function and repairs the cache where its samples
+        diverge from the greedy feed.
+        """
+        tok = jnp.asarray(tok0, jnp.int32)
+        idx = jnp.asarray(index, jnp.int32)
+        B = tok.shape[0]
+        v = jnp.full((B,), steps, jnp.int32) if valid is None \
+            else jnp.asarray(valid, jnp.int32)
+        if self.paged:
+            tables = self.layout.step_kwargs(width=width)["tables"]
+            logits, fed, self.layout.cache = self._call_draft_tables(
+                self.params, self.cfg, tok, self.layout.cache, idx, v,
+                steps, tables)
+        else:
+            logits, fed, self.layout.cache = self._call_draft(
+                self.params, self.cfg, tok, self.layout.cache, idx, v,
+                steps)
+        return logits, fed
 
     # -- rollback ----------------------------------------------------------
     def snapshot(self) -> Tuple[jax.Array, ...]:
