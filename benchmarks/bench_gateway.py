@@ -1,0 +1,159 @@
+"""Gateway serving benchmark: concurrent streaming HTTP clients
+against the live asyncio front door.
+
+Starts an in-process :class:`repro.serve.gateway.Gateway` over a
+smoke-config scheduler and drives it two ways:
+
+* **throughput**: N concurrent streaming clients, measuring wall-clock
+  tokens/s, per-request TTFT (time to the FIRST streamed token record,
+  i.e. queueing + prefill + the first decode round through the HTTP
+  stack), and mean TPOT;
+* **overload burst**: a second wave sized past ``--max-queue``,
+  counting clean 429 sheds vs completions (admission control under
+  pressure, not a crash).
+
+With ``--json PATH`` the summary is written as ``BENCH_gateway.json``
+so CI tracks the serving front door's perf trajectory across PRs.
+
+  python -m benchmarks.bench_gateway --quick --json BENCH_gateway.json
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+async def _timed_stream(port: int, prompt, max_new: int):
+    """Streaming request with true chunk-arrival TTFT measurement."""
+    t0 = time.perf_counter()
+    r, w = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps({"prompt": prompt, "max_new": max_new}).encode()
+    w.write((f"POST /v1/generate HTTP/1.1\r\nHost: b\r\n"
+             f"Content-Length: {len(payload)}\r\n\r\n").encode() + payload)
+    await w.drain()
+    head = await r.readuntil(b"\r\n\r\n")
+    status = int(head.split()[1])
+    ttft = None
+    n_tokens = 0
+    if status == 200:
+        while True:
+            size_line = await r.readline()
+            n = int(size_line.strip() or b"0", 16)
+            if n == 0:
+                break
+            chunk = await r.readexactly(n + 2)
+            rec = json.loads(chunk[:n])
+            if "token" in rec:
+                n_tokens += 1
+                if ttft is None:
+                    ttft = time.perf_counter() - t0
+    else:
+        await r.read()
+    total = time.perf_counter() - t0
+    w.close()
+    return (ttft if ttft is not None else total), total, n_tokens, status
+
+
+async def _drive(gw, port, n_requests, prompt_lens, max_new, burst):
+    rng = np.random.default_rng(0)
+    vocab = gw.sched.cfg.vocab_size
+
+    def prompt(i):
+        return rng.integers(0, vocab,
+                            prompt_lens[i % len(prompt_lens)]).tolist()
+
+    # throughput wave: all clients in flight together
+    t0 = time.perf_counter()
+    waves = await asyncio.gather(*[
+        _timed_stream(port, prompt(i), max_new) for i in range(n_requests)])
+    wall = time.perf_counter() - t0
+    ok = [wv for wv in waves if wv[3] == 200]
+    tokens = sum(wv[2] for wv in ok)
+    ttfts = [wv[0] for wv in ok]
+    tpots = [(wv[1] - wv[0]) / max(wv[2] - 1, 1) for wv in ok]
+
+    # overload burst: size it past the queue bound, count clean sheds
+    burst_res = await asyncio.gather(*[
+        _timed_stream(port, prompt(i), max_new) for i in range(burst)])
+    statuses = [b[3] for b in burst_res]
+    return {
+        "requests": n_requests,
+        "completed": len(ok),
+        "wall_s": round(wall, 3),
+        "tok_s": round(tokens / wall, 2) if wall else 0.0,
+        "ttft_mean_ms": round(1e3 * float(np.mean(ttfts)), 1) if ttfts else 0,
+        "ttft_p95_ms": round(1e3 * _percentile(ttfts, 95), 1),
+        "tpot_mean_ms": round(1e3 * float(np.mean(tpots)), 1) if tpots else 0,
+        "burst": burst,
+        "burst_ok": sum(1 for s in statuses if s == 200),
+        "burst_429": sum(1 for s in statuses if s == 429),
+        "burst_other": sum(1 for s in statuses if s not in (200, 429)),
+    }
+
+
+def run(quick: bool = False, json_path: str = None) -> dict:
+    """Build the scheduler + gateway in-process and run both waves."""
+    from repro.configs.registry import get_config
+    from repro.models.lm import init_lm
+    from repro.serve.gateway import Gateway
+    from repro.serve.scheduler import Scheduler
+
+    cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                              dtype="float32")
+    params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+    n_requests = 6 if quick else 16
+    max_new = 8 if quick else 24
+    # throughput wave must fit the bound; the burst must exceed it
+    max_queue = n_requests
+    sched = Scheduler(cfg, params, num_slots=2,
+                      max_len=64, max_queue=max_queue)
+    gw = Gateway(sched, port=0)
+
+    async def main():
+        await gw.start()
+        try:
+            return await _drive(gw, gw.port, n_requests,
+                                prompt_lens=(8, 16), max_new=max_new,
+                                burst=max_queue + 2 + 4)
+        finally:
+            await gw.stop()
+
+    summary = asyncio.new_event_loop().run_until_complete(main())
+    summary["quick"] = quick
+    summary["sched"] = {"slots": 2, "max_queue": max_queue,
+                        "max_new": max_new}
+    assert summary["completed"] == n_requests, summary
+    assert summary["burst_429"] > 0, (
+        f"overload burst produced no 429s: {summary}")
+    assert summary["burst_other"] == 0, summary
+    print(json.dumps(summary, indent=2))
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(summary, f, indent=2)
+        print(f"# bench_gateway wrote {json_path}")
+    return summary
+
+
+def main(argv=None) -> int:
+    """CLI: ``python -m benchmarks.bench_gateway [--quick] [--json P]``."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", default=None,
+                    help="write BENCH_gateway.json summary here")
+    args = ap.parse_args(argv)
+    run(quick=args.quick, json_path=args.json)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

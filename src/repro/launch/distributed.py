@@ -1,0 +1,240 @@
+"""Multi-process mesh serving harness (``jax.distributed``).
+
+Runs the :class:`repro.serve.mesh.MeshScheduler` across REAL OS
+processes: host 0 decides (admission, hot swap, submits, cancels) and
+broadcasts a :class:`repro.serve.mesh.StepPlan` every step; followers
+replay it and land in an identical state.  On CPU the plan rides the
+jax coordination service (XLA's CPU backend cannot run cross-process
+computations), each process holds a full model replica on its private
+local mesh, and a per-step barrier turns a dead peer into a clean
+timeout error instead of a hang.  On TPU/GPU the same harness gets a
+true global mesh and device-collective broadcasts.
+
+Two modes in one CLI:
+
+* **spawn** (``--procs N``): pick a free coordinator port, launch N
+  worker copies of this module, supervise them (first failure kills
+  the rest), exit with the workers' status;
+* **worker** (``--process-id I --num-processes N --coordinator
+  HOST:PORT``): ``jax.distributed.initialize``, build the scheduler,
+  run the request trace (host 0) or the replay loop (followers), and
+  write per-process results to ``--out-json`` (followers append
+  ``.pI``) so token identity across processes is checkable from the
+  outside.
+
+  python -m repro.launch.distributed --procs 2 --smoke \
+      --requests 4 --max-new 8 --out-json /tmp/dist.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import socket
+import subprocess
+import sys
+import time
+from typing import List, Optional
+
+# NOTE: no top-level jax import — the spawner must be able to set
+# XLA_FLAGS in the children's environment before THEIR jax import, and
+# must not initialize a backend in the parent at all.
+
+
+def find_free_port(host: str = "127.0.0.1") -> int:
+    """Bind port 0, return the OS-assigned free port."""
+    with socket.socket(socket.AF_INET, socket.SOCK_STREAM) as s:
+        s.bind((host, 0))
+        return s.getsockname()[1]
+
+
+def build_parser() -> argparse.ArgumentParser:
+    """The distributed CLI's argument parser (separate from
+    :func:`main` so ``docs/flags.md`` can be checked against it)."""
+    ap = argparse.ArgumentParser(
+        prog="repro.launch.distributed",
+        description="Multi-process mesh serving over jax.distributed")
+    # spawn mode
+    ap.add_argument("--procs", type=int, default=0,
+                    help="spawn N worker processes and supervise them "
+                         "(0 = run as a worker in THIS process)")
+    # worker topology
+    ap.add_argument("--process-id", type=int, default=0,
+                    help="this worker's rank (0 = host-0 scheduler)")
+    ap.add_argument("--num-processes", type=int, default=1,
+                    help="total worker count in the job")
+    ap.add_argument("--coordinator", default="127.0.0.1:0",
+                    help="jax.distributed coordinator HOST:PORT "
+                         "(the spawner fills this in)")
+    ap.add_argument("--step-timeout", type=float, default=60.0,
+                    help="per-step plan-broadcast timeout in seconds; "
+                         "a dead peer raises instead of hanging")
+    ap.add_argument("--feed", default="host0",
+                    choices=("host0", "replicated"),
+                    help="host0: only host 0 sees the requests "
+                         "(followers receive them in the plan, the "
+                         "gateway path); replicated: every process "
+                         "submits the trace locally")
+    # model / trace (mirrors launch.serve)
+    ap.add_argument("--arch", default="qwen3-0.6b",
+                    help="registered LM arch to serve")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--mesh", default="1,1",
+                    help="per-process mesh 'DATA,MODEL' (CPU: each "
+                         "process holds a full replica on its local "
+                         "devices)")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-request cap + pool sizing (0 = fit the "
+                         "trace)")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-lens", default="8,16",
+                    help="comma list; requests cycle through these")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out-json", default=None,
+                    help="write {rid: tokens} + stats here (followers "
+                         "append .p<rank>)")
+    return ap
+
+
+def spawn(args, argv: List[str]) -> int:
+    """Launch ``--procs`` worker copies of this module and supervise
+    them: the first nonzero exit kills the remaining workers."""
+    from repro.launch.serve import parse_lens  # no jax at import time
+    from repro.serve.mesh import parse_mesh
+
+    data, model = parse_mesh(args.mesh)
+    port = find_free_port()
+    coordinator = f"127.0.0.1:{port}"
+    # workers re-run this argv minus the spawn flag, plus topology
+    passthrough = [a for i, a in enumerate(argv)
+                   if not (a.startswith("--procs")
+                           or (i > 0 and argv[i - 1] == "--procs"
+                               and not a.startswith("--")))]
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
+                        f" --xla_force_host_platform_device_count="
+                        f"{data * model}").strip()
+    _ = parse_lens(args.prompt_lens)    # fail fast on a bad trace spec
+    procs = []
+    for rank in range(args.procs):
+        cmd = [sys.executable, "-m", "repro.launch.distributed",
+               *passthrough, "--process-id", str(rank),
+               "--num-processes", str(args.procs),
+               "--coordinator", coordinator]
+        procs.append(subprocess.Popen(cmd, env=env))
+    status = 0
+    try:
+        live = list(procs)
+        while live:
+            for p in list(live):
+                rc = p.poll()
+                if rc is None:
+                    continue
+                live.remove(p)
+                if rc != 0:
+                    status = rc
+                    # one dead worker stalls the others at the next
+                    # barrier; don't wait for the timeout to prove it
+                    for q in live:
+                        q.terminate()
+            time.sleep(0.05)
+    finally:
+        for p in procs:
+            if p.poll() is None:
+                p.kill()
+    return status
+
+
+def run_worker(args) -> int:
+    """One worker process: initialize the process group, serve the
+    trace (host 0) or replay plans (followers), write results."""
+    import jax
+
+    if args.num_processes > 1:
+        jax.distributed.initialize(
+            coordinator_address=args.coordinator,
+            num_processes=args.num_processes,
+            process_id=args.process_id,
+            initialization_timeout=max(int(args.step_timeout), 10))
+    import numpy as np
+
+    from repro.configs.registry import get_config
+    from repro.launch.serve import build_requests, parse_lens
+    from repro.models.lm import init_lm
+    from repro.serve.mesh import MeshScheduler, parse_mesh
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    # identical seed -> identical replica weights in every process
+    params, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
+    lens = parse_lens(args.prompt_lens)
+    max_len = args.max_len or max(lens) + args.max_new
+    sched = MeshScheduler(
+        cfg, params, mesh_shape=parse_mesh(args.mesh),
+        local_mesh=args.num_processes > 1,
+        step_timeout_s=args.step_timeout,
+        num_slots=args.slots, max_len=max_len)
+    rank = jax.process_index()
+    print(f"[dist] rank={rank}/{args.num_processes} arch={cfg.name} "
+          f"mesh={args.mesh} feed={args.feed} slots={sched.pool.num_slots} "
+          f"channel={type(sched.channel).__name__}", flush=True)
+    reqs = build_requests(cfg, args.requests, lens, args.max_new,
+                          temperature=args.temperature, seed=args.seed)
+    if rank == 0:
+        for r in reqs:
+            sched.submit(r)
+        while sched.queue or sched.active or sched.prefilling:
+            sched.step()
+        sched.shutdown()
+        results = sched.results
+    else:
+        if args.feed == "replicated":
+            # exercise the dedupe path: the plan's submits must be
+            # recognized as already-local copies, not enqueued twice
+            for r in reqs:
+                sched.submit(r)
+        results = sched.run_follower()
+    sched.stats.stop()
+    if rank == 0:
+        sched.stats.report(prefix="[dist]")
+    out = {"rank": rank,
+           "results": {str(rid): [int(t) for t in toks]
+                       for rid, toks in results.items()},
+           "stats": sched.stats.as_dict()}
+    if args.out_json:
+        path = args.out_json if rank == 0 \
+            else f"{args.out_json}.p{rank}"
+        with open(path, "w") as f:
+            json.dump(out, f)
+        print(f"[dist] rank={rank} wrote {path} "
+              f"({len(results)} results)", flush=True)
+    if args.num_processes > 1:
+        jax.distributed.shutdown()
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    """CLI entry point: spawn mode with ``--procs``, else worker."""
+    argv = list(sys.argv[1:] if argv is None else argv)
+    args = build_parser().parse_args(argv)
+    if args.procs > 0:
+        return spawn(args, argv)
+    try:
+        return run_worker(args)
+    except Exception:
+        import traceback
+        traceback.print_exc()
+        # hard-exit: a failed worker must DIE, not hang in jax's
+        # atexit distributed-shutdown handshake waiting for the very
+        # peers it just lost — the supervisor kills the rest
+        sys.stdout.flush()
+        sys.stderr.flush()
+        os._exit(1)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

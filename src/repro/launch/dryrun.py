@@ -377,8 +377,10 @@ def run_pp_cell(verbose: bool = True) -> Dict[str, Any]:
     return result
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser():
+    """The dryrun CLI's argument parser (separate from :func:`main` so
+    ``docs/flags.md`` can be checked against it)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.dryrun")
     ap.add_argument("--arch")
     ap.add_argument("--shape")
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
@@ -395,7 +397,12 @@ def main(argv=None):
                     help="filename suffix for perf-iteration variants")
     ap.add_argument("--moe-dispatch", default=None,
                     choices=["einsum", "scatter"])
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    """CLI entry point: run the selected dry-run cells."""
+    args = build_parser().parse_args(argv)
     cfg_overrides = {}
     if args.moe_dispatch:
         cfg_overrides["moe.dispatch"] = args.moe_dispatch

@@ -101,8 +101,11 @@ def report(orch: TournamentOrchestrator):
           f"{st['tournament_exchange_bytes'] / 1e6:.2f}")
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The ltfb CLI's argument parser (separate from :func:`main` so
+    ``docs/flags.md`` can be checked against it)."""
     ap = argparse.ArgumentParser(
+        prog="repro.launch.ltfb",
         description="LTFB tournament training over the distributed "
                     "datastore")
     ap.add_argument("--arch", default="icf-cyclegan", choices=sorted(ARCHS))
@@ -139,7 +142,12 @@ def main(argv=None) -> int:
     ap.add_argument("--rescale-to", type=int, default=0,
                     help="elastically rescale to K' trainers mid-run")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> int:
+    """CLI entry point: parse args, run the LTFB tournament."""
+    args = build_parser().parse_args(argv)
 
     if args.samples is None:
         args.samples = 1024 if args.smoke else 16_384

@@ -15,10 +15,17 @@ launcher serves the tournament winner (exporting ``winner_step_<n>.ckpt``
 if needed) and, with ``--watch-every N``, hot-swaps newer winners
 between scheduler steps — serving follows training live.
 
+With ``--gateway`` the synthetic trace is replaced by the HTTP front
+door (:mod:`repro.serve.gateway`): requests arrive over ``POST
+/v1/generate``, admission is bounded by ``--max-queue`` (429 on
+overload), and tokens stream back as NDJSON chunks.
+
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --requests 8
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --ckpt-dir /tmp/pop --watch-every 4
   python -m repro.launch.serve --arch icf-cyclegan --smoke --queries 32
+  python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --gateway --port 8000 --max-queue 64
 """
 from __future__ import annotations
 
@@ -36,6 +43,7 @@ from repro.serve.scheduler import Request, Scheduler
 
 
 def parse_lens(spec: str) -> List[int]:
+    """Parse a comma-separated prompt-length list ("8,16,24")."""
     return [int(x) for x in spec.split(",") if x]
 
 
@@ -113,7 +121,8 @@ def run_lm(args) -> Dict[str, object]:
         swap_mode=args.swap_mode,
         draft_params=draft_params, spec_tokens=args.spec_tokens,
         draft_cfg=draft_cfg, spec_fused=not args.no_spec_fused,
-        spec_adapt=args.spec_adapt)
+        spec_adapt=args.spec_adapt,
+        max_queue=getattr(args, "max_queue", None))
     if args.mesh:
         from repro.serve.mesh import MeshScheduler, parse_mesh
         data, model = parse_mesh(args.mesh)
@@ -124,6 +133,8 @@ def run_lm(args) -> Dict[str, object]:
               f"(host-0 scheduler, per-shard page pools)")
     else:
         sched = Scheduler(cfg, params, **sched_kw)
+    if getattr(args, "gateway", False):
+        return run_gateway(args, sched)
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
                           temperature=args.temperature, seed=args.seed)
@@ -166,6 +177,34 @@ def run_lm(args) -> Dict[str, object]:
             "results": results}
 
 
+def run_gateway(args, sched) -> Dict[str, object]:
+    """Serve HTTP on ``--host:--port`` until interrupted (Ctrl-C
+    prints the ``[serve]`` report and exits cleanly)."""
+    import asyncio
+
+    from repro.serve.gateway import Gateway
+
+    gw = Gateway(sched, host=args.host, port=args.port,
+                 stream_buffer=args.stream_buffer)
+
+    async def _serve():
+        await gw.start()
+        print(f"[serve] gateway: http://{gw.host}:{gw.port} "
+              f"max_queue={sched.max_queue} "
+              f"stream_buffer={gw.stream_buffer} "
+              f"(POST /v1/generate, GET /healthz, GET /metrics)")
+        assert gw._server is not None
+        async with gw._server:
+            await gw._server.serve_forever()
+
+    try:
+        asyncio.run(_serve())
+    except KeyboardInterrupt:
+        pass
+    sched.stats.report()
+    return {"stats": sched.stats.as_dict()}
+
+
 def run_surrogate(args) -> Dict[str, object]:
     from repro.configs.icf_cyclegan import FULL, SMOKE
     from repro.data import jag
@@ -199,8 +238,11 @@ def run_surrogate(args) -> Dict[str, object]:
             "results": results}
 
 
-def main(argv=None) -> int:
+def build_parser() -> argparse.ArgumentParser:
+    """The serve CLI's argument parser (separate from :func:`main` so
+    ``docs/flags.md`` can be checked against it)."""
     ap = argparse.ArgumentParser(
+        prog="repro.launch.serve",
         description="Continuous-batching inference over tournament "
                     "winners")
     ap.add_argument("--arch", default="qwen3-0.6b", choices=sorted(ARCHS))
@@ -294,7 +336,28 @@ def main(argv=None) -> int:
     ap.add_argument("--queries", type=int, default=16)
     ap.add_argument("--query-batch", type=int, default=8)
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args(argv)
+    # gateway (HTTP front door)
+    ap.add_argument("--gateway", action="store_true",
+                    help="serve HTTP (POST /v1/generate, GET /healthz, "
+                         "GET /metrics) instead of the synthetic trace "
+                         "(lm workload)")
+    ap.add_argument("--host", default="127.0.0.1",
+                    help="gateway bind address")
+    ap.add_argument("--port", type=int, default=8000,
+                    help="gateway bind port (0 = ephemeral)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the request queue; submits beyond it "
+                         "are shed with HTTP 429 (default: unbounded)")
+    ap.add_argument("--stream-buffer", type=int, default=64,
+                    help="per-response token buffer; a consumer that "
+                         "falls further behind is cancelled "
+                         "(backpressure)")
+    return ap
+
+
+def main(argv=None) -> int:
+    """CLI entry point: parse args, pick the workload, run it."""
+    args = build_parser().parse_args(argv)
 
     if args.draft_ckpt and args.spec_tokens <= 0:
         args.spec_tokens = 4            # a drafter implies speculation

@@ -121,8 +121,10 @@ def train_cyclegan(args):
     print(f"[train] done: val={float(metric(params, val)):.4f}")
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
+def build_parser():
+    """The train CLI's argument parser (separate from :func:`main` so
+    ``docs/flags.md`` can be checked against it)."""
+    ap = argparse.ArgumentParser(prog="repro.launch.train")
     ap.add_argument("--arch", default="icf-cyclegan",
                     choices=sorted(ARCHS))
     ap.add_argument("--smoke", action="store_true",
@@ -140,7 +142,12 @@ def main(argv=None):
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--no-resume", action="store_true")
     ap.add_argument("--log-every", type=int, default=10)
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None):
+    """CLI entry point: train the selected arch."""
+    args = build_parser().parse_args(argv)
 
     if args.arch == "icf-cyclegan":
         train_cyclegan(args)

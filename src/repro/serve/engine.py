@@ -22,6 +22,9 @@ from repro.serve.session import DecodeSession
 
 
 class Engine:
+    """Batched decode executor: prefill + single-token step dispatches
+    over a (possibly sharded) model replica."""
+
     def __init__(self, cfg: ModelConfig, params, max_len: int = 1024,
                  mesh=None):
         self.cfg = cfg

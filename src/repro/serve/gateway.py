@@ -1,0 +1,408 @@
+"""Async serving gateway: the HTTP front door over a scheduler.
+
+Stdlib-only (``asyncio`` + hand-rolled HTTP/1.1 — no framework
+dependency in the serving image).  One :class:`Gateway` owns one
+:class:`repro.serve.scheduler.Scheduler` (or a host-0
+:class:`repro.serve.mesh.MeshScheduler`) and splits the work across
+two execution domains:
+
+* **event loop** (asyncio): accepts connections, parses requests,
+  streams tokens out as NDJSON chunks;
+* **driver thread**: the only thread that touches the scheduler.  It
+  drains the ingress queue into :meth:`Scheduler.submit`, sheds
+  expired requests, runs :meth:`Scheduler.step`, and publishes each
+  request's newly decoded tokens back into the loop via
+  ``call_soon_threadsafe``.
+
+SLO-aware admission lives at this boundary:
+
+* ``max_queue`` (configured on the scheduler) bounds the request
+  queue — an over-bound submit raises
+  :class:`repro.serve.scheduler.Overloaded` which the gateway maps to
+  **HTTP 429** with a ``Retry-After`` hint;
+* requests may declare ``ttft_deadline_ms`` / ``tpot_deadline_ms``;
+  queued requests whose TTFT deadline already passed are shed (429)
+  instead of admitted late, and completed requests that missed a
+  deadline increment the ``[serve]`` miss counters;
+* each streaming response has a bounded token buffer
+  (``stream_buffer``); a consumer too slow to drain it gets its
+  request **cancelled** (backpressure) rather than buffering without
+  bound.
+
+Endpoints: ``POST /v1/generate`` (streaming NDJSON by default,
+``"stream": false`` for a single JSON body), ``GET /healthz``,
+``GET /metrics`` (the :meth:`ServeStats.as_dict` summary).
+"""
+from __future__ import annotations
+
+import asyncio
+import collections
+import json
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serve.scheduler import Overloaded, Request, Scheduler
+
+
+@dataclass
+class _Stream:
+    """Loop-side state of one in-flight request."""
+
+    rid: Any
+    q: asyncio.Queue                 # ("tok", t) / ("end",) / ("err", msg)
+    sent: int = 0                    # tokens published so far (driver side)
+    inflight: int = 0                # published - consumed (the bound;
+    #                                  incremented by the driver BEFORE the
+    #                                  loop callback runs, so it can't lag
+    #                                  behind qsize the way qsize does)
+    error: Optional[str] = None      # set on overflow/shed/cancel
+    done: bool = False
+
+
+@dataclass
+class _Ingress:
+    """One submit waiting to cross into the driver thread."""
+
+    req: Request
+    fut: asyncio.Future               # -> ("ok"|"overloaded"|"invalid", msg)
+    stream: Optional[_Stream] = None
+
+
+class Gateway:
+    """Asyncio HTTP/1.1 front door around one scheduler.
+
+    ``stream_buffer`` bounds each response's unconsumed-token queue —
+    overflow cancels the request (backpressure) instead of growing the
+    buffer.  ``port=0`` binds an ephemeral port (read :attr:`port`
+    after :meth:`start`).  The scheduler must be constructed by the
+    caller (with ``max_queue`` for bounded admission); the gateway
+    never touches it outside the driver thread.
+    """
+
+    def __init__(self, sched: Scheduler, host: str = "127.0.0.1",
+                 port: int = 0, stream_buffer: int = 64,
+                 idle_sleep_s: float = 0.002):
+        self.sched = sched
+        self.host = host
+        self.port = port
+        self.stream_buffer = int(stream_buffer)
+        self.idle_sleep_s = float(idle_sleep_s)
+        self.loop: Optional[asyncio.AbstractEventLoop] = None
+        self._server: Optional[asyncio.AbstractServer] = None
+        self._driver: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        self._lock = threading.Lock()
+        self._ingress: collections.deque = collections.deque()
+        self._cancels: collections.deque = collections.deque()
+        self._streams: Dict[Any, _Stream] = {}   # driver-owned tracking
+        self._next_rid = 0
+
+    # -- lifecycle (event loop side) ----------------------------------------
+    async def start(self) -> None:
+        """Bind the listener and start the scheduler driver thread."""
+        self.loop = asyncio.get_running_loop()
+        self._server = await asyncio.start_server(
+            self._handle_conn, self.host, self.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._driver = threading.Thread(target=self._drive,
+                                        name="gateway-driver", daemon=True)
+        self._driver.start()
+
+    async def stop(self) -> None:
+        """Stop accepting, stop the driver thread, close the listener."""
+        self._stop.set()
+        if self._driver is not None:
+            await asyncio.get_running_loop().run_in_executor(
+                None, self._driver.join)
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+
+    async def serve_forever(self) -> None:
+        """:meth:`start` then block until the server is closed."""
+        await self.start()
+        assert self._server is not None
+        async with self._server:
+            await self._server.serve_forever()
+
+    # -- driver thread: the ONLY scheduler caller ---------------------------
+    def _drive(self) -> None:
+        """Scheduler loop: drain ingress/cancels, shed, step, publish."""
+        sched = self.sched
+        while not self._stop.is_set():
+            busy = self._drain_ingress()
+            while self._cancels:
+                rid = self._cancels.popleft()
+                sched.cancel(rid)
+                busy = True
+            for rid in sched.shed_expired():
+                self._post_error(rid, "shed: TTFT deadline expired "
+                                      "before admission")
+            if sched.queue or sched.active or sched.prefilling:
+                sched.step()
+                self._publish_progress()
+                busy = True
+            if not busy:
+                time.sleep(self.idle_sleep_s)
+        sched.stats.stop()
+
+    def _drain_ingress(self) -> bool:
+        """Submit queued ingress entries; resolve their futures."""
+        busy = False
+        while True:
+            with self._lock:
+                if not self._ingress:
+                    return busy
+                entry = self._ingress.popleft()
+            busy = True
+            try:
+                self.sched.submit(entry.req)
+            except Overloaded as e:
+                self._resolve(entry.fut, ("overloaded", str(e)))
+                continue
+            except ValueError as e:
+                self._resolve(entry.fut, ("invalid", str(e)))
+                continue
+            if entry.stream is not None:
+                self._streams[entry.req.rid] = entry.stream
+            self._resolve(entry.fut, ("ok", ""))
+
+    def _publish_progress(self) -> None:
+        """Diff scheduler state against each stream's published count
+        and push the new tokens (then completion) into the loop."""
+        sched = self.sched
+        for rid, st in list(self._streams.items()):
+            if rid in sched.results:
+                toks = sched.results[rid]
+                for t in toks[st.sent:]:
+                    self._post(st, ("tok", int(t)))
+                st.sent = len(toks)
+                self._post(st, ("end",))
+                del self._streams[rid]
+                continue
+            act = sched.active.get(rid) or sched.prefilling.get(rid)
+            if act is not None:
+                for t in act.tokens[st.sent:]:
+                    self._post(st, ("tok", int(t)))
+                st.sent = len(act.tokens)
+            elif not any(q.rid == rid for q in sched.queue) \
+                    and not any(a.req.rid == rid
+                                for a in sched._pending_onepass):
+                # vanished without a result: cancelled or shed
+                self._post_error(rid, "request cancelled")
+
+    def _post(self, st: _Stream, item: Tuple) -> None:
+        """Publish one stream item into the event loop, enforcing the
+        bounded buffer: overflow cancels the request (backpressure)."""
+        if st.error is not None:
+            return
+        if st.inflight >= self.stream_buffer:
+            st.error = (f"backpressure: consumer fell more than "
+                        f"{self.stream_buffer} tokens behind; "
+                        "request cancelled")
+            self._cancels.append(st.rid)
+            self._streams.pop(st.rid, None)
+            return
+        st.inflight += 1
+        assert self.loop is not None
+        self.loop.call_soon_threadsafe(st.q.put_nowait, item)
+
+    def _post_error(self, rid: Any, msg: str) -> None:
+        """Terminate a stream with an error item (driver side)."""
+        st = self._streams.pop(rid, None)
+        if st is None or st.error is not None:
+            return
+        st.error = msg
+        assert self.loop is not None
+        self.loop.call_soon_threadsafe(st.q.put_nowait, ("err", msg))
+
+    def _resolve(self, fut: asyncio.Future, value: Tuple[str, str]) -> None:
+        """Resolve an ingress future from the driver thread."""
+        assert self.loop is not None
+        self.loop.call_soon_threadsafe(
+            lambda: fut.done() or fut.set_result(value))
+
+    # -- HTTP layer ---------------------------------------------------------
+    async def _handle_conn(self, reader: asyncio.StreamReader,
+                           writer: asyncio.StreamWriter) -> None:
+        """Parse one HTTP/1.1 request and dispatch it (no keep-alive)."""
+        try:
+            line = await reader.readline()
+            parts = line.decode("latin1").split()
+            if len(parts) < 2:
+                return
+            method, path = parts[0].upper(), parts[1]
+            clen = 0
+            while True:
+                h = await reader.readline()
+                if h in (b"\r\n", b"\n", b""):
+                    break
+                name, _, val = h.decode("latin1").partition(":")
+                if name.strip().lower() == "content-length":
+                    clen = int(val.strip())
+            body = await reader.readexactly(clen) if clen else b""
+            await self._route(method, path, body, writer)
+        except (asyncio.IncompleteReadError, ConnectionResetError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionResetError, OSError):
+                pass
+
+    async def _route(self, method: str, path: str, body: bytes,
+                     writer: asyncio.StreamWriter) -> None:
+        """Dispatch to an endpoint handler."""
+        if method == "GET" and path == "/healthz":
+            await _respond(writer, 200, {
+                "ok": True, "slots": self.sched.stats.slots,
+                "queued": len(self.sched.queue),
+                "active": len(self.sched.active)
+                + len(self.sched.prefilling)})
+        elif method == "GET" and path == "/metrics":
+            await _respond(writer, 200, self.sched.stats.as_dict())
+        elif method == "POST" and path == "/v1/generate":
+            await self._generate(body, writer)
+        else:
+            await _respond(writer, 404, {"error": f"no route "
+                                                  f"{method} {path}"})
+
+    async def _generate(self, body: bytes,
+                        writer: asyncio.StreamWriter) -> None:
+        """``POST /v1/generate``: admit, then stream tokens (NDJSON
+        chunks) or collect the full completion (``"stream": false``)."""
+        try:
+            d = json.loads(body.decode() or "{}")
+            prompt = np.asarray(d["prompt"], np.int32)
+            req = Request(
+                rid=d.get("rid", self._make_rid()), prompt=prompt,
+                max_new=int(d.get("max_new", 16)),
+                eos_id=d.get("eos_id"),
+                temperature=float(d.get("temperature", 0.0)),
+                seed=d.get("seed"),
+                ttft_deadline_ms=d.get("ttft_deadline_ms"),
+                tpot_deadline_ms=d.get("tpot_deadline_ms"))
+        except (KeyError, ValueError, TypeError,
+                json.JSONDecodeError) as e:
+            await _respond(writer, 400, {"error": f"bad request: {e}"})
+            return
+        streaming = bool(d.get("stream", True))
+        assert self.loop is not None
+        st = _Stream(rid=req.rid,
+                     q=asyncio.Queue(maxsize=self.stream_buffer + 2))
+        entry = _Ingress(req=req, fut=self.loop.create_future(), stream=st)
+        with self._lock:
+            self._ingress.append(entry)
+        status, msg = await entry.fut
+        if status == "overloaded":
+            await _respond(writer, 429, {"error": msg, "rid": req.rid},
+                           extra_headers=[("Retry-After", "1")])
+            return
+        if status == "invalid":
+            await _respond(writer, 400, {"error": msg, "rid": req.rid})
+            return
+        if streaming:
+            await self._stream_out(req.rid, st, writer)
+        else:
+            await self._collect_out(req.rid, st, writer)
+
+    async def _stream_out(self, rid: Any, st: _Stream,
+                          writer: asyncio.StreamWriter) -> None:
+        """Send tokens as they decode: chunked NDJSON, one object per
+        token, a final ``done`` record, or an ``error`` record when the
+        request was shed/cancelled after headers went out."""
+        # headers wait for the FIRST item so a pre-admission shed can
+        # still become a clean 429 instead of a broken 200
+        item = await st.q.get()
+        st.inflight -= 1
+        if item[0] == "err" and st.sent == 0:
+            await _respond(writer, 429, {"error": item[1], "rid": rid},
+                           extra_headers=[("Retry-After", "1")])
+            return
+        writer.write(_stream_head(200))
+        ntok = 0
+        try:
+            while True:
+                kind = item[0]
+                if kind == "tok":
+                    ntok += 1
+                    _chunk(writer, {"rid": rid, "token": item[1]})
+                elif kind == "end":
+                    _chunk(writer, {"rid": rid, "done": True,
+                                    "ntok": ntok})
+                    break
+                else:
+                    _chunk(writer, {"rid": rid, "error": item[1]})
+                    break
+                await writer.drain()
+                item = await st.q.get()
+                st.inflight -= 1
+            writer.write(b"0\r\n\r\n")
+            await writer.drain()
+        except (ConnectionResetError, BrokenPipeError):
+            # client went away mid-stream: cancel to free the slot
+            self._cancels.append(rid)
+
+    async def _collect_out(self, rid: Any, st: _Stream,
+                           writer: asyncio.StreamWriter) -> None:
+        """Non-streaming mode: wait for completion, answer once."""
+        tokens: List[int] = []
+        while True:
+            item = await st.q.get()
+            st.inflight -= 1
+            if item[0] == "tok":
+                tokens.append(item[1])
+            elif item[0] == "end":
+                await _respond(writer, 200, {"rid": rid,
+                                             "tokens": tokens})
+                return
+            else:
+                await _respond(writer, 429,
+                               {"error": item[1], "rid": rid,
+                                "tokens": tokens},
+                               extra_headers=[("Retry-After", "1")])
+                return
+
+    def _make_rid(self) -> str:
+        """Allocate a gateway-unique request id."""
+        self._next_rid += 1
+        return f"g{self._next_rid}"
+
+
+# -- wire helpers -----------------------------------------------------------
+
+_REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
+            429: "Too Many Requests", 500: "Internal Server Error"}
+
+
+async def _respond(writer: asyncio.StreamWriter, code: int, obj: Dict,
+                   extra_headers: Optional[List[Tuple[str, str]]] = None
+                   ) -> None:
+    """Write one complete JSON response and flush it."""
+    payload = json.dumps(obj).encode()
+    head = [f"HTTP/1.1 {code} {_REASONS.get(code, '')}",
+            "Content-Type: application/json",
+            f"Content-Length: {len(payload)}",
+            "Connection: close"]
+    head += [f"{k}: {v}" for k, v in (extra_headers or [])]
+    writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + payload)
+    await writer.drain()
+
+
+def _stream_head(code: int) -> bytes:
+    """Response head for a chunked NDJSON token stream."""
+    return (f"HTTP/1.1 {code} {_REASONS.get(code, '')}\r\n"
+            "Content-Type: application/x-ndjson\r\n"
+            "Transfer-Encoding: chunked\r\n"
+            "Connection: close\r\n\r\n").encode()
+
+
+def _chunk(writer: asyncio.StreamWriter, obj: Dict) -> None:
+    """Write one NDJSON record as an HTTP chunk (no flush)."""
+    b = json.dumps(obj).encode() + b"\n"
+    writer.write(f"{len(b):x}\r\n".encode() + b + b"\r\n")

@@ -111,10 +111,12 @@ class BlockManager:
 
     @property
     def free_blocks(self) -> int:
+        """Pages on the free list (excludes pinned-idle pages)."""
         return len(self._free)
 
     @property
     def used_blocks(self) -> int:
+        """Pages materialized to some request (incl. pinned/shared)."""
         return self.num_blocks - len(self._free)
 
     @property
@@ -143,6 +145,7 @@ class BlockManager:
             - self.pending_blocks
 
     def table(self, rid) -> List[int]:
+        """The request's page table: global page ids, in order."""
         return list(self._tables[rid])
 
     def _lost_reclaimable(self, shared: Sequence[int]) -> int:
@@ -154,6 +157,8 @@ class BlockManager:
 
     def can_allocate(self, n_tokens: int,
                      shared: Sequence[int] = ()) -> bool:
+        """Would an allocation of ``n_tokens`` (minus ``shared`` prefix
+        pages) fit the available capacity right now?"""
         need = blocks_for(n_tokens, self.block_size) - len(shared)
         return need <= self.available_blocks \
             - self._lost_reclaimable(shared)
@@ -292,9 +297,11 @@ class BlockManager:
         return released
 
     def refcount(self, page: int) -> int:
+        """Number of page tables (plus pins) referencing ``page``."""
         return self._refs.get(page, 0)
 
     def as_dict(self) -> Dict[str, int]:
+        """Counters for the ``[serve] pool`` summary line."""
         return {"num_blocks": self.num_blocks,
                 "block_size": self.block_size,
                 "used_blocks": self.used_blocks,
@@ -380,9 +387,11 @@ class CacheLayout:
 
     @property
     def free_slots(self) -> int:
+        """Decode slots not currently assigned to a request."""
         return len(self._free_slots)
 
     def slot_of(self, rid) -> int:
+        """The decode-batch row assigned to ``rid``."""
         return self._slot_of[rid]
 
     @property
@@ -572,6 +581,8 @@ class PageShard:
                 self._key_pages.pop(key, None)
 
     def release(self, rid) -> None:
+        """Drop the request's pages (prefix-shared ones survive as
+        cache entries until evicted or invalidated)."""
         self._reg_state.pop(rid, None)
         self._admit_epoch.pop(rid, None)
         self._evict(self.blocks.free(rid))
@@ -705,9 +716,12 @@ class PagedLayout(CacheLayout):
 
     # -- shard routing -----------------------------------------------------
     def shard_of_slot(self, slot: int) -> int:
+        """The data shard whose sub-pool holds this slot's pages."""
         return slot // self._slots_per_shard
 
     def null_page_of(self, slot: int) -> int:
+        """The slot's shard-local scratch page (global id) — where
+        idle rows scatter their dead writes."""
         shard = self.shards[self.shard_of_slot(slot)]
         return shard.offset + shard.null_page
 
@@ -720,10 +734,12 @@ class PagedLayout(CacheLayout):
 
     @property
     def prefix_hits(self) -> int:
+        """Prefix-cache hits, summed over shards."""
         return sum(s.prefix_hits for s in self.shards)
 
     @property
     def prefix_shared_tokens(self) -> int:
+        """Prompt tokens served from shared prefix pages, all shards."""
         return sum(s.prefix_shared_tokens for s in self.shards)
 
     def _free_slots_in(self, shard_i: int) -> List[int]:
@@ -781,11 +797,13 @@ class PagedLayout(CacheLayout):
         return best
 
     def register_prefix(self, rid, prompt: np.ndarray) -> None:
+        """Publish ``rid``'s prompt pages into its shard's prefix cache."""
         self.shards[self._shard_of_rid[rid]].register_prefix(rid, prompt)
 
     # -- slot / page lifecycle ---------------------------------------------
     @property
     def supports_row_subset(self) -> bool:
+        """Whether a decode step may cover an arbitrary subset of rows."""
         # with no recurrent rows, every cache leaf is a shared pool —
         # a decode step may cover any subset of slots (ragged grouping;
         # single-shard only: sharded steps must keep every row in its
@@ -794,12 +812,16 @@ class PagedLayout(CacheLayout):
 
     def step_kwargs(self, width: Optional[int] = None,
                     rows: Optional[np.ndarray] = None) -> Dict[str, Any]:
+        """Page tables (optionally width-clipped / row-subset) for the
+        decode dispatch."""
         W = width if width is not None else self.max_blocks_per_seq
         tables = self.tables if rows is None else self.tables[rows]
         return {"tables": jnp.asarray(tables[:, :W])}
 
     def can_admit(self, n_tokens: int,
                   shared_pages: Sequence[int] = ()) -> bool:
+        """Can some shard hold ``n_tokens`` (given ``shared_pages``
+        already mapped) with a free slot to go with it?"""
         if not self._free_slots or n_tokens > self.max_seq:
             return False
         hint = self._share_shard if shared_pages else None
@@ -920,6 +942,8 @@ class PagedLayout(CacheLayout):
                    blocks_for(max(max_tokens, 1), self.block_size))
 
     def as_dict(self) -> Dict[str, int]:
+        """Pool summary: slot/prefix counters + shard-aggregated block
+        accounting."""
         d = {"num_slots": self.num_slots, "max_seq": self.max_seq,
              "free_slots": self.free_slots,
              "prefix_hits": self.prefix_hits,
@@ -1054,8 +1078,10 @@ class SlotLayout(CacheLayout):
         return slot
 
     def as_dict(self) -> Dict[str, int]:
+        """Counters for the ``[serve] pool`` summary line."""
         return {"num_slots": self.num_slots, "max_len": self.max_len,
                 "free_slots": self.free_slots, **self.blocks.as_dict()}
+
 
 
 # legacy names (PR-2/PR-3): the pools ARE the layouts now

@@ -35,19 +35,30 @@ and broadcast as a :class:`StepPlan` each step:
     broadcast step).
 
 After the plan lands, every host executes the SAME jitted prefill /
-decode dispatches on the sharded arrays.  In this container jax runs
-single-process (multi-host is emulated with
-``--xla_force_host_platform_device_count``); the plan still round-trips
-through its wire encoding on every step, and the follower path is the
-``step(plan=...)`` replay the tests drive a second scheduler replica
-with.
+decode dispatches on the sharded arrays.  Three plan transports
+(:func:`make_plan_channel` picks one):
+
+  * single process — the plan round-trips its wire encoding
+    (:class:`LoopbackChannel`), so CI exercises the format every step;
+  * multi-process on a collective-capable backend (TPU/GPU) — two
+    ``multihost_utils.broadcast_one_to_all`` rounds
+    (:class:`CollectiveChannel`);
+  * multi-process on CPU — XLA's CPU backend cannot run cross-process
+    computations, so the plan rides the **jax coordination service**
+    (the gRPC key-value store ``jax.distributed.initialize`` already
+    stood up): host 0 publishes the plan bytes under a per-step key,
+    followers block on it with a timeout, and a per-step barrier both
+    confirms delivery and turns a dead peer into a clean
+    ``DEADLINE_EXCEEDED`` error instead of a hang
+    (:class:`CoordServiceChannel`).
 """
 from __future__ import annotations
 
 import json
+import time
 from dataclasses import dataclass, field
 from functools import partial
-from typing import Any, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -58,7 +69,7 @@ from repro.models import lm
 from repro.parallel.sharding import (serve_rules, tree_shardings,
                                      use_sharding)
 from repro.serve.kv_cache import PagedLayout, SlotLayout, blocks_for
-from repro.serve.scheduler import Scheduler
+from repro.serve.scheduler import Request, Scheduler
 from repro.serve.session import DecodeSession, _draft_unroll
 
 
@@ -88,21 +99,31 @@ def parse_mesh(spec: str) -> Tuple[int, int]:
     raise ValueError(f"cannot parse mesh spec {spec!r}")
 
 
-def make_serve_mesh(data: int, model: int = 1):
-    """("data", "model") mesh over the first data*model visible devices."""
+def make_serve_mesh(data: int, model: int = 1, local: bool = False):
+    """("data", "model") mesh over the first data*model visible devices.
+
+    ``local=True`` restricts the mesh to THIS process's devices
+    (``jax.local_devices()``): the replicated-deployment mode
+    ``launch/distributed.py`` uses on backends whose cross-process
+    computations XLA does not support (CPU) — every process holds a
+    full model replica on a private mesh and stays in lockstep through
+    the broadcast plan instead of through device collectives.
+    """
     from jax.sharding import Mesh
     n = data * model
-    devices = jax.devices()
+    devices = jax.local_devices() if local else jax.devices()
+    kind = "local" if local else "visible"
     if len(devices) < n:
         raise ValueError(
             f"serving mesh {data}x{model} needs {n} devices, have "
-            f"{len(devices)} (set XLA_FLAGS="
+            f"{len(devices)} {kind} (set XLA_FLAGS="
             "--xla_force_host_platform_device_count=N to emulate)")
     return Mesh(np.asarray(devices[:n]).reshape(data, model),
                 ("data", "model"))
 
 
 def mesh_axis_sizes(mesh) -> Tuple[int, int]:
+    """(data, model) axis sizes of a serving mesh (absent axes = 1)."""
     axes = dict(zip(mesh.axis_names, mesh.devices.shape))
     return axes.get("data", 1), axes.get("model", 1)
 
@@ -112,36 +133,82 @@ def mesh_axis_sizes(mesh) -> Tuple[int, int]:
 # ---------------------------------------------------------------------------
 
 
+def encode_request(req: Request) -> Dict[str, Any]:
+    """Wire-encode a :class:`~repro.serve.scheduler.Request` for the
+    plan broadcast (JSON scalars + a token-id list; the rid must be a
+    JSON scalar to be mesh-servable)."""
+    return {"rid": req.rid,
+            "prompt": [int(t) for t in req.prompt],
+            "max_new": int(req.max_new),
+            "eos_id": req.eos_id,
+            "temperature": float(req.temperature),
+            "seed": req.seed,
+            "ttft_deadline_ms": req.ttft_deadline_ms,
+            "tpot_deadline_ms": req.tpot_deadline_ms}
+
+
+def decode_request(d: Dict[str, Any]) -> Request:
+    """Inverse of :func:`encode_request` (follower-side)."""
+    return Request(rid=d["rid"],
+                   prompt=np.asarray(d["prompt"], np.int32),
+                   max_new=d["max_new"], eos_id=d.get("eos_id"),
+                   temperature=d.get("temperature", 0.0),
+                   seed=d.get("seed"),
+                   ttft_deadline_ms=d.get("ttft_deadline_ms"),
+                   tpot_deadline_ms=d.get("tpot_deadline_ms"))
+
+
 @dataclass
 class StepPlan:
     """One scheduler step's broadcastable decisions.
 
     ``winner`` — registry step of a newly found tournament winner
-    (None: no swap this step); ``admits`` — rids admitted, in order.
+    (None: no swap this step); ``submits`` — wire-encoded requests
+    that entered host 0's queue since the last step (followers enqueue
+    them verbatim, which is how network-fed requests reach every
+    host); ``cancels`` — ``[rid, reason]`` pairs applied before
+    admission (client disconnects + deadline sheds — both clock-driven
+    host-0 decisions); ``admits`` — rids admitted, in order; ``stop``
+    — coordinated-shutdown marker (followers exit their replay loop).
     Everything else the schedulers do is a deterministic function of
     replicated state, so this is the WHOLE control-plane wire format.
     Request ids must be JSON scalars (int / str) to be mesh-servable.
     """
     winner: Optional[int] = None
     admits: List[Any] = field(default_factory=list)
+    submits: List[Dict[str, Any]] = field(default_factory=list)
+    cancels: List[List[Any]] = field(default_factory=list)
+    stop: bool = False
 
     def encode(self) -> bytes:
+        """Serialize to the JSON wire format (bytes)."""
         return json.dumps({"winner": self.winner,
-                           "admits": list(self.admits)}).encode()
+                           "admits": list(self.admits),
+                           "submits": list(self.submits),
+                           "cancels": [list(c) for c in self.cancels],
+                           "stop": self.stop}).encode()
 
     @classmethod
     def decode(cls, payload: bytes) -> "StepPlan":
+        """Parse the JSON wire format (tolerates plans from older
+        writers that lack the submit/cancel/stop fields)."""
         d = json.loads(payload.decode())
-        return cls(winner=d["winner"], admits=d["admits"])
+        return cls(winner=d["winner"], admits=d["admits"],
+                   submits=d.get("submits", []),
+                   cancels=d.get("cancels", []),
+                   stop=d.get("stop", False))
 
 
 def broadcast_plan(plan: StepPlan) -> StepPlan:
-    """Host-0 -> all-hosts broadcast of a step plan.
+    """Host-0 -> all-hosts broadcast of a step plan over DEVICE
+    collectives.
 
     Multi-process: two ``broadcast_one_to_all`` rounds (length, then
-    the padded byte buffer).  Single-process (this container): the
-    encode -> decode round trip still runs, so the wire format is
-    exercised by every CI step, not just the multi-host deployment.
+    the padded byte buffer) — requires a backend whose cross-process
+    computations XLA supports (TPU/GPU; the CPU backend does not, use
+    :class:`CoordServiceChannel` there).  Single-process: the encode ->
+    decode round trip still runs, so the wire format is exercised by
+    every CI step, not just the multi-host deployment.
     """
     payload = plan.encode()
     if jax.process_count() > 1:  # pragma: no cover (single-process CI)
@@ -155,6 +222,167 @@ def broadcast_plan(plan: StepPlan) -> StepPlan:
             buf[:n] = np.frombuffer(payload, np.uint8)[:n]
         payload = multihost_utils.broadcast_one_to_all(buf).tobytes()
     return StepPlan.decode(payload)
+
+
+# ---------------------------------------------------------------------------
+# plan transports
+# ---------------------------------------------------------------------------
+
+# Distinguishes sequential channel lifetimes inside one process AND
+# stays aligned across processes (every process constructs its
+# schedulers in the same deterministic order).
+_CHANNEL_SEQ = [0]
+
+
+class PlanChannel:
+    """Host-0 -> all-hosts transport for :class:`StepPlan` bytes.
+
+    ``broadcast(plan)`` takes the decided plan on host 0 and ``None``
+    on followers; every process receives the plan host 0 sent.  All
+    transports round-trip the wire encoding, so host 0's returned plan
+    is exactly what followers decode.
+    """
+
+    def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
+        """Send (host 0) / receive (followers) one plan; blocking."""
+        raise NotImplementedError
+
+    def close(self) -> None:
+        """Release transport resources (idempotent)."""
+
+
+class LoopbackChannel(PlanChannel):
+    """Single-process transport: the plan round-trips its wire
+    encoding so the format is exercised on every step."""
+
+    def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
+        """Encode + decode the plan in-process (host 0 only)."""
+        if plan is None:
+            raise RuntimeError(
+                "LoopbackChannel has no peer to receive from "
+                "(follower replay passes the plan explicitly)")
+        return StepPlan.decode(plan.encode())
+
+
+class CollectiveChannel(PlanChannel):
+    """Multi-process transport over device collectives
+    (``multihost_utils.broadcast_one_to_all``) — TPU/GPU deployments
+    where XLA runs cross-process computations."""
+
+    def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
+        """Two broadcast_one_to_all rounds; followers pass None."""
+        return broadcast_plan(plan if plan is not None else StepPlan())
+
+
+def _capture(fn, *args):
+    """Run ``fn`` and box the outcome (worker-thread helper for
+    :meth:`CoordServiceChannel._deadlined`)."""
+    try:
+        return ("ok", fn(*args))
+    except Exception as e:  # noqa: BLE001 — re-raised by the caller
+        return ("err", e)
+
+
+class CoordServiceChannel(PlanChannel):
+    """Multi-process transport over the jax coordination service.
+
+    The gRPC key-value store ``jax.distributed.initialize`` stands up
+    is host-side — no device hop, and it works on the CPU backend
+    where XLA's cross-process computations do not.  Per step ``n``:
+    host 0 ``key_value_set_bytes(<ns>/<n>, plan)``, followers
+    ``blocking_key_value_get_bytes`` it with ``timeout_s``, then all
+    processes meet at barrier ``<ns>/b<n>`` (same timeout), after
+    which host 0 deletes the key — the store holds at most one
+    in-flight plan.  A dead peer turns into ``DEADLINE_EXCEEDED``
+    at the barrier/get instead of an indefinite hang; we re-raise it
+    as a RuntimeError naming the step and timeout.
+    """
+
+    def __init__(self, timeout_s: float = 60.0,
+                 namespace: Optional[str] = None):
+        from jax._src import distributed
+        client = distributed.global_state.client
+        if client is None:
+            raise RuntimeError(
+                "CoordServiceChannel needs jax.distributed.initialize() "
+                "(no coordination-service client in this process)")
+        self._client = client
+        # rank from the coordination client, NOT jax.process_index():
+        # the latter lazily initializes the device backend, whose
+        # multi-process topology exchange hangs if a peer is already
+        # dead — exactly when this channel must raise, not hang
+        self._rank = int(distributed.global_state.process_id or 0)
+        self._timeout_ms = max(1, int(timeout_s * 1000))
+        if namespace is None:
+            namespace = f"repro/plan{_CHANNEL_SEQ[0]}"
+            _CHANNEL_SEQ[0] += 1
+        self._ns = namespace
+        self._seq = 0
+
+    def _deadlined(self, fn, *args):
+        """Run a blocking coordination-service call with a HARD
+        client-side deadline.
+
+        The service's own timeouts are not sufficient: a peer that
+        exits through Python's atexit (jax's distributed-shutdown
+        handshake) leaves its connection half-closed, and
+        ``wait_at_barrier`` has been observed to block far past its
+        deadline in that state.  The call runs on a daemon thread and
+        we abandon it after ``timeout + 5s`` — the thread leaks, but
+        the caller is about to tear the process down anyway.
+        """
+        import queue as queue_mod
+        import threading
+        out: "queue_mod.Queue" = queue_mod.Queue()
+        t = threading.Thread(
+            target=lambda: out.put(_capture(fn, *args)), daemon=True)
+        t.start()
+        try:
+            kind, val = out.get(timeout=self._timeout_ms / 1000 + 5.0)
+        except queue_mod.Empty:
+            raise TimeoutError(
+                f"coordination-service call did not return within "
+                f"{self._timeout_ms} ms (+5 s grace)") from None
+        if kind == "err":
+            raise val
+        return val
+
+    def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
+        """One KV publish/fetch + delivery barrier; blocking with the
+        channel's timeout.  Raises RuntimeError on peer death."""
+        key = f"{self._ns}/{self._seq}"
+        try:
+            if self._rank == 0:
+                if plan is None:
+                    plan = StepPlan()
+                self._client.key_value_set_bytes(key, plan.encode())
+                payload = plan.encode()
+            else:
+                payload = self._deadlined(
+                    self._client.blocking_key_value_get_bytes,
+                    key, self._timeout_ms)
+            self._deadlined(self._client.wait_at_barrier,
+                            f"{self._ns}/b{self._seq}", self._timeout_ms)
+        except Exception as e:  # DEADLINE_EXCEEDED / TimeoutError
+            raise RuntimeError(
+                f"plan broadcast for step {self._seq} timed out after "
+                f"{self._timeout_ms} ms — a peer process likely died "
+                f"({type(e).__name__}: {e})") from e
+        if self._rank == 0:
+            self._client.key_value_delete(key)
+        self._seq += 1
+        return StepPlan.decode(payload)
+
+
+def make_plan_channel(timeout_s: float = 60.0) -> PlanChannel:
+    """Pick the plan transport for this process topology: loopback
+    single-process, device collectives where XLA supports them
+    cross-process (TPU/GPU), the coordination service on CPU."""
+    if jax.process_count() == 1:
+        return LoopbackChannel()
+    if jax.default_backend() in ("gpu", "tpu"):  # pragma: no cover
+        return CollectiveChannel()
+    return CoordServiceChannel(timeout_s=timeout_s)
 
 
 # ---------------------------------------------------------------------------
@@ -253,6 +481,8 @@ class MeshDecodeSession(DecodeSession):
         self.set_params(params)
 
     def set_params(self, params) -> None:
+        """Hot-swap weights, re-placing them onto the mesh (no-op when
+        the same pytree is already installed)."""
         if params is self._src_params:
             return
         self._src_params = params
@@ -282,6 +512,8 @@ class MeshDecodeSession(DecodeSession):
              width: Optional[int] = None,
              rows: Optional[np.ndarray] = None,
              tables: Optional[np.ndarray] = None) -> jax.Array:
+        """One full-batch decode step on the mesh (row subsets are a
+        single-host optimization the sharded path rejects)."""
         if rows is not None or tables is not None:
             raise ValueError(
                 "row-subset / explicit-table steps cannot run on the "
@@ -353,12 +585,20 @@ class MeshScheduler(Scheduler):
     """
 
     def __init__(self, cfg: ModelConfig, params, *, mesh=None,
-                 mesh_shape: Optional[Tuple[int, int]] = None, **kwargs):
+                 mesh_shape: Optional[Tuple[int, int]] = None,
+                 channel: Optional[PlanChannel] = None,
+                 local_mesh: bool = False,
+                 step_timeout_s: float = 60.0, **kwargs):
         if mesh is None:
             if mesh_shape is None:
                 mesh_shape = (jax.device_count(), 1)
-            mesh = make_serve_mesh(*mesh_shape)
+            mesh = make_serve_mesh(*mesh_shape, local=local_mesh)
         self.mesh = mesh
+        self.channel = channel if channel is not None \
+            else make_plan_channel(timeout_s=step_timeout_s)
+        # host-0 decisions pending broadcast in the next step's plan
+        self._pending_submits: List[Dict[str, Any]] = []
+        self._pending_cancels: List[Tuple[Any, str]] = []
         self.data_shards, self.model_shards = mesh_axis_sizes(mesh)
         self.rules = MESH_SERVE_RULES
         D = self.data_shards
@@ -416,26 +656,76 @@ class MeshScheduler(Scheduler):
         # same shard — its capacity must hold there, not just anywhere
         return self.draft.layout.shards[shard].blocks.can_allocate(total)
 
+    # -- host-0 intake (recorded for the next plan broadcast) ----------------
+    def submit(self, req: Request) -> None:
+        """Enqueue a request AND record its wire encoding for the next
+        plan broadcast, so followers that never saw the network request
+        (gateway ingress lands on host 0 only) enqueue an identical
+        copy before replaying the admission decisions."""
+        super().submit(req)
+        self._pending_submits.append(encode_request(req))
+
+    def cancel(self, rid) -> bool:
+        """Request cancellation of ``rid`` (host 0 only).
+
+        Deferred to the next :meth:`step` so the drop happens at the
+        same point of the step on every host (broadcast in the plan's
+        ``cancels``).  Returns True if the rid is currently live; the
+        cancel is a no-op if the request finishes first.
+        """
+        if rid not in self.active and rid not in self.prefilling and \
+                not any(q.rid == rid for q in self.queue):
+            return False
+        self._pending_cancels.append((rid, "cancel"))
+        return True
+
+    def shed_expired(self) -> List[Any]:
+        """Host-0 TTFT-deadline shedding: the clock is read HERE only;
+        the victims ride the next plan's ``cancels`` so followers drop
+        exactly the same queued requests.  Returns the rids shed."""
+        now = time.perf_counter()
+        pending = {rid for rid, _ in self._pending_cancels}
+        shed = [q.rid for q in self.queue
+                if q.rid not in pending
+                and q.ttft_deadline_ms is not None
+                and (now - getattr(q, "_submit_t", now)) * 1e3
+                > q.ttft_deadline_ms]
+        self._pending_cancels.extend((rid, "deadline") for rid in shed)
+        return shed
+
     # -- host-0 plan / broadcast / replay ------------------------------------
     def step(self, plan: Optional[StepPlan] = None) -> StepPlan:
         """One scheduler iteration.
 
         ``plan=None`` on host 0: poll + decide + broadcast (the plan
         ALWAYS round-trips its wire encoding, single-process included).
-        ``plan=...``: the follower replay path — apply host 0's
+        ``plan=None`` on a follower process: receive host 0's plan from
+        the channel (blocking, with the channel's timeout).
+        ``plan=...``: the explicit replay path — apply host 0's
         decisions verbatim, then run the identical jitted phases.
-        Returns the plan that was executed.
+        Returns the plan that was executed; ``plan.stop`` means host 0
+        initiated shutdown and no phases ran.
         """
         self.stats.start()
         if plan is None and jax.process_index() == 0:
             winner = self._poll_registry()
             self._step_count += 1
             self._apply_swap(winner)
+            submits = list(self._pending_submits)
+            self._pending_submits.clear()
+            cancels = [[rid, reason] for rid, reason
+                       in self._pending_cancels
+                       if self._cancel_now(rid, reason)]
+            self._pending_cancels.clear()
             admits = self._admission_phase()
-            plan = broadcast_plan(StepPlan(winner=winner, admits=admits))
+            plan = self.channel.broadcast(StepPlan(
+                winner=winner, admits=admits, submits=submits,
+                cancels=cancels))
         else:
             if plan is None:  # pragma: no cover (multi-host follower)
-                plan = broadcast_plan(StepPlan())
+                plan = self.channel.broadcast(None)
+            if plan.stop:
+                return plan
             self._step_count += 1
             if plan.winner is not None and self.registry is not None:
                 self.registry.load_step(plan.winner)
@@ -444,12 +734,62 @@ class MeshScheduler(Scheduler):
                 # no registry attached: there is nothing to swap to —
                 # but still run the pending-drain half of the check
                 self._apply_swap(None)
+            self._apply_submits(plan.submits)
+            for rid, reason in plan.cancels:
+                self._cancel_now(rid, reason)
             self._replay_admissions(plan.admits)
         self._prefill_phase()
         self._decode_phase()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
         return plan
+
+    def shutdown(self) -> StepPlan:
+        """Host 0: broadcast the coordinated-shutdown plan and close
+        the channel.  Followers return from :meth:`step` (or
+        :meth:`run_follower`) when they receive it, so every process
+        exits its serve loop on the same step."""
+        plan = self.channel.broadcast(StepPlan(stop=True))
+        self.stats.stop()
+        self.channel.close()
+        return plan
+
+    def run_follower(self) -> Dict[Any, np.ndarray]:
+        """Follower serve loop: replay broadcast plans until host 0's
+        stop plan arrives (or the channel times out — a dead host 0
+        raises instead of hanging).  Returns the replica's results,
+        which mirror host 0's exactly."""
+        while True:
+            plan = self.step()
+            if plan.stop:
+                break
+        self.stats.stop()
+        self.channel.close()
+        return self.results
+
+    def _apply_submits(self, submits: List[Dict[str, Any]]) -> None:
+        """Enqueue host 0's newly submitted requests on a follower.
+
+        Requests this process already holds (replicated feeds, or the
+        host-0 replica itself replaying its own plan in tests) are
+        recognized by rid and skipped — the wire copy and the local
+        copy are identical by construction.
+        """
+        self._pending_submits.clear()
+        known = {q.rid for q in self.queue}
+        # host 0 already ruled on overload at ingress time; replaying
+        # the max_queue check here (against the batched queue depth)
+        # could diverge, so it is suspended for the replay
+        saved, self.max_queue = self.max_queue, None
+        try:
+            for d in submits:
+                rid = d["rid"]
+                if rid in known or rid in self.active \
+                        or rid in self.prefilling or rid in self.results:
+                    continue
+                Scheduler.submit(self, decode_request(d))
+        finally:
+            self.max_queue = saved
 
     def _replay_admissions(self, admits: List[Any]) -> None:
         """Apply host 0's admission decisions on a follower: the local

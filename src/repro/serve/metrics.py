@@ -23,10 +23,24 @@ def percentile(xs: List[float], q: float) -> float:
 
 @dataclass
 class ServeStats:
+    """Counter bundle for one scheduler (or gateway) lifetime.
+
+    All counters are plain ints/lists mutated on the host control path
+    (never inside jit); times are ``time.perf_counter`` seconds.
+    ``as_dict`` derives the rates/percentiles, ``report`` prints the
+    ``[serve]`` summary lines.
+    """
+
     slots: int = 0
     submitted: int = 0
     completed: int = 0
     rejected: int = 0
+    # SLO-aware admission (gateway front door)
+    shed_overload: int = 0         # submits refused: queue at --max-queue
+    shed_deadline: int = 0         # queued requests dropped: TTFT deadline
+    cancelled: int = 0             # in-flight requests cancelled by caller
+    ttft_deadline_misses: int = 0  # completed, but first token was late
+    tpot_deadline_misses: int = 0  # completed, but mean TPOT was over
     prefills: int = 0
     prefill_chunks: int = 0        # chunked-prefill slices processed
     prefill_tokens: int = 0        # true prompt tokens processed
@@ -49,20 +63,24 @@ class ServeStats:
     queue_depth_max: int = 0
     slot_busy_sum: int = 0
     ttft: List[float] = field(default_factory=list)
+    tpot: List[float] = field(default_factory=list)
     latency: List[float] = field(default_factory=list)
     started: Optional[float] = None
     finished: Optional[float] = None
 
     # -- lifecycle ---------------------------------------------------------
     def start(self):
+        """Arm the wall clock on the first scheduler step (idempotent)."""
         if self.started is None:
             self.started = time.perf_counter()
 
     def stop(self):
+        """Freeze the wall clock; rates in :meth:`as_dict` stop growing."""
         self.finished = time.perf_counter()
 
     @property
     def wall(self) -> float:
+        """Elapsed serving seconds (live until :meth:`stop` is called)."""
         if self.started is None:
             return 0.0
         end = self.finished if self.finished is not None \
@@ -71,6 +89,7 @@ class ServeStats:
 
     # -- per-step sampling -------------------------------------------------
     def sample_step(self, queue_depth: int, busy_slots: int):
+        """Record one scheduler step's queue depth and busy-slot count."""
         self.steps += 1
         self.queue_depth_sum += queue_depth
         self.queue_depth_max = max(self.queue_depth_max, queue_depth)
@@ -78,6 +97,9 @@ class ServeStats:
 
     # -- summary -----------------------------------------------------------
     def as_dict(self) -> Dict[str, float]:
+        """One flat summary dict: raw counters plus derived rates
+        (req/s, tok/s), latency stats (TTFT / TPOT / e2e, mean + p95
+        seconds), and occupancy.  NaN where no samples exist."""
         wall = self.wall
         occ = self.slot_busy_sum / max(self.steps * max(self.slots, 1), 1)
         return {
@@ -85,6 +107,11 @@ class ServeStats:
             "submitted": self.submitted,
             "completed": self.completed,
             "rejected": self.rejected,
+            "shed_overload": self.shed_overload,
+            "shed_deadline": self.shed_deadline,
+            "cancelled": self.cancelled,
+            "ttft_deadline_misses": self.ttft_deadline_misses,
+            "tpot_deadline_misses": self.tpot_deadline_misses,
             "prefills": self.prefills,
             "prefill_chunks": self.prefill_chunks,
             "prefill_tokens": self.prefill_tokens,
@@ -108,6 +135,9 @@ class ServeStats:
             "ttft_mean_s": (sum(self.ttft) / len(self.ttft))
             if self.ttft else float("nan"),
             "ttft_p95_s": percentile(self.ttft, 95),
+            "tpot_mean_s": (sum(self.tpot) / len(self.tpot))
+            if self.tpot else float("nan"),
+            "tpot_p95_s": percentile(self.tpot, 95),
             "latency_mean_s": (sum(self.latency) / len(self.latency))
             if self.latency else float("nan"),
             "latency_p95_s": percentile(self.latency, 95),
@@ -118,10 +148,18 @@ class ServeStats:
 
     def report(self, log: Callable[[str], None] = print,
                prefix: str = "[serve]"):
+        """Print the human-readable ``[serve]`` summary via ``log``."""
         d = self.as_dict()
         log(f"{prefix} requests: submitted={d['submitted']} "
             f"completed={d['completed']} rejected={d['rejected']} "
             f"hot_swaps={d['hot_swaps']}")
+        if self.shed_overload or self.shed_deadline or self.cancelled \
+                or self.ttft_deadline_misses or self.tpot_deadline_misses:
+            log(f"{prefix} admission: shed_overload={d['shed_overload']} "
+                f"shed_deadline={d['shed_deadline']} "
+                f"cancelled={d['cancelled']} "
+                f"ttft_misses={d['ttft_deadline_misses']} "
+                f"tpot_misses={d['tpot_deadline_misses']}")
         log(f"{prefix} throughput: {d['requests_per_s']:.2f} req/s "
             f"{d['tokens_per_s']:.1f} tok/s "
             f"(decode_steps={d['decode_steps']} "
@@ -129,6 +167,7 @@ class ServeStats:
             f"{d['decode_tokens'] / max(d['decode_slot_steps'], 1):.2f})")
         log(f"{prefix} latency: ttft_mean={d['ttft_mean_s'] * 1e3:.1f}ms "
             f"ttft_p95={d['ttft_p95_s'] * 1e3:.1f}ms "
+            f"tpot_mean={d['tpot_mean_s'] * 1e3:.1f}ms "
             f"e2e_mean={d['latency_mean_s'] * 1e3:.1f}ms "
             f"e2e_p95={d['latency_p95_s'] * 1e3:.1f}ms")
         log(f"{prefix} occupancy: slots={d['slots']} "

@@ -29,6 +29,7 @@ _WINNER_RE = re.compile(r"^winner_step_(\d+)\.ckpt$")
 
 
 def winner_path(ckpt_dir: str, step: int) -> str:
+    """The exported-winner checkpoint file for ``step``."""
     return os.path.join(ckpt_dir, f"winner_step_{step}.ckpt")
 
 

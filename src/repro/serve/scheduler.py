@@ -76,17 +76,38 @@ from repro.serve.metrics import ServeStats
 from repro.serve.session import DecodeSession
 
 
+class Overloaded(RuntimeError):
+    """Raised by :meth:`Scheduler.submit` when the request queue is at
+    its ``max_queue`` bound — the load-shedding signal the gateway maps
+    to HTTP 429 instead of queueing unboundedly."""
+
+
 @dataclass
 class Request:
+    """One generation request.
+
+    ``prompt`` is a (P,) int32 token-id array; ``max_new`` bounds the
+    generated tokens; ``temperature > 0`` requires ``seed`` (sampling
+    is host-side and deterministic in ``(seed, ntok)``).  The optional
+    deadlines are SLO declarations in milliseconds: a queued request
+    whose ``ttft_deadline_ms`` has already expired is shed by
+    :meth:`Scheduler.shed_expired` instead of admitted late, and a
+    completed request that missed its TTFT/TPOT deadline increments
+    the corresponding ``[serve]`` miss counter.
+    """
+
     rid: Any
     prompt: np.ndarray              # (P,) int32 token ids
     max_new: int
     eos_id: Optional[int] = None
     temperature: float = 0.0
     seed: Optional[int] = None
+    ttft_deadline_ms: Optional[float] = None   # first token due (ms)
+    tpot_deadline_ms: Optional[float] = None   # mean ms/token budget
 
     @property
     def prompt_len(self) -> int:
+        """Prompt length P in tokens."""
         return int(len(self.prompt))
 
 
@@ -127,7 +148,8 @@ class Scheduler:
                  draft_params=None, spec_tokens: int = 0,
                  draft_cfg: Optional[ModelConfig] = None,
                  spec_fused: bool = True,
-                 spec_adapt: bool = False):
+                 spec_adapt: bool = False,
+                 max_queue: Optional[int] = None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -155,6 +177,9 @@ class Scheduler:
             else 0
         self.spec_fused = bool(spec_fused)
         self.spec_adapt = bool(spec_adapt)
+        self.max_queue = max_queue if max_queue is None else int(max_queue)
+        if self.max_queue is not None and self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1 (or None)")
         # the drafter may be a SMALLER arch than the target (per-session
         # configs); vocab compatibility is a hard precondition — draft
         # token ids index the target's embedding
@@ -244,6 +269,7 @@ class Scheduler:
 
     @property
     def params(self):
+        """The TARGET weights currently serving (the session's tree)."""
         return self.session.params
 
     # -- request intake ----------------------------------------------------
@@ -252,6 +278,20 @@ class Scheduler:
         raise ValueError(msg)
 
     def submit(self, req: Request) -> None:
+        """Validate + enqueue a request (host-side only, non-blocking).
+
+        Raises :class:`Overloaded` when the queue is at ``max_queue``
+        (the caller should shed/backpressure, not retry in a loop) and
+        ``ValueError`` for malformed requests (duplicate rid, empty
+        prompt, budget over the pool ceiling, missing seed); both are
+        counted in the ``[serve]`` stats.  Admission to the decode
+        batch happens later, inside :meth:`step`.
+        """
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.stats.shed_overload += 1
+            raise Overloaded(
+                f"request queue is at max_queue={self.max_queue}; "
+                f"request {req.rid!r} shed (retry with backoff)")
         total = req.prompt_len + req.max_new
         if req.rid in self.active or req.rid in self.prefilling or \
                 req.rid in self.results or \
@@ -463,7 +503,19 @@ class Scheduler:
         if self.spec_adapt:
             self.spec_k_by_rid[rid] = int(self._spec_k[act.slot])
         self.stats.completed += 1
-        self.stats.latency.append(time.perf_counter() - act.submit_t)
+        now = time.perf_counter()
+        self.stats.latency.append(now - act.submit_t)
+        ttft = (act.first_token_t or now) - act.submit_t
+        tpot = None
+        if act.ntok > 1 and act.first_token_t is not None:
+            tpot = (now - act.first_token_t) / (act.ntok - 1)
+            self.stats.tpot.append(tpot)
+        if act.req.ttft_deadline_ms is not None \
+                and ttft * 1e3 > act.req.ttft_deadline_ms:
+            self.stats.ttft_deadline_misses += 1
+        if act.req.tpot_deadline_ms is not None and tpot is not None \
+                and tpot * 1e3 > act.req.tpot_deadline_ms:
+            self.stats.tpot_deadline_misses += 1
         slot = self.pool.release(rid)
         if self.draft is not None:
             self.draft.layout.release(rid)
@@ -471,6 +523,75 @@ class Scheduler:
         del self._by_slot[slot]
         self._next_token[slot] = 0
         self._index[slot] = self._idle_index
+
+    # -- cancellation / load shedding ---------------------------------------
+    def cancel(self, rid) -> bool:
+        """Drop a request wherever it is in its lifecycle.
+
+        Queued requests leave the queue; prefilling/active requests
+        release their slot and page reservations immediately (their
+        partial tokens are NOT recorded in ``results`` — a streaming
+        caller has already received them).  Returns True if the rid was
+        found, False if it is unknown or already completed.  Host-side
+        only and non-blocking; counted as ``cancelled``.
+        """
+        return self._cancel_now(rid, "cancel")
+
+    def shed_expired(self) -> List[Any]:
+        """Shed QUEUED requests whose TTFT deadline has already passed.
+
+        A request that declared ``ttft_deadline_ms`` and has been
+        queued longer than that can no longer meet its SLO, so
+        admitting it wastes decode slots; it is dropped and counted as
+        ``shed_deadline``.  Returns the shed rids (the gateway turns
+        each into a 429-style deadline response).  In-flight requests
+        are never shed — deadline misses there are counted at
+        completion instead.
+        """
+        now = time.perf_counter()
+        shed = [q.rid for q in self.queue
+                if q.ttft_deadline_ms is not None
+                and (now - getattr(q, "_submit_t", now)) * 1e3
+                > q.ttft_deadline_ms]
+        for rid in shed:
+            self._cancel_now(rid, "deadline")
+        return shed
+
+    def _cancel_now(self, rid, reason: str) -> bool:
+        """Immediately remove ``rid``; ``reason`` picks the counter
+        ("cancel" -> cancelled, "deadline" -> shed_deadline)."""
+        found = False
+        for i, q in enumerate(self.queue):
+            if q.rid == rid:
+                del self.queue[i]
+                found = True
+                break
+        if not found:
+            act = self.active.get(rid) or self.prefilling.get(rid) or next(
+                (a for a in self._pending_onepass if a.req.rid == rid),
+                None)
+            if act is None:
+                return False
+            # deferred device work for this rid must not run
+            self._pending_onepass = [a for a in self._pending_onepass
+                                     if a.req.rid != rid]
+            self._pending_draft = [r for r in self._pending_draft
+                                   if r.rid != rid]
+            slot = self.pool.release(rid)
+            if self.draft is not None:
+                self.draft.layout.release(rid)
+            self.active.pop(rid, None)
+            self.prefilling.pop(rid, None)
+            self._by_slot.pop(slot, None)
+            self._next_token[slot] = 0
+            self._index[slot] = self._idle_index
+        if self._head_share is not None and self._head_share[0] == rid:
+            self._head_share = None
+        if reason == "deadline":
+            self.stats.shed_deadline += 1
+        else:
+            self.stats.cancelled += 1
+        return True
 
     def set_params(self, params) -> None:
         """Hot-swap TARGET weights between steps (cache layout

@@ -124,6 +124,7 @@ class DecodeSession:
 
     @property
     def paged(self) -> bool:
+        """True when the KV cache is the paged (scattered-page) layout."""
         return isinstance(self.layout, PagedLayout)
 
     def set_params(self, params) -> None:

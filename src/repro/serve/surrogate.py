@@ -150,6 +150,8 @@ class SurrogateEngine:
             self.stats.sample_step(len(self.queue), 0)
 
     def run(self, max_steps: Optional[int] = None) -> Dict[Any, np.ndarray]:
+        """Drain the query queue (optionally bounded); returns results
+        keyed by query id."""
         steps = 0
         while self.queue or self._staged is not None \
                 or self._pending is not None:

@@ -1,0 +1,290 @@
+"""Gateway tests: streaming order/parity, SLO-aware admission
+(max-queue overload -> 429, TTFT-deadline shedding), bounded-buffer
+backpressure, client-disconnect cancellation, and the scheduler-level
+max_queue / cancel regressions the gateway relies on."""
+import asyncio
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.lm import init_lm
+from repro.serve.gateway import Gateway, _Stream
+from repro.serve.scheduler import Overloaded, Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                              dtype="float32")
+    params, _ = init_lm(cfg, KEY)
+    return cfg, params
+
+
+def _prompt(cfg, n=8, seed=3):
+    return np.random.default_rng(seed).integers(
+        0, cfg.vocab_size, n).tolist()
+
+
+# -- raw HTTP client helpers (stdlib only, like the gateway itself) ---------
+
+
+async def _http(port, method, path, body=None, read_all=True):
+    r, w = await asyncio.open_connection("127.0.0.1", port)
+    payload = json.dumps(body).encode() if body is not None else b""
+    w.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+             f"Content-Length: {len(payload)}\r\n\r\n").encode() + payload)
+    await w.drain()
+    data = await r.read() if read_all else b""
+    w.close()
+    return data.decode()
+
+
+def _status(resp: str) -> int:
+    return int(resp.split()[1])
+
+
+def _ndjson(resp: str):
+    """Decode a chunked NDJSON body into its records."""
+    body = resp.split("\r\n\r\n", 1)[1]
+    recs = []
+    while body:
+        size, _, rest = body.partition("\r\n")
+        n = int(size, 16)
+        if n == 0:
+            break
+        recs.append(json.loads(rest[:n]))
+        body = rest[n + 2:]
+    return recs
+
+
+def _run(coro, timeout=300):
+    return asyncio.new_event_loop().run_until_complete(
+        asyncio.wait_for(coro, timeout))
+
+
+# -- scheduler-level admission regressions ----------------------------------
+
+
+def test_scheduler_max_queue_overload(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32, max_queue=2)
+    p = np.asarray(_prompt(cfg), np.int32)
+    sched.submit(Request(rid="a", prompt=p, max_new=4))
+    sched.submit(Request(rid="b", prompt=p, max_new=4))
+    with pytest.raises(Overloaded):
+        sched.submit(Request(rid="c", prompt=p, max_new=4))
+    assert sched.stats.shed_overload == 1
+    # shedding is not rejection: the request was well-formed
+    assert sched.stats.rejected == 0
+    # draining the queue reopens admission
+    sched.run()
+    sched.submit(Request(rid="c", prompt=p, max_new=4))
+    assert len(sched.queue) == 1
+
+
+def test_scheduler_cancel_releases_resources(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32)
+    p = np.asarray(_prompt(cfg), np.int32)
+    for rid in ("a", "b", "c"):
+        sched.submit(Request(rid=rid, prompt=p, max_new=8))
+    sched.step()                      # a (and maybe b) admitted
+    free0 = sched.pool.blocks.free_blocks
+    assert sched.cancel("a")          # in-flight
+    assert sched.cancel("c")          # still queued
+    assert not sched.cancel("zz")     # unknown
+    assert sched.pool.blocks.free_blocks > free0
+    assert sched.stats.cancelled == 2
+    results = sched.run()             # b must still complete
+    assert set(results) == {"b"}
+    assert "a" not in sched.results and "c" not in sched.results
+
+
+def test_scheduler_shed_expired_deadline(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=32)
+    p = np.asarray(_prompt(cfg), np.int32)
+    sched.submit(Request(rid="a", prompt=p, max_new=4))
+    sched.step()                      # occupy the only slot
+    sched.submit(Request(rid="late", prompt=p, max_new=4,
+                         ttft_deadline_ms=1e-3))
+    sched.submit(Request(rid="ok", prompt=p, max_new=4))
+    shed = sched.shed_expired()
+    assert shed == ["late"]
+    assert sched.stats.shed_deadline == 1
+    results = sched.run()
+    assert set(results) == {"a", "ok"}
+
+
+# -- gateway integration ----------------------------------------------------
+
+
+def test_gateway_stream_matches_nonstream_and_orders_tokens(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        body = {"prompt": _prompt(cfg), "max_new": 6}
+        streamed = await _http(gw.port, "POST", "/v1/generate",
+                               {**body, "rid": "s"})
+        plain = await _http(gw.port, "POST", "/v1/generate",
+                            {**body, "rid": "p", "stream": False})
+        health = await _http(gw.port, "GET", "/healthz")
+        metrics = await _http(gw.port, "GET", "/metrics")
+        missing = await _http(gw.port, "GET", "/nope")
+        await gw.stop()
+        return streamed, plain, health, metrics, missing
+
+    streamed, plain, health, metrics, missing = _run(go())
+    recs = _ndjson(streamed)
+    toks = [r["token"] for r in recs if "token" in r]
+    assert recs[-1] == {"rid": "s", "done": True, "ntok": 6}
+    assert _status(plain) == 200
+    assert json.loads(plain.split("\r\n\r\n", 1)[1])["tokens"] == toks
+    assert len(toks) == 6
+    assert _status(health) == 200 and _status(missing) == 404
+    md = json.loads(metrics.split("\r\n\r\n", 1)[1])
+    assert md["completed"] == 2 and md["submitted"] == 2
+
+
+def test_gateway_sheds_overload_with_429(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=72,
+                      max_queue=1)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        # occupy the single slot with a long request, confirmed by its
+        # first streamed token (so admission has definitely happened)
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        body = json.dumps({"prompt": _prompt(cfg), "max_new": 64,
+                           "rid": "hog"}).encode()
+        w.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await w.drain()
+        await r.readuntil(b"token")
+        # now burst: one fits the queue, the rest must shed with 429
+        burst = await asyncio.gather(*[
+            _http(gw.port, "POST", "/v1/generate",
+                  {"prompt": _prompt(cfg), "max_new": 4,
+                   "rid": f"b{i}"}) for i in range(3)])
+        w.close()
+        await gw.stop()
+        return burst
+
+    burst = _run(go())
+    codes = sorted(_status(b) for b in burst)
+    assert codes.count(429) >= 1, codes
+    shed = [b for b in burst if _status(b) == 429]
+    assert all("Retry-After" in b for b in shed)
+    assert sched.stats.shed_overload >= 1
+
+
+def test_gateway_deadline_shed_is_429(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=72)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        body = json.dumps({"prompt": _prompt(cfg), "max_new": 64,
+                           "rid": "hog"}).encode()
+        w.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await w.drain()
+        await r.readuntil(b"token")    # slot occupied
+        late = await _http(gw.port, "POST", "/v1/generate",
+                           {"prompt": _prompt(cfg), "max_new": 4,
+                            "rid": "late", "ttft_deadline_ms": 0.001})
+        w.close()
+        await gw.stop()
+        return late
+
+    late = _run(go())
+    assert _status(late) == 429
+    assert "deadline" in late
+    assert sched.stats.shed_deadline == 1
+
+
+def test_gateway_bad_request_is_400(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=32)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        missing = await _http(gw.port, "POST", "/v1/generate", {})
+        toolong = await _http(gw.port, "POST", "/v1/generate",
+                              {"prompt": _prompt(cfg, 8),
+                               "max_new": 4096})
+        await gw.stop()
+        return missing, toolong
+
+    missing, toolong = _run(go())
+    assert _status(missing) == 400
+    assert _status(toolong) == 400
+    assert sched.stats.rejected == 1
+
+
+def test_backpressure_cancels_slow_consumer(served):
+    # driver-side publication unit: a consumer that stops draining its
+    # bounded stream queue gets the request cancelled, not an
+    # unbounded buffer
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=32)
+    gw = Gateway(sched, stream_buffer=2)
+    loop = asyncio.new_event_loop()
+    gw.loop = loop
+    st = _Stream(rid="slow", q=asyncio.Queue())
+    gw._streams["slow"] = st
+    for i in range(5):                # consumer never drains
+        gw._post(st, ("tok", i))
+    loop.run_until_complete(asyncio.sleep(0))
+    assert st.error is not None and "backpressure" in st.error
+    assert list(gw._cancels) == ["slow"]
+    assert st.q.qsize() == 2          # bounded: only the buffer landed
+    assert "slow" not in gw._streams
+    # further publications are dropped, not queued
+    gw._post(st, ("tok", 99))
+    assert st.q.qsize() == 2
+    loop.close()
+
+
+def test_gateway_client_disconnect_frees_slot(served):
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=136)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        body = json.dumps({"prompt": _prompt(cfg), "max_new": 128,
+                           "rid": "gone"}).encode()
+        w.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await w.drain()
+        await r.readuntil(b"token")
+        # hard-close mid-stream: the server must cancel the request
+        w.transport.abort()
+        # the freed slot must serve a new request to completion
+        nxt = await _http(gw.port, "POST", "/v1/generate",
+                          {"prompt": _prompt(cfg, seed=5), "max_new": 4,
+                           "rid": "after", "stream": False})
+        await gw.stop()
+        return nxt
+
+    nxt = _run(go())
+    assert _status(nxt) == 200
+    assert len(json.loads(nxt.split("\r\n\r\n", 1)[1])["tokens"]) == 4
+    assert sched.stats.cancelled == 1
+    assert "gone" not in sched.results
