@@ -19,6 +19,9 @@ through three configurations at EQUAL KV-cache memory:
     The same memory holds 2x the decode slots because pages are shared;
     the long request is admitted; the shared system prompt prefills
     once and is then mapped, not recomputed.
+  * ``paged_notel`` — the paged configuration with ``telemetry=False``:
+    the control arm that bounds the cost of per-request tracing (token
+    identity asserted; overhead must stay <= 5% tokens/s).
   * ``spec``     — the paged configuration plus population speculative
     decoding through the same DecodeSession API: a drafter proposes
     SPEC_TOKENS tokens per round and the target verifies them in one
@@ -56,6 +59,7 @@ from benchmarks.common import CsvReport
 from repro.configs.registry import get_config
 from repro.data.tokens import token_stream
 from repro.models.lm import init_lm
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.scheduler import Request, Scheduler
 
 # mixed-length trace: short chats + long documents, interleaved so a
@@ -122,7 +126,9 @@ def make_scheduler(cfg, params, mode: str) -> Scheduler:
         # self-draft: the accept-rate upper bound (a deployment drafts
         # with an earlier/smaller LTFB population checkpoint instead)
         draft_params=params if mode == "spec" else None,
-        spec_tokens=SPEC_TOKENS if mode == "spec" else 0)
+        spec_tokens=SPEC_TOKENS if mode == "spec" else 0,
+        # the telemetry-off twin of the paged arm bounds tracing cost
+        telemetry=mode != "paged_notel")
     if mode == "mesh":
         from repro.serve.mesh import MeshScheduler
         return MeshScheduler(cfg, params, mesh_shape=MESH_SHAPE,
@@ -145,10 +151,16 @@ def serve_once(cfg, params, reqs, mode: str) -> dict:
     d = sched.stats.as_dict()
     d.update({f"pool_{k}": v for k, v in sched.pool.as_dict().items()})
     d["_results"] = sched.results
+    if mode == "paged":
+        # the instrumented arm's artifacts: Chrome-trace ring buffer +
+        # Prometheus exposition (uploaded by CI alongside the summary)
+        d["_trace"] = sched.telemetry.tracer.export()
+        d["_prom"] = telemetry_mod.scheduler_prometheus(sched)
     return d
 
 
-def run(report: CsvReport, quick: bool = False, json_path: str = None):
+def run(report: CsvReport, quick: bool = False, json_path: str = None,
+        trace_path: str = None, prom_path: str = None):
     cfg = get_config("qwen3-0.6b", smoke=True)
     params, _ = init_lm(cfg, jax.random.PRNGKey(0))
     n = 36 if quick else 60
@@ -158,7 +170,7 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
     # misses chunk/table-width shape buckets and the measured run pays
     # the compile), then run the configs round-robin and report each
     # one's median of 5, so slow-machine drift hits all configs alike
-    modes = ("static", "dense", "paged", "spec")
+    modes = ("static", "dense", "paged", "paged_notel", "spec")
     if jax.device_count() >= MESH_DEVICES:
         modes = modes + ("mesh",)
     else:
@@ -202,6 +214,37 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
           f"hits={out['paged']['pool_prefix_hits']} "
           f"shared_tokens={out['paged']['pool_prefix_shared_tokens']} "
           f"prefill_chunks={out['paged']['prefill_chunks']}")
+
+    # telemetry must not change WHAT is served (token identity) and
+    # must cost <= 5% tokens/s vs the same config with tracing off
+    for rid, toks in out["paged"]["_results"].items():
+        assert out["paged_notel"]["_results"][rid].tolist() \
+            == toks.tolist(), \
+            f"telemetry changed the served tokens on {rid!r}"
+    notel_tps = out["paged_notel"]["tokens_per_s"]
+    overhead = max(0.0, (notel_tps - out["paged"]["tokens_per_s"])
+                   / max(notel_tps, 1e-9))
+    print(f"# fig14 telemetry overhead (paged vs --no-telemetry twin, "
+          f"median of 5): {overhead * 100:.1f}%")
+    assert overhead <= 0.05, \
+        f"telemetry overhead {overhead * 100:.1f}% exceeds the 5% budget"
+
+    # every completed request must leave a full trace chain in the
+    # exported ring buffer: enqueue -> first_token -> finish
+    trace = out["paged"]["_trace"]
+    by_rid = {}
+    for ev in trace["traceEvents"]:
+        rid = ev.get("args", {}).get("rid")
+        if rid is not None:
+            by_rid.setdefault(rid, set()).add(ev["name"])
+    for rid in out["paged"]["_results"]:
+        names = by_rid.get(str(rid), set())
+        assert {"enqueue", "first_token", "finish"} <= names, \
+            f"incomplete trace chain for {rid!r}: {sorted(names)}"
+    print(f"# fig14 trace: {len(trace['traceEvents'])} events, full "
+          f"enqueue->first_token->finish chains for "
+          f"{len(out['paged']['_results'])} requests "
+          f"(dropped={trace['otherData']['dropped']})")
 
     # speculative decoding must be TOKEN-IDENTICAL to the paged arm
     # (temperature 0): every emitted token is a target sample
@@ -272,6 +315,7 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
             "speedup_paged_vs_dense": paged,
             "speedup_continuous_vs_static": cont,
             "speedup_spec_vs_paged": spec,
+            "telemetry_overhead": overhead,
             "mesh_token_identical": "mesh" in out,
             "configs": {m: {
                 "tokens_per_s": d["tokens_per_s"],
@@ -293,6 +337,14 @@ def run(report: CsvReport, quick: bool = False, json_path: str = None):
         with open(json_path, "w") as f:
             json.dump(summary, f, indent=2)
         print(f"# fig14 wrote {json_path}")
+    if trace_path:
+        with open(trace_path, "w") as f:
+            json.dump(trace, f)
+        print(f"# fig14 wrote {trace_path} (Perfetto/chrome://tracing)")
+    if prom_path:
+        with open(prom_path, "w") as f:
+            f.write(out["paged"]["_prom"])
+        print(f"# fig14 wrote {prom_path} (Prometheus exposition)")
     return out
 
 
@@ -301,7 +353,12 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--json", default=None,
                     help="write BENCH_serving.json summary here")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the paged arm's Chrome-trace JSON here")
+    ap.add_argument("--prom-out", default=None,
+                    help="write the paged arm's Prometheus scrape here")
     args = ap.parse_args()
     r = CsvReport()
-    run(r, quick=args.quick, json_path=args.json)
+    run(r, quick=args.quick, json_path=args.json,
+        trace_path=args.trace_out, prom_path=args.prom_out)
     r.dump()

@@ -205,6 +205,11 @@ def run_worker(args) -> int:
            "results": {str(rid): [int(t) for t in toks]
                        for rid, toks in results.items()},
            "stats": sched.stats.as_dict()}
+    if rank == 0:
+        # the gathered per-rank snapshots — host-0's export covers the
+        # whole mesh, so one scrape sees every process's counters
+        out["mesh_stats"] = {str(r): s
+                             for r, s in sched.remote_stats.items()}
     if args.out_json:
         path = args.out_json if rank == 0 \
             else f"{args.out_json}.p{rank}"
@@ -212,6 +217,12 @@ def run_worker(args) -> int:
             json.dump(out, f)
         print(f"[dist] rank={rank} wrote {path} "
               f"({len(results)} results)", flush=True)
+        if rank == 0:
+            from repro.serve import telemetry as telemetry_mod
+            with open(path + ".prom", "w") as f:
+                f.write(telemetry_mod.scheduler_prometheus(sched))
+            print(f"[dist] rank=0 wrote {path}.prom "
+                  f"(Prometheus exposition, all ranks)", flush=True)
     if args.num_processes > 1:
         jax.distributed.shutdown()
     return 0

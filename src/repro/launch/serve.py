@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs.registry import ARCHS, get_config
 from repro.data.tokens import token_stream
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.registry import ModelRegistry
 from repro.serve.scheduler import Request, Scheduler
 
@@ -122,7 +123,8 @@ def run_lm(args) -> Dict[str, object]:
         draft_params=draft_params, spec_tokens=args.spec_tokens,
         draft_cfg=draft_cfg, spec_fused=not args.no_spec_fused,
         spec_adapt=args.spec_adapt,
-        max_queue=getattr(args, "max_queue", None))
+        max_queue=getattr(args, "max_queue", None),
+        telemetry=not args.no_telemetry)
     if args.mesh:
         from repro.serve.mesh import MeshScheduler, parse_mesh
         data, model = parse_mesh(args.mesh)
@@ -133,8 +135,14 @@ def run_lm(args) -> Dict[str, object]:
               f"(host-0 scheduler, per-shard page pools)")
     else:
         sched = Scheduler(cfg, params, **sched_kw)
+    if args.profile_steps > 0:
+        sched.profile_steps(args.profile_steps, args.profile_dir)
+        print(f"[serve] profiler armed: steps={args.profile_steps} "
+              f"dir={args.profile_dir}")
     if getattr(args, "gateway", False):
-        return run_gateway(args, sched)
+        out = run_gateway(args, sched)
+        _maybe_write_trace(args, sched)
+        return out
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
                           temperature=args.temperature, seed=args.seed)
@@ -172,9 +180,20 @@ def run_lm(args) -> Dict[str, object]:
     sample = results[reqs[0].rid]
     print("[serve] sample continuation (token ids):",
           list(map(int, sample[:12])))
+    _maybe_write_trace(args, sched)
     return {"stats": sched.stats.as_dict(), "pool": pd,
             "registry_step": registry.step if registry else None,
             "results": results}
+
+
+def _maybe_write_trace(args, sched) -> None:
+    """Export the Chrome-trace ring buffer if --trace-out was given."""
+    if not getattr(args, "trace_out", None):
+        return
+    telemetry_mod.write_trace(sched.telemetry.tracer, args.trace_out)
+    tr = sched.telemetry.tracer
+    print(f"[serve] trace: {args.trace_out} events={len(tr.events)} "
+          f"dropped={tr.dropped} (chrome://tracing / ui.perfetto.dev)")
 
 
 def run_gateway(args, sched) -> Dict[str, object]:
@@ -192,7 +211,8 @@ def run_gateway(args, sched) -> Dict[str, object]:
         print(f"[serve] gateway: http://{gw.host}:{gw.port} "
               f"max_queue={sched.max_queue} "
               f"stream_buffer={gw.stream_buffer} "
-              f"(POST /v1/generate, GET /healthz, GET /metrics)")
+              f"(POST /v1/generate, GET /healthz, GET /readyz, "
+              f"GET /metrics, GET /debug/trace, POST /debug/profile)")
         assert gw._server is not None
         async with gw._server:
             await gw._server.serve_forever()
@@ -221,7 +241,8 @@ def run_surrogate(args) -> Dict[str, object]:
               f"wins={registry.info.get('wins')}")
     eng = SurrogateEngine(ccfg, params, max_batch=args.slots * 16,
                           bucket=8, registry=registry,
-                          watch_every=args.watch_every)
+                          watch_every=args.watch_every,
+                          telemetry=not args.no_telemetry)
     print(f"[serve] arch={ccfg.name} workload=surrogate "
           f"queries={args.queries} query_batch={args.query_batch} "
           f"max_batch={eng.max_batch}")
@@ -233,6 +254,7 @@ def run_surrogate(args) -> Dict[str, object]:
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
               f"hot_swaps={eng.stats.hot_swaps}")
+    _maybe_write_trace(args, eng)
     return {"stats": eng.stats.as_dict(),
             "registry_step": registry.step if registry else None,
             "results": results}
@@ -352,6 +374,25 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-response token buffer; a consumer that "
                          "falls further behind is cancelled "
                          "(backpressure)")
+    # telemetry (tracing / metrics / profiler)
+    ap.add_argument("--no-telemetry", action="store_true",
+                    help="disable per-request trace spans and phase "
+                         "spans (counters, histograms and the profiler "
+                         "window stay on)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write the per-request trace ring buffer as "
+                         "Chrome-trace JSON on exit (open in "
+                         "chrome://tracing or ui.perfetto.dev)")
+    ap.add_argument("--profile-steps", type=int, default=0,
+                    help="wrap jax.profiler.trace around the first N "
+                         "scheduler steps (0 = off; lm workload)")
+    ap.add_argument("--profile-dir", default="/tmp/repro_profile",
+                    help="output dir for --profile-steps / POST "
+                         "/debug/profile traces (TensorBoard-loadable)")
+    ap.add_argument("--log-json", action="store_true",
+                    help="emit [serve] reports and lifecycle events "
+                         "(shed/cancel/hot-swap/profile) as one-line "
+                         "JSON records on stdout")
     return ap
 
 
@@ -359,6 +400,8 @@ def main(argv=None) -> int:
     """CLI entry point: parse args, pick the workload, run it."""
     args = build_parser().parse_args(argv)
 
+    if args.log_json:
+        telemetry_mod.enable_json_logs()
     if args.draft_ckpt and args.spec_tokens <= 0:
         args.spec_tokens = 4            # a drafter implies speculation
     workload = args.workload or \

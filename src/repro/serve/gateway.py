@@ -30,8 +30,15 @@ SLO-aware admission lives at this boundary:
   bound.
 
 Endpoints: ``POST /v1/generate`` (streaming NDJSON by default,
-``"stream": false`` for a single JSON body), ``GET /healthz``,
-``GET /metrics`` (the :meth:`ServeStats.as_dict` summary).
+``"stream": false`` for a single JSON body), ``GET /healthz``
+(liveness), ``GET /readyz`` (readiness: 503 until the warmup step ran
+and the driver is up), ``GET /metrics`` (Prometheus text by default,
+the :meth:`ServeStats.as_dict` JSON summary under
+``Accept: application/json``), ``GET /debug/trace`` (the Chrome-trace
+ring buffer), ``POST /debug/profile`` (arm ``jax.profiler`` around the
+next N scheduler steps).  The debug endpoints route through a control
+queue the driver drains, preserving the single-scheduler-caller
+invariant.
 """
 from __future__ import annotations
 
@@ -41,11 +48,13 @@ import json
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serve import telemetry as telemetry_mod
 from repro.serve.scheduler import Overloaded, Request, Scheduler
+from repro.serve.telemetry import log_event
 
 
 @dataclass
@@ -85,7 +94,8 @@ class Gateway:
 
     def __init__(self, sched: Scheduler, host: str = "127.0.0.1",
                  port: int = 0, stream_buffer: int = 64,
-                 idle_sleep_s: float = 0.002):
+                 idle_sleep_s: float = 0.002,
+                 warmup: Optional[Callable[[], None]] = None):
         self.sched = sched
         self.host = host
         self.port = port
@@ -98,8 +108,16 @@ class Gateway:
         self._lock = threading.Lock()
         self._ingress: collections.deque = collections.deque()
         self._cancels: collections.deque = collections.deque()
+        # control ops from debug endpoints, drained by the driver (the
+        # only scheduler caller): ("profile", steps, outdir)
+        self._control: collections.deque = collections.deque()
         self._streams: Dict[Any, _Stream] = {}   # driver-owned tracking
         self._next_rid = 0
+        # readiness: set by the driver AFTER the optional warmup
+        # callable (weight load / first compile) completes — /readyz
+        # answers 503 until then, so load balancers wait out cold start
+        self._warmup = warmup
+        self._ready = threading.Event()
 
     # -- lifecycle (event loop side) ----------------------------------------
     async def start(self) -> None:
@@ -131,13 +149,24 @@ class Gateway:
 
     # -- driver thread: the ONLY scheduler caller ---------------------------
     def _drive(self) -> None:
-        """Scheduler loop: drain ingress/cancels, shed, step, publish."""
+        """Scheduler loop: drain ingress/cancels/control, shed, step,
+        publish.  Runs the warmup callable first, then flips
+        readiness."""
         sched = self.sched
+        if self._warmup is not None:
+            self._warmup()
+        self._ready.set()
+        log_event("gateway_ready", host=self.host, port=self.port)
         while not self._stop.is_set():
             busy = self._drain_ingress()
             while self._cancels:
                 rid = self._cancels.popleft()
                 sched.cancel(rid)
+                busy = True
+            while self._control:
+                op = self._control.popleft()
+                if op[0] == "profile":
+                    sched.profile_steps(op[1], op[2])
                 busy = True
             for rid in sched.shed_expired():
                 self._post_error(rid, "shed: TTFT deadline expired "
@@ -204,6 +233,8 @@ class Gateway:
             st.error = (f"backpressure: consumer fell more than "
                         f"{self.stream_buffer} tokens behind; "
                         "request cancelled")
+            log_event("backpressure", rid=st.rid,
+                      buffer=self.stream_buffer)
             self._cancels.append(st.rid)
             self._streams.pop(st.rid, None)
             return
@@ -237,15 +268,19 @@ class Gateway:
                 return
             method, path = parts[0].upper(), parts[1]
             clen = 0
+            accept = ""
             while True:
                 h = await reader.readline()
                 if h in (b"\r\n", b"\n", b""):
                     break
                 name, _, val = h.decode("latin1").partition(":")
-                if name.strip().lower() == "content-length":
+                hname = name.strip().lower()
+                if hname == "content-length":
                     clen = int(val.strip())
+                elif hname == "accept":
+                    accept = val.strip().lower()
             body = await reader.readexactly(clen) if clen else b""
-            await self._route(method, path, body, writer)
+            await self._route(method, path, body, accept, writer)
         except (asyncio.IncompleteReadError, ConnectionResetError):
             pass
         finally:
@@ -256,21 +291,63 @@ class Gateway:
                 pass
 
     async def _route(self, method: str, path: str, body: bytes,
-                     writer: asyncio.StreamWriter) -> None:
+                     accept: str, writer: asyncio.StreamWriter) -> None:
         """Dispatch to an endpoint handler."""
+        sched = self.sched
+        busy = len(sched.active) + len(sched.prefilling)
         if method == "GET" and path == "/healthz":
+            # liveness: the process is up and parsing HTTP — readiness
+            # is reported but does NOT change the status code
             await _respond(writer, 200, {
-                "ok": True, "slots": self.sched.stats.slots,
-                "queued": len(self.sched.queue),
-                "active": len(self.sched.active)
-                + len(self.sched.prefilling)})
+                "ok": True, "live": True,
+                "ready": self._ready.is_set(),
+                "slots": sched.stats.slots,
+                "queued": len(sched.queue), "active": busy})
+        elif method == "GET" and path == "/readyz":
+            # readiness: 503 until weights are loaded / mesh is up
+            # (the driver's warmup), so load balancers can gate on it
+            ready = self._ready.is_set()
+            await _respond(writer, 200 if ready else 503, {
+                "ready": ready, "slots": sched.stats.slots,
+                "queued": len(sched.queue), "slots_busy": busy})
         elif method == "GET" and path == "/metrics":
-            await _respond(writer, 200, self.sched.stats.as_dict())
+            if "application/json" in accept:
+                d = dict(sched.stats.as_dict())
+                d["phase_seconds"] = dict(sched.telemetry.phase_seconds)
+                await _respond(writer, 200, d)
+            else:
+                await _respond_text(
+                    writer, 200, telemetry_mod.scheduler_prometheus(sched),
+                    content_type="text/plain; version=0.0.4; "
+                                 "charset=utf-8")
+        elif method == "GET" and path == "/debug/trace":
+            await _respond(writer, 200, sched.telemetry.tracer.export())
+        elif method == "POST" and path == "/debug/profile":
+            await self._profile(body, writer)
         elif method == "POST" and path == "/v1/generate":
             await self._generate(body, writer)
         else:
             await _respond(writer, 404, {"error": f"no route "
                                                   f"{method} {path}"})
+
+    async def _profile(self, body: bytes,
+                       writer: asyncio.StreamWriter) -> None:
+        """``POST /debug/profile``: arm the jax profiler around the
+        next ``steps`` scheduler steps, artifacts under ``dir``.  The
+        arm rides the control queue — the driver applies it, keeping
+        the scheduler single-callered."""
+        try:
+            d = json.loads(body.decode() or "{}")
+            steps = int(d.get("steps", 8))
+            outdir = str(d.get("dir", "/tmp/repro_profile"))
+            if steps < 1:
+                raise ValueError("steps must be >= 1")
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            await _respond(writer, 400, {"error": f"bad request: {e}"})
+            return
+        self._control.append(("profile", steps, outdir))
+        await _respond(writer, 200,
+                       {"armed": True, "steps": steps, "dir": outdir})
 
     async def _generate(self, body: bytes,
                         writer: asyncio.StreamWriter) -> None:
@@ -377,7 +454,8 @@ class Gateway:
 # -- wire helpers -----------------------------------------------------------
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            429: "Too Many Requests", 500: "Internal Server Error"}
+            429: "Too Many Requests", 500: "Internal Server Error",
+            503: "Service Unavailable"}
 
 
 async def _respond(writer: asyncio.StreamWriter, code: int, obj: Dict,
@@ -390,6 +468,20 @@ async def _respond(writer: asyncio.StreamWriter, code: int, obj: Dict,
             f"Content-Length: {len(payload)}",
             "Connection: close"]
     head += [f"{k}: {v}" for k, v in (extra_headers or [])]
+    writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + payload)
+    await writer.drain()
+
+
+async def _respond_text(writer: asyncio.StreamWriter, code: int,
+                        text: str,
+                        content_type: str = "text/plain; charset=utf-8"
+                        ) -> None:
+    """Write one complete plain-text response (Prometheus scrapes)."""
+    payload = text.encode()
+    head = [f"HTTP/1.1 {code} {_REASONS.get(code, '')}",
+            f"Content-Type: {content_type}",
+            f"Content-Length: {len(payload)}",
+            "Connection: close"]
     writer.write(("\r\n".join(head) + "\r\n\r\n").encode() + payload)
     await writer.drain()
 

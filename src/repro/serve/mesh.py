@@ -71,6 +71,7 @@ from repro.parallel.sharding import (serve_rules, tree_shardings,
 from repro.serve.kv_cache import PagedLayout, SlotLayout, blocks_for
 from repro.serve.scheduler import Request, Scheduler
 from repro.serve.session import DecodeSession, _draft_unroll
+from repro.serve.telemetry import stats_snapshot
 
 
 # ---------------------------------------------------------------------------
@@ -247,6 +248,17 @@ class PlanChannel:
         """Send (host 0) / receive (followers) one plan; blocking."""
         raise NotImplementedError
 
+    def gather(self, payload: bytes) -> Optional[List[bytes]]:
+        """All-ranks → host-0 gather of small stats payloads.
+
+        Every rank calls this once per exchange with its own payload
+        (symmetric, like a collective).  Host 0 receives the ordered
+        list ``[rank0, rank1, …]``; followers receive ``None``.
+        Transports that cannot aggregate return ``None`` everywhere —
+        host 0's export then covers its own shard only.
+        """
+        return None
+
     def close(self) -> None:
         """Release transport resources (idempotent)."""
 
@@ -263,6 +275,11 @@ class LoopbackChannel(PlanChannel):
                 "(follower replay passes the plan explicitly)")
         return StepPlan.decode(plan.encode())
 
+    def gather(self, payload: bytes) -> Optional[List[bytes]]:
+        """Single-process gather: host 0 is the only rank, so the
+        aggregation path runs on every CI step with world size 1."""
+        return [bytes(payload)]
+
 
 class CollectiveChannel(PlanChannel):
     """Multi-process transport over device collectives
@@ -272,6 +289,24 @@ class CollectiveChannel(PlanChannel):
     def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
         """Two broadcast_one_to_all rounds; followers pass None."""
         return broadcast_plan(plan if plan is not None else StepPlan())
+
+    def gather(self, payload: bytes) -> Optional[List[bytes]]:
+        """All-gather fixed-width padded payloads over the device
+        collective; host 0 strips the padding per rank."""
+        if jax.process_count() == 1:
+            return [bytes(payload)]
+        from jax.experimental import multihost_utils  # pragma: no cover
+        buf = np.frombuffer(payload, np.uint8)  # pragma: no cover
+        lens = multihost_utils.process_allgather(  # pragma: no cover
+            np.int32(len(buf)))
+        width = int(lens.max())  # pragma: no cover
+        pad = np.zeros((width,), np.uint8)  # pragma: no cover
+        pad[:len(buf)] = buf  # pragma: no cover
+        allp = multihost_utils.process_allgather(pad)  # pragma: no cover
+        if jax.process_index() != 0:  # pragma: no cover
+            return None
+        return [allp[r, :int(lens[r])].tobytes()  # pragma: no cover
+                for r in range(allp.shape[0])]
 
 
 def _capture(fn, *args):
@@ -312,12 +347,14 @@ class CoordServiceChannel(PlanChannel):
         # multi-process topology exchange hangs if a peer is already
         # dead — exactly when this channel must raise, not hang
         self._rank = int(distributed.global_state.process_id or 0)
+        self._world = int(distributed.global_state.num_processes or 1)
         self._timeout_ms = max(1, int(timeout_s * 1000))
         if namespace is None:
             namespace = f"repro/plan{_CHANNEL_SEQ[0]}"
             _CHANNEL_SEQ[0] += 1
         self._ns = namespace
         self._seq = 0
+        self._gseq = 0
 
     def _deadlined(self, fn, *args):
         """Run a blocking coordination-service call with a HARD
@@ -372,6 +409,33 @@ class CoordServiceChannel(PlanChannel):
             self._client.key_value_delete(key)
         self._seq += 1
         return StepPlan.decode(payload)
+
+    def gather(self, payload: bytes) -> Optional[List[bytes]]:
+        """Followers publish their payload under a per-exchange key;
+        host 0 blocking-gets every rank's (with the channel's hard
+        deadline) and deletes the keys.  No barrier needed: the
+        blocking gets ARE the synchronization, and the next plan
+        broadcast's barrier keeps steps aligned."""
+        seq = self._gseq
+        self._gseq += 1
+        try:
+            if self._rank != 0:
+                self._client.key_value_set_bytes(
+                    f"{self._ns}/stats{seq}/{self._rank}", payload)
+                return None
+            out = [bytes(payload)]
+            for r in range(1, self._world):
+                out.append(self._deadlined(
+                    self._client.blocking_key_value_get_bytes,
+                    f"{self._ns}/stats{seq}/{r}", self._timeout_ms))
+            for r in range(1, self._world):
+                self._client.key_value_delete(f"{self._ns}/stats{seq}/{r}")
+            return out
+        except Exception as e:  # DEADLINE_EXCEEDED / TimeoutError
+            raise RuntimeError(
+                f"stats gather {seq} timed out after {self._timeout_ms} "
+                f"ms — a peer process likely died "
+                f"({type(e).__name__}: {e})") from e
 
 
 def make_plan_channel(timeout_s: float = 60.0) -> PlanChannel:
@@ -588,7 +652,8 @@ class MeshScheduler(Scheduler):
                  mesh_shape: Optional[Tuple[int, int]] = None,
                  channel: Optional[PlanChannel] = None,
                  local_mesh: bool = False,
-                 step_timeout_s: float = 60.0, **kwargs):
+                 step_timeout_s: float = 60.0,
+                 stats_every: int = 1, **kwargs):
         if mesh is None:
             if mesh_shape is None:
                 mesh_shape = (jax.device_count(), 1)
@@ -596,6 +661,10 @@ class MeshScheduler(Scheduler):
         self.mesh = mesh
         self.channel = channel if channel is not None \
             else make_plan_channel(timeout_s=step_timeout_s)
+        # every N steps each rank ships a stats snapshot to host 0 over
+        # the channel's gather (0 disables the exchange entirely);
+        # MUST be identical on every rank — the exchange is symmetric
+        self.stats_every = max(0, int(stats_every))
         # host-0 decisions pending broadcast in the next step's plan
         self._pending_submits: List[Dict[str, Any]] = []
         self._pending_cancels: List[Tuple[Any, str]] = []
@@ -707,6 +776,7 @@ class MeshScheduler(Scheduler):
         initiated shutdown and no phases ran.
         """
         self.stats.start()
+        self.telemetry.step_begin(self._step_count + 1)
         if plan is None and jax.process_index() == 0:
             winner = self._poll_registry()
             self._step_count += 1
@@ -725,6 +795,8 @@ class MeshScheduler(Scheduler):
             if plan is None:  # pragma: no cover (multi-host follower)
                 plan = self.channel.broadcast(None)
             if plan.stop:
+                # balance step_begin (closes an armed profiler window)
+                self.telemetry.step_end()
                 return plan
             self._step_count += 1
             if plan.winner is not None and self.registry is not None:
@@ -738,11 +810,37 @@ class MeshScheduler(Scheduler):
             for rid, reason in plan.cancels:
                 self._cancel_now(rid, reason)
             self._replay_admissions(plan.admits)
+        tel = self.telemetry
+        had_pf = bool(self._pending_draft or self._pending_onepass
+                      or self.prefilling)
+        t0 = time.perf_counter()
         self._prefill_phase()
+        t1 = time.perf_counter()
+        tel.phase("prefill", t0, t1, emit=had_pf)
+        had_dec = bool(self.active)
         self._decode_phase()
+        tel.phase("decode", t1, time.perf_counter(), emit=had_dec)
+        self._exchange_stats()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
+        tel.step_end()
         return plan
+
+    def _exchange_stats(self) -> None:
+        """Symmetric per-step stats exchange: every rank ships its
+        :func:`repro.serve.telemetry.stats_snapshot` to host 0 through
+        the channel's ``gather``; host 0 keeps the latest snapshot per
+        rank in ``remote_stats`` (what ``GET /metrics`` and the
+        distributed launcher export).  Runs every ``stats_every`` steps
+        on ALL ranks or none — the gather is a collective."""
+        if not self.stats_every or self._step_count % self.stats_every:
+            return
+        rank = jax.process_index()
+        snap = stats_snapshot(self, rank=rank)
+        got = self.channel.gather(json.dumps(snap).encode())
+        if got is not None:
+            snaps = [json.loads(p.decode()) for p in got]
+            self.remote_stats = {int(s["rank"]): s for s in snaps}
 
     def shutdown(self) -> StepPlan:
         """Host 0: broadcast the coordinated-shutdown plan and close

@@ -7,18 +7,143 @@ and the fig14 benchmark consume.
 """
 from __future__ import annotations
 
+import random
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
 
 
-def percentile(xs: List[float], q: float) -> float:
-    """Nearest-rank percentile (no numpy dependency on the hot path)."""
+def percentile(xs: Union[Sequence[float], "BoundedSeries"],
+               q: float) -> float:
+    """Nearest-rank percentile (no numpy dependency on the hot path).
+
+    Accepts a plain sequence or a :class:`BoundedSeries` (which answers
+    from its exact list or its reservoir, whichever it currently holds).
+    """
+    if isinstance(xs, BoundedSeries):
+        return xs.percentile(q)
     if not xs:
         return float("nan")
     ys = sorted(xs)
     k = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
     return ys[k]
+
+
+# Fixed latency bucket upper bounds (seconds), ~1ms .. 2min exponential:
+# bounded memory regardless of how long the gateway runs.
+LATENCY_BUCKETS = (
+    0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25,
+    0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0, 120.0,
+)
+
+
+class Histogram:
+    """Fixed-bucket histogram: O(len(bounds)) memory forever.
+
+    ``bounds`` are inclusive upper edges; values above the last bound
+    land in the implicit ``+Inf`` bucket.  ``bucket_counts`` yields
+    per-bucket (non-cumulative) counts for the finite bounds — the
+    Prometheus exporter accumulates them into cumulative ``le`` series.
+    """
+
+    __slots__ = ("bounds", "counts", "total", "sum")
+
+    def __init__(self, bounds: Sequence[float] = LATENCY_BUCKETS):
+        self.bounds = tuple(float(b) for b in bounds)
+        self.counts = [0] * (len(self.bounds) + 1)  # +1: the +Inf bucket
+        self.total = 0
+        self.sum = 0.0
+
+    def observe(self, v: float) -> None:
+        """Count one sample."""
+        i = 0
+        for b in self.bounds:
+            if v <= b:
+                break
+            i += 1
+        self.counts[i] += 1
+        self.total += 1
+        self.sum += v
+
+    def bucket_counts(self) -> List[tuple]:
+        """Per-bucket ``(upper_bound, count)`` pairs for finite bounds."""
+        return list(zip(self.bounds, self.counts[:-1]))
+
+
+class BoundedSeries:
+    """Latency series with bounded memory.
+
+    Short runs (benchmarks, tests) keep every sample exactly; past
+    ``exact_cap`` samples the storage degrades to a deterministic
+    Algorithm-R reservoir of ``reservoir`` samples, while a fixed-bucket
+    :class:`Histogram` keeps exact counts/sum forever.  ``percentile``
+    answers from whichever representation is live; ``mean`` and ``sum``
+    are always exact (from the histogram accumulators).
+
+    Duck-types the old ``List[float]`` usage: ``append``, ``len()``,
+    truthiness, and iteration (over the stored sample) keep working.
+    """
+
+    __slots__ = ("exact_cap", "reservoir", "hist", "_sample", "_rng")
+
+    def __init__(self, exact_cap: int = 4096, reservoir: int = 1024,
+                 bounds: Sequence[float] = LATENCY_BUCKETS):
+        self.exact_cap = int(exact_cap)
+        self.reservoir = min(int(reservoir), self.exact_cap)
+        self.hist = Histogram(bounds)
+        self._sample: List[float] = []
+        self._rng = random.Random(0x5EED)  # deterministic across runs
+
+    @property
+    def count(self) -> int:
+        """Total samples observed (exact, never truncated)."""
+        return self.hist.total
+
+    @property
+    def sum(self) -> float:
+        """Exact sum of all samples observed."""
+        return self.hist.sum
+
+    @property
+    def mean(self) -> float:
+        """Exact mean of all samples observed (NaN when empty)."""
+        n = self.hist.total
+        return self.hist.sum / n if n else float("nan")
+
+    @property
+    def exact(self) -> bool:
+        """Whether the stored sample still holds every observation."""
+        return self.hist.total <= self.exact_cap
+
+    def append(self, v: float) -> None:
+        """Observe one sample (list-compatible name)."""
+        v = float(v)
+        self.hist.observe(v)
+        n = self.hist.total
+        if n <= self.exact_cap:
+            self._sample.append(v)
+            return
+        if n == self.exact_cap + 1:
+            # first overflow: collapse the exact list to a seeded
+            # uniform subsample, then run standard Algorithm R
+            self._sample = self._rng.sample(self._sample, self.reservoir)
+        j = self._rng.randrange(n)
+        if j < self.reservoir:
+            self._sample[j] = v
+
+    def percentile(self, q: float) -> float:
+        """Nearest-rank percentile from the exact list or the reservoir."""
+        if not self._sample:
+            return float("nan")
+        ys = sorted(self._sample)
+        k = min(len(ys) - 1, max(0, int(round(q / 100.0 * (len(ys) - 1)))))
+        return ys[k]
+
+    def __len__(self) -> int:
+        return self.hist.total
+
+    def __iter__(self) -> Iterator[float]:
+        return iter(self._sample)
 
 
 @dataclass
@@ -62,9 +187,9 @@ class ServeStats:
     queue_depth_sum: int = 0
     queue_depth_max: int = 0
     slot_busy_sum: int = 0
-    ttft: List[float] = field(default_factory=list)
-    tpot: List[float] = field(default_factory=list)
-    latency: List[float] = field(default_factory=list)
+    ttft: BoundedSeries = field(default_factory=BoundedSeries)
+    tpot: BoundedSeries = field(default_factory=BoundedSeries)
+    latency: BoundedSeries = field(default_factory=BoundedSeries)
     started: Optional[float] = None
     finished: Optional[float] = None
 
@@ -130,17 +255,16 @@ class ServeStats:
             "ragged_splits": self.ragged_splits,
             "hot_swaps": self.hot_swaps,
             "wall_s": wall,
-            "requests_per_s": self.completed / wall,
-            "tokens_per_s": self.decode_tokens / wall,
-            "ttft_mean_s": (sum(self.ttft) / len(self.ttft))
-            if self.ttft else float("nan"),
-            "ttft_p95_s": percentile(self.ttft, 95),
-            "tpot_mean_s": (sum(self.tpot) / len(self.tpot))
-            if self.tpot else float("nan"),
-            "tpot_p95_s": percentile(self.tpot, 95),
-            "latency_mean_s": (sum(self.latency) / len(self.latency))
-            if self.latency else float("nan"),
-            "latency_p95_s": percentile(self.latency, 95),
+            # wall is 0.0 before the first step: a /metrics scrape of an
+            # idle gateway must not divide by zero
+            "requests_per_s": self.completed / max(wall, 1e-9),
+            "tokens_per_s": self.decode_tokens / max(wall, 1e-9),
+            "ttft_mean_s": self.ttft.mean,
+            "ttft_p95_s": self.ttft.percentile(95),
+            "tpot_mean_s": self.tpot.mean,
+            "tpot_p95_s": self.tpot.percentile(95),
+            "latency_mean_s": self.latency.mean,
+            "latency_p95_s": self.latency.percentile(95),
             "queue_depth_mean": self.queue_depth_sum / max(self.steps, 1),
             "queue_depth_max": self.queue_depth_max,
             "slot_occupancy": occ,
@@ -148,8 +272,17 @@ class ServeStats:
 
     def report(self, log: Callable[[str], None] = print,
                prefix: str = "[serve]"):
-        """Print the human-readable ``[serve]`` summary via ``log``."""
+        """Print the human-readable ``[serve]`` summary via ``log``.
+
+        When ``--log-json`` is active (``telemetry.enable_json_logs``),
+        the same summary also goes out as one machine-parseable JSON
+        record.
+        """
         d = self.as_dict()
+        from repro.serve import telemetry  # local import: no cycle
+
+        if telemetry.json_logs_enabled():
+            telemetry.log_event("serve_report", **d)
         log(f"{prefix} requests: submitted={d['submitted']} "
             f"completed={d['completed']} rejected={d['rejected']} "
             f"hot_swaps={d['hot_swaps']}")

@@ -74,6 +74,7 @@ from repro.models import lm
 from repro.serve.kv_cache import PagedLayout, SlotLayout, blocks_for
 from repro.serve.metrics import ServeStats
 from repro.serve.session import DecodeSession
+from repro.serve.telemetry import ServeTelemetry, log_event
 
 
 class Overloaded(RuntimeError):
@@ -149,7 +150,9 @@ class Scheduler:
                  draft_cfg: Optional[ModelConfig] = None,
                  spec_fused: bool = True,
                  spec_adapt: bool = False,
-                 max_queue: Optional[int] = None):
+                 max_queue: Optional[int] = None,
+                 telemetry: bool = True,
+                 trace_capacity: int = 8192):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -247,6 +250,13 @@ class Scheduler:
         self.spec_k_by_rid: Dict[Any, int] = {}
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = ServeStats(slots=num_slots)
+        # request tracing + phase attribution + profiler window;
+        # telemetry=False keeps the counters but drops the spans
+        self.telemetry = ServeTelemetry(enabled=telemetry,
+                                        trace_capacity=trace_capacity)
+        # rank -> latest follower stats snapshot (mesh aggregation;
+        # stays {} on a single-process scheduler)
+        self.remote_stats: Dict[int, dict] = {}
         self._pending_params = None
         self._head_share = None
         self._step_count = 0
@@ -315,6 +325,8 @@ class Scheduler:
         self.stats.submitted += 1
         req._submit_t = time.perf_counter()   # TTFT includes queueing delay
         self.queue.append(req)
+        self.telemetry.req_instant(req.rid, "enqueue", t=req._submit_t,
+                                   queue_depth=len(self.queue))
 
     # -- scheduling ---------------------------------------------------------
     def _bucket(self, n: int, cap: Optional[int] = None,
@@ -355,6 +367,9 @@ class Scheduler:
         decisions are broadcast)."""
         P = req.prompt_len
         total = P + req.max_new
+        now = time.perf_counter()
+        self.telemetry.req_span(req.rid, "queued",
+                                getattr(req, "_submit_t", None), now)
         if not self.paged:
             slot = self.pool.admit(req.rid, total)
             self._admit_draft(req, slot, total)
@@ -362,6 +377,7 @@ class Scheduler:
                 req, "_submit_t", time.perf_counter()))
             self._spec_k[slot] = max(self.spec_tokens, 1)
             self._pending_onepass.append(act)
+            self.telemetry.req_instant(req.rid, "admit", t=now, slot=slot)
             return
         head = getattr(self, "_head_share", None)
         shared = head[1] if head is not None and head[0] == req.rid \
@@ -375,6 +391,8 @@ class Scheduler:
                       submit_t=getattr(req, "_submit_t",
                                        time.perf_counter()))
         self._spec_k[slot] = max(self.spec_tokens, 1)
+        self.telemetry.req_instant(req.rid, "admit", t=now, slot=slot,
+                                   shared_prefix_tokens=shared_len)
         if self._chunked:
             # chunk slices run in _prefill_step, interleaved with decode
             self.prefilling[req.rid] = act
@@ -404,7 +422,10 @@ class Scheduler:
         req = act.req
         P = req.prompt_len
         bucket = self._bucket(P)
+        t0 = time.perf_counter()
         last = self.session.prefill(req.rid, req.prompt, bucket=bucket)
+        self.telemetry.req_span(req.rid, "prefill", t0, time.perf_counter(),
+                                tokens=P, bucket=bucket)
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += bucket
@@ -415,7 +436,10 @@ class Scheduler:
         hybrid families: their state cannot resume mid-prompt)."""
         req = act.req
         P = req.prompt_len
+        t0 = time.perf_counter()
         last = self.session.prefill(req.rid, req.prompt, bucket=None)
+        self.telemetry.req_span(req.rid, "prefill", t0, time.perf_counter(),
+                                tokens=P)
         self.stats.prefills += 1
         self.stats.prefill_tokens += P
         self.stats.padded_prefill_tokens += P
@@ -444,9 +468,13 @@ class Scheduler:
             else self._bucket(n, cap=chunk)
         self.pool.ensure(req.rid, act.pf_pos + n)
         W = self._table_bucket(act.pf_pos + n)
+        t0 = time.perf_counter()
         last = self.session.prefill_chunk(
             req.rid, req.prompt[act.pf_pos:act.pf_pos + n],
             hist_len=act.pf_pos, prompt_len=P, chunk_bucket=Cb, width=W)
+        self.telemetry.req_span(
+            req.rid, "prefill_chunk", t0, time.perf_counter(),
+            tokens=n, pos=act.pf_pos, prompt_len=P)
         act.pf_pos += n
         self.stats.prefills += 1
         self.stats.prefill_chunks += 1
@@ -470,6 +498,9 @@ class Scheduler:
         tok = self._sample(last_logits, req, 0)
         act.first_token_t = time.perf_counter()
         self.stats.ttft.append(act.first_token_t - act.submit_t)
+        self.telemetry.req_instant(
+            req.rid, "first_token", t=act.first_token_t,
+            ttft_s=act.first_token_t - act.submit_t)
         self._accept_token(act, tok)
 
     def _sample(self, logits_row, req: Request, ntok: int) -> int:
@@ -516,6 +547,8 @@ class Scheduler:
         if act.req.tpot_deadline_ms is not None and tpot is not None \
                 and tpot * 1e3 > act.req.tpot_deadline_ms:
             self.stats.tpot_deadline_misses += 1
+        self.telemetry.terminal(rid, "finish", t=now, ntok=act.ntok,
+                                latency_s=now - act.submit_t)
         slot = self.pool.release(rid)
         if self.draft is not None:
             self.draft.layout.release(rid)
@@ -587,6 +620,9 @@ class Scheduler:
             self._index[slot] = self._idle_index
         if self._head_share is not None and self._head_share[0] == rid:
             self._head_share = None
+        kind = "shed" if reason == "deadline" else "cancel"
+        self.telemetry.terminal(rid, kind, reason=reason)
+        log_event(kind, rid=rid, reason=reason)
         if reason == "deadline":
             self.stats.shed_deadline += 1
         else:
@@ -604,6 +640,10 @@ class Scheduler:
             self.pool.invalidate_prefix()
             self._head_share = None
         self.stats.hot_swaps += 1
+        self.telemetry.event("hot_swap", step=self._step_count,
+                             swaps=self.stats.hot_swaps)
+        log_event("hot_swap", step=self._step_count,
+                  swaps=self.stats.hot_swaps)
 
     @property
     def draining(self) -> bool:
@@ -681,18 +721,45 @@ class Scheduler:
             else:
                 self._decode_round()
 
+    def _timed_phases(self) -> None:
+        """Run admission → prefill → decode with per-phase wall-time
+        attribution (``telemetry.phase_seconds`` + step-timeline spans;
+        spans are emitted only for phases that had work)."""
+        tel = self.telemetry
+        t0 = time.perf_counter()
+        admitted = self._admission_phase()
+        t1 = time.perf_counter()
+        tel.phase("admit", t0, t1, emit=bool(admitted))
+        had_pf = bool(self._pending_draft or self._pending_onepass
+                      or self.prefilling)
+        t0 = t1
+        self._prefill_phase()
+        t1 = time.perf_counter()
+        tel.phase("prefill", t0, t1, emit=had_pf)
+        had_dec = bool(self.active)
+        t0 = t1
+        self._decode_phase()
+        tel.phase("decode", t0, time.perf_counter(), emit=had_dec)
+
+    def profile_steps(self, steps: int, outdir: str) -> None:
+        """Arm ``jax.profiler`` around the next ``steps`` scheduler
+        steps (``--profile-steps`` / ``POST /debug/profile``): the
+        trace starts at the next :meth:`step` and stops after the
+        window closes; artifacts land under ``outdir``."""
+        self.telemetry.arm_profile(steps, outdir)
+
     def step(self) -> None:
         """One scheduler iteration: hot-swap check, admission, chunked
         prefill, one batched decode (or speculative) round,
         completion."""
         self.stats.start()
+        self.telemetry.step_begin(self._step_count + 1)
         self._maybe_hot_swap()
         self._step_count += 1
-        self._admission_phase()
-        self._prefill_phase()
-        self._decode_phase()
+        self._timed_phases()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
+        self.telemetry.step_end()
 
     # -- plain decode --------------------------------------------------------
     def _ensure_decode_pages(self, pool, last_token_pos: Dict[int, int]
@@ -833,6 +900,7 @@ class Scheduler:
         ntok0 = {act.slot: act.ntok for act in acts}
 
         d_snap = self.draft.snapshot() if d_rec else ()
+        t_draft = time.perf_counter()
         if self.spec_fused:
             # -- fused draft: ONE dispatch for the whole block
             dlogits, dev = self.draft.draft_block(
@@ -865,11 +933,14 @@ class Scheduler:
                         block[s, t + 1] = self._sample(rows[s, 0], act.req,
                                                        ntok0[s] + t)
             dev = block          # the drafter was fed the host block
+        t_verify = time.perf_counter()
+        self.telemetry.phase("draft", t_draft, t_verify, k=Kv - 1)
 
         # -- target: verify the whole block in one K-token step
         t_snap = self.session.snapshot() if t_rec else ()
         vlogits = self.session.step(block, base, valid=cap, width=W)
         rows = np.asarray(vlogits.astype(jnp.float32))   # (B, Kv, V)
+        self.telemetry.phase("verify", t_verify, time.perf_counter(), k=Kv)
         self.stats.decode_steps += 1
         self.stats.spec_rounds += 1
         self.stats.decode_slot_steps += B

@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.icf_cyclegan import CycleGANConfig
 from repro.models import icf_cyclegan as cg
 from repro.serve.metrics import ServeStats
+from repro.serve.telemetry import ServeTelemetry
 
 # a staged micro-batch: (taken queue items, true rows, padded array)
 _Staged = Tuple[List[Tuple[Any, np.ndarray, float]], int, np.ndarray]
@@ -41,7 +42,8 @@ class SurrogateEngine:
     """Micro-batching front end over the jitted surrogate forward."""
 
     def __init__(self, cfg: CycleGANConfig, params, max_batch: int = 64,
-                 bucket: int = 8, registry=None, watch_every: int = 0):
+                 bucket: int = 8, registry=None, watch_every: int = 0,
+                 telemetry: bool = True):
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -52,6 +54,7 @@ class SurrogateEngine:
         self.queue: deque[Tuple[Any, np.ndarray, float]] = deque()
         self.results: Dict[Any, np.ndarray] = {}
         self.stats = ServeStats(slots=max_batch)
+        self.telemetry = ServeTelemetry(enabled=telemetry)
         self._step_count = 0
         # software pipeline state: the batch staged for the next
         # dispatch, and the batch whose device compute is in flight
@@ -68,7 +71,10 @@ class SurrogateEngine:
                 f"query {rid!r}: expected (n, {self.cfg.input_dim}), "
                 f"got {x.shape}")
         self.stats.submitted += 1
-        self.queue.append((rid, x, time.perf_counter()))
+        t0 = time.perf_counter()
+        self.queue.append((rid, x, t0))
+        self.telemetry.req_instant(rid, "enqueue", t=t0,
+                                   rows=int(x.shape[0]))
 
     def _pad(self, n: int) -> int:
         b = self.bucket
@@ -107,8 +113,10 @@ class SurrogateEngine:
         """Block on the in-flight forward and distribute its results."""
         taken, rows, padded, y = self._pending
         self._pending = None
+        tc = time.perf_counter()
         y = np.asarray(y.astype(jnp.float32))
         now = time.perf_counter()
+        self.telemetry.phase("surrogate_collect", tc, now, rows=rows)
         off = 0
         for rid, q, t0 in taken:
             n = q.shape[0]
@@ -117,6 +125,8 @@ class SurrogateEngine:
             self.stats.completed += 1
             self.stats.ttft.append(now - t0)
             self.stats.latency.append(now - t0)
+            self.telemetry.terminal(rid, "finish", t=now,
+                                    latency_s=now - t0, rows=n)
         self.stats.prefills += 1
         self.stats.prefill_tokens += rows       # true query rows
         self.stats.padded_prefill_tokens += padded

@@ -1,0 +1,573 @@
+"""Serving telemetry: request tracing, Prometheus export, profiler hooks.
+
+This module is the observability substrate for the serving stack:
+
+* :class:`Tracer` — a bounded ring buffer of Chrome-trace events.  The
+  scheduler emits one span chain per request (``enqueue`` → ``queued``
+  → ``prefill`` chunk(s) → ``first_token`` → ``finish``/``shed``/
+  ``cancel``) plus per-step phase spans; :func:`write_trace` or the
+  gateway's ``GET /debug/trace`` export the buffer as Chrome-trace /
+  Perfetto JSON so one file explains any slow request.
+* :class:`ServeTelemetry` — the per-scheduler façade: owns the tracer,
+  accumulates per-phase wall time (``prefill`` / ``decode`` / ``draft``
+  / ``verify`` …), and arms :func:`jax.profiler.start_trace` around a
+  step window (``POST /debug/profile`` / ``--profile-steps``).
+* :func:`prometheus_text` / :func:`scheduler_prometheus` — Prometheus
+  text-format (0.0.4) exposition of every ``[serve]`` counter, the
+  bounded latency histograms, per-``data``-shard page-pool occupancy,
+  and per-rank series aggregated from mesh followers.
+* :func:`stats_snapshot` — the compact JSON stats delta followers ship
+  to host 0 each step over the plan channel's ``gather``.
+* :func:`enable_json_logs` / :func:`log_event` — one-line structured
+  JSON log records (``--log-json``) for report lines and
+  hot-swap/shed events.
+
+Everything here is stdlib + jax; nothing imports the scheduler, so the
+scheduler (and metrics) can import this module freely.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+from collections import deque
+from contextlib import contextmanager
+from typing import Any, Dict, Iterator, List, Optional
+
+__all__ = [
+    "Tracer",
+    "ServeTelemetry",
+    "prometheus_text",
+    "scheduler_prometheus",
+    "stats_snapshot",
+    "write_trace",
+    "enable_json_logs",
+    "json_logs_enabled",
+    "log_event",
+]
+
+# Chrome-trace identifiers: one fake process, tid 0 for scheduler-level
+# events, tid 1.. assigned per request id in order of first sighting.
+_TRACE_PID = 1
+SCHED_TID = 0
+
+
+class Tracer:
+    """Bounded ring buffer of Chrome-trace events.
+
+    Events follow the Chrome trace-event JSON schema (``ph`` = ``"X"``
+    complete spans, ``"i"`` instant events, ``"M"`` metadata);
+    timestamps are microseconds from a per-tracer ``perf_counter``
+    epoch.  The buffer is a ``deque(maxlen=capacity)`` so a long-running
+    gateway holds at most ``capacity`` events; ``dropped`` counts how
+    many were evicted.
+    """
+
+    def __init__(self, capacity: int = 8192):
+        self.capacity = int(capacity)
+        self.events: deque = deque(maxlen=self.capacity)
+        self.epoch = time.perf_counter()
+        self.emitted = 0  # total events ever emitted (dropped = emitted - len)
+        self._tids: Dict[str, int] = {}  # str(rid) -> tid
+        self._next_tid = SCHED_TID + 1
+        self._meta: List[dict] = [
+            {
+                "name": "thread_name",
+                "ph": "M",
+                "pid": _TRACE_PID,
+                "tid": SCHED_TID,
+                "args": {"name": "scheduler"},
+            }
+        ]
+
+    @property
+    def dropped(self) -> int:
+        """Events evicted from the ring so far."""
+        return self.emitted - len(self.events)
+
+    def _ts(self, t: float) -> float:
+        """Convert a ``perf_counter`` reading to trace microseconds."""
+        return (t - self.epoch) * 1e6
+
+    def _tid(self, rid: Any) -> int:
+        """Stable numeric thread id for a request id (lazily assigned)."""
+        key = str(rid)
+        tid = self._tids.get(key)
+        if tid is None:
+            # keep the rid->tid map bounded alongside the ring
+            if len(self._tids) >= 4 * self.capacity:
+                self._tids.clear()
+            tid = self._next_tid
+            self._next_tid += 1
+            self._tids[key] = tid
+            self._meta.append(
+                {
+                    "name": "thread_name",
+                    "ph": "M",
+                    "pid": _TRACE_PID,
+                    "tid": tid,
+                    "args": {"name": f"req {key}"},
+                }
+            )
+            if len(self._meta) > 4 * self.capacity:
+                del self._meta[1 : len(self._meta) // 2]
+        return tid
+
+    def _push(self, ev: dict) -> None:
+        self.events.append(ev)
+        self.emitted += 1
+
+    def complete(
+        self, name: str, tid: int, t0: float, t1: float, **args: Any
+    ) -> None:
+        """Record a complete span (``ph: X``) on a numeric tid."""
+        self._push(
+            {
+                "name": name,
+                "ph": "X",
+                "ts": self._ts(t0),
+                "dur": max(0.0, (t1 - t0) * 1e6),
+                "pid": _TRACE_PID,
+                "tid": tid,
+                "args": args,
+            }
+        )
+
+    def instant(
+        self, name: str, tid: int, t: Optional[float] = None, **args: Any
+    ) -> None:
+        """Record an instant event (``ph: i``) on a numeric tid."""
+        self._push(
+            {
+                "name": name,
+                "ph": "i",
+                "s": "t",
+                "ts": self._ts(time.perf_counter() if t is None else t),
+                "pid": _TRACE_PID,
+                "tid": tid,
+                "args": args,
+            }
+        )
+
+    def req_span(
+        self, name: str, rid: Any, t0: float, t1: float, **args: Any
+    ) -> None:
+        """Record a complete span on the request's own trace row."""
+        self.complete(name, self._tid(rid), t0, t1, rid=str(rid), **args)
+
+    def req_instant(
+        self, name: str, rid: Any, t: Optional[float] = None, **args: Any
+    ) -> None:
+        """Record an instant event on the request's own trace row."""
+        self.instant(name, self._tid(rid), t, rid=str(rid), **args)
+
+    def export(self) -> dict:
+        """Export the buffer as a Chrome-trace JSON object."""
+        return {
+            "traceEvents": self._meta + list(self.events),
+            "displayTimeUnit": "ms",
+            "otherData": {
+                "emitted": self.emitted,
+                "dropped": self.dropped,
+                "capacity": self.capacity,
+            },
+        }
+
+
+def write_trace(tracer: Tracer, path: str) -> None:
+    """Write a tracer's Chrome-trace JSON export to ``path``."""
+    with open(path, "w") as f:
+        json.dump(tracer.export(), f)
+
+
+class ServeTelemetry:
+    """Per-scheduler telemetry: tracer + phase attribution + profiler.
+
+    ``enabled=False`` turns tracing and phase spans into no-ops (the
+    cheap counters in :class:`~repro.serve.metrics.ServeStats` stay on);
+    the profiler window works regardless so ``--profile-steps`` composes
+    with ``--no-telemetry``.
+    """
+
+    def __init__(self, enabled: bool = True, trace_capacity: int = 8192):
+        self.enabled = bool(enabled)
+        self.tracer = Tracer(trace_capacity)
+        # cumulative wall seconds per phase: prefill / decode / draft /
+        # verify / admit — the step-timeline attribution profiler runs
+        # are cross-checked against
+        self.phase_seconds: Dict[str, float] = {}
+        self.phase_calls: Dict[str, int] = {}
+        self._profile_req: Optional[tuple] = None  # (steps, outdir)
+        self._profile_active = False
+        self._profile_left = 0
+        self._profile_dir: Optional[str] = None
+        self.profiles_taken = 0
+        self.profile_error: Optional[str] = None
+
+    # ---- request lifecycle ------------------------------------------------
+
+    def req_instant(self, rid: Any, name: str, t: Optional[float] = None,
+                    **args: Any) -> None:
+        """Emit an instant event on the request's trace row (if enabled)."""
+        if self.enabled:
+            self.tracer.req_instant(name, rid, t, **args)
+
+    def req_span(self, rid: Any, name: str, t0: Optional[float], t1: float,
+                 **args: Any) -> None:
+        """Emit a complete span on the request's trace row (if enabled)."""
+        if self.enabled and t0 is not None:
+            self.tracer.req_span(name, rid, t0, t1, **args)
+
+    def terminal(self, rid: Any, kind: str, t: Optional[float] = None,
+                 **args: Any) -> None:
+        """Emit the request's terminal instant: finish / shed / cancel."""
+        if self.enabled:
+            self.tracer.req_instant(kind, rid, t, terminal=True, **args)
+
+    def event(self, name: str, **args: Any) -> None:
+        """Emit a scheduler-level instant event (hot swap, drain, …)."""
+        if self.enabled:
+            self.tracer.instant(name, SCHED_TID, **args)
+
+    # ---- per-step phase attribution ---------------------------------------
+
+    def phase(self, name: str, t0: float, t1: float, emit: bool = True,
+              **args: Any) -> None:
+        """Accumulate phase wall time; optionally emit a scheduler span."""
+        dur = max(0.0, t1 - t0)
+        self.phase_seconds[name] = self.phase_seconds.get(name, 0.0) + dur
+        self.phase_calls[name] = self.phase_calls.get(name, 0) + 1
+        if self.enabled and emit:
+            self.tracer.complete(name, SCHED_TID, t0, t1, **args)
+
+    @contextmanager
+    def timed_phase(self, name: str, emit: bool = True,
+                    **args: Any) -> Iterator[None]:
+        """Context manager sugar around :meth:`phase`."""
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self.phase(name, t0, time.perf_counter(), emit=emit, **args)
+
+    # ---- jax profiler window ----------------------------------------------
+
+    def arm_profile(self, steps: int, outdir: str) -> None:
+        """Arm ``jax.profiler`` around the next ``steps`` scheduler steps."""
+        self._profile_req = (max(1, int(steps)), str(outdir))
+
+    def profile_armed(self) -> bool:
+        """Whether a profile window is pending or currently recording."""
+        return self._profile_req is not None or self._profile_active
+
+    def step_begin(self, step: int) -> None:
+        """Scheduler-step hook: start the profiler if a window is armed."""
+        if self._profile_req is None or self._profile_active:
+            return
+        steps, outdir = self._profile_req
+        self._profile_req = None
+        try:
+            import jax
+
+            jax.profiler.start_trace(outdir)
+        except Exception as e:  # pragma: no cover - backend-dependent
+            self.profile_error = f"{type(e).__name__}: {e}"
+            log_event("profile_error", error=self.profile_error)
+            return
+        self._profile_active = True
+        self._profile_left = steps
+        self._profile_dir = outdir
+        log_event("profile_start", steps=steps, dir=outdir, step=step)
+
+    def step_end(self) -> None:
+        """Scheduler-step hook: stop the profiler when the window closes."""
+        if not self._profile_active:
+            return
+        self._profile_left -= 1
+        if self._profile_left > 0:
+            return
+        self._profile_active = False
+        try:
+            import jax
+
+            jax.profiler.stop_trace()
+        except Exception as e:  # pragma: no cover - backend-dependent
+            self.profile_error = f"{type(e).__name__}: {e}"
+            log_event("profile_error", error=self.profile_error)
+            return
+        self.profiles_taken += 1
+        log_event("profile_done", dir=self._profile_dir,
+                  phase_seconds=dict(self.phase_seconds))
+
+
+# ---- structured JSON logs -------------------------------------------------
+
+_JSON_LOGS = {"enabled": False}
+
+
+def enable_json_logs(enabled: bool = True) -> None:
+    """Globally enable/disable one-line JSON log records (``--log-json``)."""
+    _JSON_LOGS["enabled"] = bool(enabled)
+
+
+def json_logs_enabled() -> bool:
+    """Whether JSON log records are currently enabled."""
+    return bool(_JSON_LOGS["enabled"])
+
+
+def _json_safe(v: Any) -> Any:
+    """Coerce a value to something ``json.dumps`` emits as valid JSON."""
+    if isinstance(v, float) and not math.isfinite(v):
+        return None
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {str(k): _json_safe(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_json_safe(x) for x in v]
+    return str(v)
+
+
+def log_event(event: str, **fields: Any) -> None:
+    """Emit one JSON log line (monotonic + unix timestamps) if enabled."""
+    if not _JSON_LOGS["enabled"]:
+        return
+    rec = {"event": event, "ts_monotonic": time.monotonic(),
+           "ts_unix": time.time()}
+    rec.update({k: _json_safe(v) for k, v in fields.items()})
+    sys.stdout.write(json.dumps(rec, allow_nan=False) + "\n")
+    sys.stdout.flush()
+
+
+# ---- mesh stats snapshot --------------------------------------------------
+
+# every [serve] counter a follower ships to host 0 (and prometheus
+# exports per rank); gauges (queue/slots/pool) ride alongside
+_SNAPSHOT_COUNTERS = (
+    "submitted",
+    "completed",
+    "rejected",
+    "shed_overload",
+    "shed_deadline",
+    "cancelled",
+    "ttft_deadline_misses",
+    "tpot_deadline_misses",
+    "prefills",
+    "prefill_chunks",
+    "prefill_tokens",
+    "padded_prefill_tokens",
+    "decode_steps",
+    "decode_tokens",
+    "decode_slot_steps",
+    "ragged_splits",
+    "spec_rounds",
+    "spec_draft_steps",
+    "spec_draft_proposed",
+    "spec_draft_accepted",
+    "spec_replays",
+    "steps",
+    "hot_swaps",
+)
+
+
+def _pool_shards(sched: Any) -> List[dict]:
+    """Per-``data``-shard block-manager dicts for a scheduler's pool."""
+    pool = getattr(sched, "pool", None)
+    if pool is None:
+        return []
+    shards = getattr(pool, "shards", None)
+    if shards:
+        return [sh.blocks.as_dict() for sh in shards]
+    blocks = getattr(pool, "blocks", None)
+    return [blocks.as_dict()] if blocks is not None else []
+
+
+def stats_snapshot(sched: Any, rank: int = 0) -> dict:
+    """Compact per-process stats delta for mesh-wide aggregation.
+
+    Followers JSON-encode this and ship it to host 0 on the plan
+    channel's ``gather`` path each step; host 0 keeps the latest
+    snapshot per rank in ``sched.remote_stats`` and the Prometheus
+    export emits it as per-rank series.
+    """
+    s = sched.stats
+    snap: Dict[str, Any] = {"rank": int(rank)}
+    for k in _SNAPSHOT_COUNTERS:
+        snap[k] = int(getattr(s, k, 0))
+    snap["queue_depth"] = len(getattr(sched, "queue", ()))
+    snap["slots_busy"] = len(getattr(sched, "active", ())) + len(
+        getattr(sched, "prefilling", ())
+    )
+    snap["shards"] = _pool_shards(sched)
+    return snap
+
+
+# ---- prometheus exposition ------------------------------------------------
+
+_PREFIX = "repro_serve_"
+
+_COUNTER_HELP = {
+    "submitted": "requests submitted",
+    "completed": "requests completed",
+    "rejected": "requests rejected at submit (queue full)",
+    "shed_overload": "requests shed for overload",
+    "shed_deadline": "queued requests shed on expired TTFT deadline",
+    "cancelled": "requests cancelled",
+    "ttft_deadline_misses": "completions whose first token was late",
+    "tpot_deadline_misses": "completions whose mean TPOT was over budget",
+    "prefills": "prefill dispatches",
+    "prefill_chunks": "chunked-prefill slices",
+    "prefill_tokens": "prompt tokens prefilled",
+    "padded_prefill_tokens": "prompt tokens incl. bucket padding",
+    "decode_steps": "batched decode steps",
+    "decode_tokens": "tokens decoded",
+    "decode_slot_steps": "per-slot decode steps",
+    "ragged_splits": "ragged gather-width split dispatches",
+    "spec_rounds": "speculative verify rounds",
+    "spec_draft_steps": "drafter decode dispatches",
+    "spec_draft_proposed": "draft tokens proposed",
+    "spec_draft_accepted": "draft tokens accepted",
+    "spec_replays": "speculative rollback replay steps",
+    "steps": "scheduler steps",
+    "hot_swaps": "weight hot swaps applied",
+}
+
+_SHARD_GAUGES = {
+    "used_blocks": "KV pages currently allocated",
+    "committed_blocks": "KV pages reserved by admitted requests",
+    "pinned_blocks": "KV pages pinned by the prefix pin tier",
+    "high_water_blocks": "peak KV pages allocated",
+    "num_blocks": "KV page capacity",
+}
+
+
+def _fmt(v: Any) -> str:
+    """Format a sample value per Prometheus text conventions."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if math.isnan(f):
+        return "NaN"
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
+
+
+def _hist_lines(out: List[str], name: str, help_: str, series: Any) -> None:
+    """Append one histogram family from a BoundedSeries to ``out``."""
+    out.append(f"# HELP {name} {help_}")
+    out.append(f"# TYPE {name} histogram")
+    cum = 0
+    for le, n in series.hist.bucket_counts():
+        cum += n
+        out.append(f'{name}_bucket{{le="{_fmt(le)}"}} {cum}')
+    out.append(f'{name}_bucket{{le="+Inf"}} {series.hist.total}')
+    out.append(f"{name}_sum {_fmt(series.hist.sum)}")
+    out.append(f"{name}_count {series.hist.total}")
+
+
+def prometheus_text(
+    stats: Any,
+    pool_shards: Optional[List[dict]] = None,
+    phase_seconds: Optional[Dict[str, float]] = None,
+    remote_stats: Optional[Dict[int, dict]] = None,
+    queue_depth: Optional[int] = None,
+    slots_busy: Optional[int] = None,
+) -> str:
+    """Render a ServeStats (+ pool/phase/mesh context) as Prometheus text.
+
+    Exposition format 0.0.4: ``# HELP`` / ``# TYPE`` per family,
+    counters suffixed ``_total``, latency histograms with cumulative
+    ``_bucket{le=...}`` + ``_sum`` + ``_count``, per-shard pool gauges
+    labelled ``{shard=...}``, and per-rank mesh series labelled
+    ``{rank=...}`` from the follower snapshots.
+    """
+    out: List[str] = []
+    for k, help_ in _COUNTER_HELP.items():
+        name = f"{_PREFIX}{k}_total"
+        out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} counter")
+        out.append(f"{name} {int(getattr(stats, k, 0))}")
+
+    wall = stats.wall
+    gauges = [
+        ("wall_seconds", "serving wall-clock seconds", wall),
+        ("slots", "decode slot capacity", getattr(stats, "slots", 0)),
+    ]
+    if queue_depth is not None:
+        gauges.append(("queue_depth", "requests waiting for admission",
+                       queue_depth))
+    if slots_busy is not None:
+        gauges.append(("slots_busy", "slots prefilling or decoding",
+                       slots_busy))
+    d = stats.as_dict()
+    for k in ("tokens_per_s", "requests_per_s", "spec_accept_rate",
+              "spec_k_mean", "queue_depth_mean", "slot_occupancy"):
+        v = d.get(k)
+        if v is not None:
+            gauges.append((k, k.replace("_", " "), v))
+    for k, help_, v in gauges:
+        name = f"{_PREFIX}{k}"
+        out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} gauge")
+        out.append(f"{name} {_fmt(v)}")
+
+    _hist_lines(out, f"{_PREFIX}ttft_seconds", "time to first token",
+                stats.ttft)
+    _hist_lines(out, f"{_PREFIX}tpot_seconds", "time per output token",
+                stats.tpot)
+    _hist_lines(out, f"{_PREFIX}latency_seconds", "request latency",
+                stats.latency)
+
+    if phase_seconds:
+        name = f"{_PREFIX}phase_seconds_total"
+        out.append(f"# HELP {name} cumulative wall seconds per step phase")
+        out.append(f"# TYPE {name} counter")
+        for ph in sorted(phase_seconds):
+            out.append(f'{name}{{phase="{ph}"}} {_fmt(phase_seconds[ph])}')
+
+    if pool_shards:
+        for k, help_ in _SHARD_GAUGES.items():
+            name = f"{_PREFIX}pool_{k}"
+            out.append(f"# HELP {name} {help_} (per data shard)")
+            out.append(f"# TYPE {name} gauge")
+            for i, sh in enumerate(pool_shards):
+                out.append(f'{name}{{shard="{i}"}} {int(sh.get(k, 0))}')
+
+    if remote_stats:
+        name = f"{_PREFIX}mesh"
+        out.append(f"# HELP {name}_counters per-rank mesh counters")
+        for k in _SNAPSHOT_COUNTERS:
+            fam = f"{name}_{k}_total"
+            out.append(f"# TYPE {fam} counter")
+            for rank in sorted(remote_stats):
+                snap = remote_stats[rank]
+                out.append(f'{fam}{{rank="{rank}"}} {int(snap.get(k, 0))}')
+        fam = f"{name}_pool_high_water_blocks"
+        out.append(f"# HELP {fam} peak KV pages per rank and data shard")
+        out.append(f"# TYPE {fam} gauge")
+        for rank in sorted(remote_stats):
+            for i, sh in enumerate(remote_stats[rank].get("shards", [])):
+                out.append(
+                    f'{fam}{{rank="{rank}",shard="{i}"}} '
+                    f"{int(sh.get('high_water_blocks', 0))}"
+                )
+    return "\n".join(out) + "\n"
+
+
+def scheduler_prometheus(sched: Any) -> str:
+    """Prometheus text for a live scheduler (stats + pool + mesh + phases)."""
+    tel = getattr(sched, "telemetry", None)
+    return prometheus_text(
+        sched.stats,
+        pool_shards=_pool_shards(sched),
+        phase_seconds=tel.phase_seconds if tel is not None else None,
+        remote_stats=getattr(sched, "remote_stats", None),
+        queue_depth=len(getattr(sched, "queue", ())),
+        slots_busy=len(getattr(sched, "active", ()))
+        + len(getattr(sched, "prefilling", ())),
+    )

@@ -72,6 +72,20 @@ def test_two_process_token_identity(tmp_path):
     # both processes saw the same scheduler trajectory
     assert b["stats"]["decode_steps"] == follower["stats"]["decode_steps"]
     assert b["stats"]["prefills"] == follower["stats"]["prefills"]
+    # mesh-wide stats aggregation: host-0's export covers every rank,
+    # and the gathered counters equal each process's own stats
+    ms = b["mesh_stats"]
+    assert sorted(ms) == ["0", "1"]
+    for rank, own in (("0", b), ("1", follower)):
+        for k in ("completed", "decode_steps", "prefills",
+                  "decode_tokens"):
+            assert ms[rank][k] == own["stats"][k], (rank, k)
+        assert ms[rank]["shards"][0]["high_water_blocks"] > 0
+    # the Prometheus sidecar host-0 writes covers both ranks
+    prom = open(two + ".prom").read()
+    assert prom.startswith("# HELP repro_serve_")
+    assert f'repro_serve_mesh_completed_total{{rank="1"}} ' \
+           f'{follower["stats"]["completed"]}' in prom
 
 
 @needs_loopback

@@ -65,7 +65,8 @@ def test_flags_doc_matches_argparse(mod):
 
 
 def test_docs_suite_exists_and_crosslinks():
-    pages = ["architecture.md", "serving.md", "deployment.md", "flags.md"]
+    pages = ["architecture.md", "serving.md", "deployment.md",
+             "observability.md", "flags.md"]
     for p in pages:
         path = os.path.join(DOCS, p)
         assert os.path.exists(path), f"docs/{p} missing"

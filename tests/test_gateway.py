@@ -34,10 +34,12 @@ def _prompt(cfg, n=8, seed=3):
 # -- raw HTTP client helpers (stdlib only, like the gateway itself) ---------
 
 
-async def _http(port, method, path, body=None, read_all=True):
+async def _http(port, method, path, body=None, read_all=True,
+                headers=None):
     r, w = await asyncio.open_connection("127.0.0.1", port)
     payload = json.dumps(body).encode() if body is not None else b""
-    w.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+    extra = "".join(f"{k}: {v}\r\n" for k, v in (headers or {}).items())
+    w.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n{extra}"
              f"Content-Length: {len(payload)}\r\n\r\n").encode() + payload)
     await w.drain()
     data = await r.read() if read_all else b""
@@ -138,7 +140,8 @@ def test_gateway_stream_matches_nonstream_and_orders_tokens(served):
         plain = await _http(gw.port, "POST", "/v1/generate",
                             {**body, "rid": "p", "stream": False})
         health = await _http(gw.port, "GET", "/healthz")
-        metrics = await _http(gw.port, "GET", "/metrics")
+        metrics = await _http(gw.port, "GET", "/metrics",
+                              headers={"Accept": "application/json"})
         missing = await _http(gw.port, "GET", "/nope")
         await gw.stop()
         return streamed, plain, health, metrics, missing
