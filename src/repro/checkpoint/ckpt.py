@@ -40,7 +40,12 @@ def _path_str(p) -> str:
 
 
 def save(path: str, tree, metadata: Optional[dict] = None):
-    """Atomic checkpoint write: <path>.tmp -> rename to <path>."""
+    """Atomic + durable checkpoint write: <path>.tmp, fsync, rename.
+
+    The fsync-before-rename matters for the serving registry's
+    transactional hot-swap: without it a machine crash can leave a
+    fully-renamed file with torn contents, which the atomic rename
+    alone does not protect against."""
     tmp = path + ".tmp"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     flat = _flatten(tree)
@@ -58,7 +63,15 @@ def save(path: str, tree, metadata: Optional[dict] = None):
     np.savez(tmp, __dtypes__=json.dumps(dtypes),
              __meta__=json.dumps(metadata or {}), **store)
     actual = tmp if os.path.exists(tmp) else tmp + ".npz"
+    with open(actual, "rb+") as f:
+        os.fsync(f.fileno())
     os.replace(actual, path)
+    try:                  # best-effort: make the rename itself durable
+        dfd = os.open(os.path.dirname(os.path.abspath(path)), os.O_RDONLY)
+        os.fsync(dfd)
+        os.close(dfd)
+    except OSError:
+        pass
 
 
 def restore(path: str, like) -> Tuple[Any, dict]:

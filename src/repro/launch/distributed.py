@@ -97,29 +97,98 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--out-json", default=None,
                     help="write {rid: tokens} + stats here (followers "
                          "append .p<rank>)")
+    # fault tolerance
+    ap.add_argument("--journal", default=None,
+                    help="host-0 write-ahead request journal (JSONL); "
+                         "restarted generations resume unfinished "
+                         "requests from it token-identically")
+    ap.add_argument("--resume-journal", default=None,
+                    help="replay a previous generation's --journal on "
+                         "host 0 before serving the trace")
+    ap.add_argument("--fault-spec", default=None,
+                    help="deterministic fault injection, comma list of "
+                         "kind@step[:key=val...] (kinds kill|crash|"
+                         "stall|corrupt|oom|disconnect; rank= picks "
+                         "the victim process, default 0) — stripped "
+                         "automatically on supervised restarts")
+    ap.add_argument("--restart-on-failure", type=int, default=0,
+                    help="spawn mode: on a worker failure, restart the "
+                         "whole job up to N times with a fresh "
+                         "coordinator, resuming from the previous "
+                         "generation's --journal")
     return ap
+
+
+def _strip_flags(argv: List[str], names) -> List[str]:
+    """Drop ``--flag value`` / ``--flag=value`` pairs from an argv."""
+    out, skip = [], False
+    for a in argv:
+        if skip:
+            skip = False
+            continue
+        if a.split("=", 1)[0] in names:
+            skip = "=" not in a
+            continue
+        out.append(a)
+    return out
 
 
 def spawn(args, argv: List[str]) -> int:
     """Launch ``--procs`` worker copies of this module and supervise
-    them: the first nonzero exit kills the remaining workers."""
+    them: the first nonzero exit kills the remaining workers.
+
+    With ``--restart-on-failure N`` a failed job is relaunched up to N
+    times: fresh coordinator port, ``--fault-spec`` stripped (the
+    drill already fired), and — when a ``--journal`` is attached —
+    the new generation resumes from the previous generation's journal
+    so the combined output is token-identical to an uninterrupted
+    run."""
     from repro.launch.serve import parse_lens  # no jax at import time
     from repro.serve.mesh import parse_mesh
 
     data, model = parse_mesh(args.mesh)
-    port = find_free_port()
-    coordinator = f"127.0.0.1:{port}"
-    # workers re-run this argv minus the spawn flag, plus topology
-    passthrough = [a for i, a in enumerate(argv)
-                   if not (a.startswith("--procs")
-                           or (i > 0 and argv[i - 1] == "--procs"
-                               and not a.startswith("--")))]
+    _ = parse_lens(args.prompt_lens)    # fail fast on a bad trace spec
     env = dict(os.environ)
     env["JAX_PLATFORMS"] = env.get("JAX_PLATFORMS", "cpu")
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") +
                         f" --xla_force_host_platform_device_count="
                         f"{data * model}").strip()
-    _ = parse_lens(args.prompt_lens)    # fail fast on a bad trace spec
+    # workers re-run this argv minus the spawn flag, plus topology
+    passthrough = _strip_flags(argv, ("--procs",))
+    restarts = max(0, int(getattr(args, "restart_on_failure", 0) or 0))
+    journal = getattr(args, "journal", None)
+    attempt = 0
+    while True:
+        extra: List[str] = []
+        if attempt > 0:
+            # the fault already fired; a restarted generation gets a
+            # clean spec, a fresh journal file and the previous
+            # generation's journal to resume from
+            extra = _strip_flags(
+                passthrough, ("--fault-spec", "--journal",
+                              "--resume-journal"))
+            if journal is not None:
+                prev = journal if attempt == 1 \
+                    else f"{journal}.r{attempt - 1}"
+                extra += ["--journal", f"{journal}.r{attempt}",
+                          "--resume-journal", prev]
+            status = _spawn_once(args, extra, env)
+        else:
+            status = _spawn_once(args, passthrough, env)
+        if status == 0 or attempt >= restarts:
+            return status
+        attempt += 1
+        print(f"[dist] worker failure (rc={status}); restarting the "
+              f"job (attempt {attempt}/{restarts})"
+              + (f", resuming from the generation-{attempt - 1} "
+                 f"journal" if journal else ""), flush=True)
+
+
+def _spawn_once(args, passthrough: List[str], env: dict) -> int:
+    """One supervised generation: launch the workers on a fresh
+    coordinator port, return the job's exit status."""
+    port = find_free_port()
+    coordinator = f"127.0.0.1:{port}"
     procs = []
     for rank in range(args.procs):
         cmd = [sys.executable, "-m", "repro.launch.distributed",
@@ -173,24 +242,57 @@ def run_worker(args) -> int:
     params, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
     lens = parse_lens(args.prompt_lens)
     max_len = args.max_len or max(lens) + args.max_new
+    journal = None
+    if args.journal and args.process_id == 0:
+        from repro.serve.journal import RequestJournal
+        journal = RequestJournal(args.journal)
+    faults = None
+    if args.fault_spec:
+        from repro.serve.faults import FaultInjector
+        faults = FaultInjector(args.fault_spec, rank=args.process_id)
     sched = MeshScheduler(
         cfg, params, mesh_shape=parse_mesh(args.mesh),
         local_mesh=args.num_processes > 1,
         step_timeout_s=args.step_timeout,
-        num_slots=args.slots, max_len=max_len)
+        num_slots=args.slots, max_len=max_len,
+        journal=journal, faults=faults)
     rank = jax.process_index()
     print(f"[dist] rank={rank}/{args.num_processes} arch={cfg.name} "
           f"mesh={args.mesh} feed={args.feed} slots={sched.pool.num_slots} "
           f"channel={type(sched.channel).__name__}", flush=True)
     reqs = build_requests(cfg, args.requests, lens, args.max_new,
                           temperature=args.temperature, seed=args.seed)
+    prefixes: dict = {}
+    resumed: set = set()
+    if rank == 0 and args.resume_journal:
+        from repro.serve import journal as journal_mod
+        entries = journal_mod.replay(args.resume_journal)
+        prefixes = journal_mod.resume_scheduler(sched, entries)
+        resumed = set(entries)
+        print(f"[dist] rank=0 journal: replayed {len(entries)} "
+              f"request(s) from {args.resume_journal} "
+              f"(requeued {sched.stats.journal_replayed} unfinished)",
+              flush=True)
     if rank == 0:
         for r in reqs:
+            if r.rid in resumed:    # the journal already owns this rid
+                continue
             sched.submit(r)
-        while sched.queue or sched.active or sched.prefilling:
-            sched.step()
+        try:
+            while sched.queue or sched.active or sched.prefilling:
+                sched.step()
+        except RuntimeError as e:
+            # confirmed peer death: make the in-flight state durable
+            # before dying so the restarted generation can resume
+            if journal is not None:
+                journal.record_note("peer_death", error=str(e)[:200])
+                journal.close()
+            raise
         sched.shutdown()
         results = sched.results
+        if prefixes:
+            from repro.serve import journal as journal_mod
+            results = journal_mod.stitched_results(results, prefixes)
     else:
         if args.feed == "replicated":
             # exercise the dedupe path: the plan's submits must be
@@ -198,6 +300,8 @@ def run_worker(args) -> int:
             for r in reqs:
                 sched.submit(r)
         results = sched.run_follower()
+    if journal is not None:
+        journal.close()
     sched.stats.stop()
     if rank == 0:
         sched.stats.report(prefix="[dist]")

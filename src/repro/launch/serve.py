@@ -20,6 +20,14 @@ door (:mod:`repro.serve.gateway`): requests arrive over ``POST
 /v1/generate``, admission is bounded by ``--max-queue`` (429 on
 overload), and tokens stream back as NDJSON chunks.
 
+Fault tolerance: ``--journal`` appends every admitted request and
+every decoded token to a write-ahead journal
+(:mod:`repro.serve.journal`); after a crash (or a SIGTERM-driven
+rolling restart of the gateway) the next generation passes
+``--resume-journal`` and resumes every unfinished request
+**token-identically**.  ``--fault-spec`` arms the deterministic
+fault-injection harness (:mod:`repro.serve.faults`) for crash drills.
+
   python -m repro.launch.serve --arch qwen3-0.6b --smoke --requests 8
   python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --ckpt-dir /tmp/pop --watch-every 4
@@ -30,6 +38,8 @@ overload), and tokens stream back as NDJSON chunks.
 from __future__ import annotations
 
 import argparse
+import json
+import signal
 import sys
 from typing import Dict, List, Optional
 
@@ -108,6 +118,17 @@ def run_lm(args) -> Dict[str, object]:
               f"step={dinfo.get('step')} trainer={dinfo.get('trainer')} "
               f"spec_tokens={args.spec_tokens} "
               f"fused={not args.no_spec_fused} adapt={args.spec_adapt}")
+    journal = None
+    if getattr(args, "journal", None):
+        from repro.serve.journal import RequestJournal
+        journal = RequestJournal(args.journal)
+        print(f"[serve] journal: {args.journal} (write-ahead, fsync "
+              f"per step)")
+    faults = None
+    if getattr(args, "fault_spec", None):
+        from repro.serve.faults import FaultInjector
+        faults = FaultInjector(args.fault_spec)
+        print(f"[serve] fault harness armed: {args.fault_spec}")
     max_len = args.max_len or max(
         parse_lens(args.prompt_lens)) + args.max_new
     sched_kw = dict(
@@ -124,6 +145,7 @@ def run_lm(args) -> Dict[str, object]:
         draft_cfg=draft_cfg, spec_fused=not args.no_spec_fused,
         spec_adapt=args.spec_adapt,
         max_queue=getattr(args, "max_queue", None),
+        journal=journal, faults=faults,
         telemetry=not args.no_telemetry)
     if args.mesh:
         from repro.serve.mesh import MeshScheduler, parse_mesh
@@ -139,9 +161,22 @@ def run_lm(args) -> Dict[str, object]:
         sched.profile_steps(args.profile_steps, args.profile_dir)
         print(f"[serve] profiler armed: steps={args.profile_steps} "
               f"dir={args.profile_dir}")
+    prefixes: Dict = {}
+    resumed: set = set()
+    journal_entries = None
+    if getattr(args, "resume_journal", None):
+        from repro.serve import journal as journal_mod
+        journal_entries = journal_mod.replay(args.resume_journal)
+        prefixes = journal_mod.resume_scheduler(sched, journal_entries)
+        resumed = set(journal_entries)
+        print(f"[serve] journal: replayed {len(journal_entries)} "
+              f"request(s) from {args.resume_journal} "
+              f"(requeued {sched.stats.journal_replayed} unfinished)")
     if getattr(args, "gateway", False):
-        out = run_gateway(args, sched)
+        out = run_gateway(args, sched, journal_entries=journal_entries)
         _maybe_write_trace(args, sched)
+        if journal is not None:
+            journal.close()
         return out
     reqs = build_requests(cfg, args.requests, parse_lens(args.prompt_lens),
                           args.max_new, eos_id=args.eos_id,
@@ -153,11 +188,16 @@ def run_lm(args) -> Dict[str, object]:
           f"swap_mode={args.swap_mode} requests={len(reqs)} "
           f"max_new={args.max_new} spec_tokens={sched.spec_tokens}")
     for r in reqs:
+        if r.rid in resumed:        # the journal already owns this rid
+            continue
         try:
             sched.submit(r)
         except ValueError as e:     # counted in the rejected stat
             print(f"[serve] rejected request {r.rid}: {e}")
     results = sched.run()
+    if prefixes:
+        from repro.serve import journal as journal_mod
+        results = journal_mod.stitched_results(results, prefixes)
     sched.stats.report()
     pd = sched.pool.as_dict()
     print(f"[serve] pool: slots={pd['num_slots']} "
@@ -177,13 +217,34 @@ def run_lm(args) -> Dict[str, object]:
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
               f"hot_swaps={sched.stats.hot_swaps}")
-    sample = results[reqs[0].rid]
-    print("[serve] sample continuation (token ids):",
-          list(map(int, sample[:12])))
+    sample = results.get(reqs[0].rid)
+    if sample is None and results:
+        sample = next(iter(results.values()))
+    if sample is not None:
+        print("[serve] sample continuation (token ids):",
+              list(map(int, sample[:12])))
     _maybe_write_trace(args, sched)
-    return {"stats": sched.stats.as_dict(), "pool": pd,
-            "registry_step": registry.step if registry else None,
-            "results": results}
+    if journal is not None:
+        journal.close()
+    out = {"stats": sched.stats.as_dict(), "pool": pd,
+           "registry_step": registry.step if registry else None,
+           "results": results}
+    _maybe_write_json(args, out)
+    return out
+
+
+def _maybe_write_json(args, out: Dict[str, object]) -> None:
+    """Write the stats + full per-request token streams as JSON if
+    ``--out-json`` was given (the crash-recovery CI lane diffs these
+    files across an interrupted-then-resumed pair of runs)."""
+    if not getattr(args, "out_json", None):
+        return
+    payload = {"stats": out["stats"],
+               "results": {str(k): [int(t) for t in v]
+                           for k, v in out.get("results", {}).items()}}
+    with open(args.out_json, "w") as f:
+        json.dump(payload, f)
+    print(f"[serve] wrote {args.out_json}")
 
 
 def _maybe_write_trace(args, sched) -> None:
@@ -196,15 +257,24 @@ def _maybe_write_trace(args, sched) -> None:
           f"dropped={tr.dropped} (chrome://tracing / ui.perfetto.dev)")
 
 
-def run_gateway(args, sched) -> Dict[str, object]:
-    """Serve HTTP on ``--host:--port`` until interrupted (Ctrl-C
-    prints the ``[serve]`` report and exits cleanly)."""
+def run_gateway(args, sched, journal_entries=None) -> Dict[str, object]:
+    """Serve HTTP on ``--host:--port`` until interrupted.
+
+    Ctrl-C prints the ``[serve]`` report and exits cleanly.  SIGTERM
+    triggers the graceful rolling-restart path: stop admission
+    (:meth:`Gateway.begin_drain`), let in-flight work finish for up to
+    ``--drain-grace`` seconds (a ``--journal`` makes the queue durable
+    so the wait can be short), then exit 0 — the next generation
+    resumes with ``--resume-journal``."""
     import asyncio
 
     from repro.serve.gateway import Gateway
 
     gw = Gateway(sched, host=args.host, port=args.port,
                  stream_buffer=args.stream_buffer)
+    if journal_entries:
+        from repro.serve.journal import idempotency_map
+        gw.seed_idempotency(idempotency_map(journal_entries))
 
     async def _serve():
         await gw.start()
@@ -213,9 +283,30 @@ def run_gateway(args, sched) -> Dict[str, object]:
               f"stream_buffer={gw.stream_buffer} "
               f"(POST /v1/generate, GET /healthz, GET /readyz, "
               f"GET /metrics, GET /debug/trace, POST /debug/profile)")
-        assert gw._server is not None
-        async with gw._server:
-            await gw._server.serve_forever()
+        loop = asyncio.get_running_loop()
+        stop = asyncio.Event()
+
+        def _on_sigterm():
+            print(f"[serve] SIGTERM: draining "
+                  f"(grace={args.drain_grace:.1f}s, journal="
+                  f"{'on' if sched.journal is not None else 'off'})",
+                  flush=True)
+            gw.begin_drain()
+            stop.set()
+
+        try:
+            loop.add_signal_handler(signal.SIGTERM, _on_sigterm)
+        except (NotImplementedError, ValueError, RuntimeError):
+            pass                      # non-main thread / exotic loop
+        await stop.wait()
+        # with a journal the queue is already durable; either way give
+        # in-flight requests up to --drain-grace to finish streaming
+        deadline = loop.time() + args.drain_grace
+        while not gw.drained() and loop.time() < deadline:
+            await asyncio.sleep(0.05)
+        if sched.journal is not None:
+            sched.journal.record_note("shutdown", drained=gw.drained())
+        await gw.stop()
 
     try:
         asyncio.run(_serve())
@@ -374,6 +465,33 @@ def build_parser() -> argparse.ArgumentParser:
                     help="per-response token buffer; a consumer that "
                          "falls further behind is cancelled "
                          "(backpressure)")
+    # fault tolerance (journal / crash recovery / fault injection)
+    ap.add_argument("--journal", default=None,
+                    help="write-ahead request journal (JSONL): every "
+                         "admitted request and decoded token, fsync'd "
+                         "per scheduler step — a crashed or restarted "
+                         "server resumes from it token-identically "
+                         "(lm workload)")
+    ap.add_argument("--resume-journal", default=None,
+                    help="replay a previous generation's --journal on "
+                         "startup: finished requests return their "
+                         "recorded tokens, unfinished ones are "
+                         "requeued and resume token-identically")
+    ap.add_argument("--fault-spec", default=None,
+                    help="deterministic fault injection: comma list of "
+                         "kind@step[:key=val...], kinds kill|crash|"
+                         "stall|corrupt|oom|disconnect (e.g. "
+                         "'kill@12,stall@4:secs=0.2') — crash drills "
+                         "for the journal/recovery path")
+    ap.add_argument("--out-json", default=None,
+                    help="write final stats + per-request token "
+                         "streams as JSON (the crash-recovery CI lane "
+                         "diffs interrupted-vs-uninterrupted runs)")
+    ap.add_argument("--drain-grace", type=float, default=5.0,
+                    help="seconds SIGTERM waits for in-flight gateway "
+                         "requests to finish before exiting (admission "
+                         "stops immediately; the journal preserves "
+                         "whatever does not finish)")
     # telemetry (tracing / metrics / profiler)
     ap.add_argument("--no-telemetry", action="store_true",
                     help="disable per-request trace spans and phase "

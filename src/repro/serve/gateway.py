@@ -29,6 +29,18 @@ SLO-aware admission lives at this boundary:
   request **cancelled** (backpressure) rather than buffering without
   bound.
 
+Fault tolerance rides the same boundary.  :meth:`Gateway.begin_drain`
+flips the gateway into a **draining** state (rolling restart step 1):
+new ``/v1/generate`` submits get **503** with a ``Retry-After`` hint,
+``/readyz`` answers 503 so load balancers stop routing here, and
+in-flight requests run to completion (or get journaled for the next
+generation — see :mod:`repro.serve.journal`).  Clients may send an
+``Idempotency-Key`` header: a retry after a gateway restart with the
+same key replays the finished result (``idempotent_replay``) or gets
+**409** while the original is still in flight, instead of
+double-admitting.  :meth:`Gateway.seed_idempotency` preloads the
+key→rid map from a replayed journal.
+
 Endpoints: ``POST /v1/generate`` (streaming NDJSON by default,
 ``"stream": false`` for a single JSON body), ``GET /healthz``
 (liveness), ``GET /readyz`` (readiness: 503 until the warmup step ran
@@ -118,6 +130,12 @@ class Gateway:
         # answers 503 until then, so load balancers wait out cold start
         self._warmup = warmup
         self._ready = threading.Event()
+        # rolling-restart drain: set by begin_drain(); new submits are
+        # refused (503 + Retry-After) while in-flight work finishes
+        self._draining = threading.Event()
+        # Idempotency-Key -> rid of the admitted request (loop-owned;
+        # seeded from a replayed journal across restarts)
+        self._idem: Dict[str, Any] = {}
 
     # -- lifecycle (event loop side) ----------------------------------------
     async def start(self) -> None:
@@ -146,6 +164,47 @@ class Gateway:
         assert self._server is not None
         async with self._server:
             await self._server.serve_forever()
+
+    # -- rolling restart ----------------------------------------------------
+    def begin_drain(self) -> None:
+        """Stop admitting new work (rolling-restart step 1).
+
+        After this call new ``/v1/generate`` submits answer 503 with a
+        ``Retry-After`` hint and ``/readyz`` flips to 503; in-flight
+        requests keep streaming.  Thread-safe (signal handlers call it
+        from the event loop, tests from anywhere)."""
+        if not self._draining.is_set():
+            self._draining.set()
+            log_event("gateway_drain")
+
+    @property
+    def draining(self) -> bool:
+        """Whether :meth:`begin_drain` has been called."""
+        return self._draining.is_set()
+
+    def drained(self) -> bool:
+        """True once no queued/in-flight work remains (the drain is
+        complete and the process can exit or hand off its journal)."""
+        sched = self.sched
+        return not (sched.queue or sched.active or sched.prefilling
+                    or self._streams)
+
+    def seed_idempotency(self, mapping: Dict[str, Any]) -> None:
+        """Preload the Idempotency-Key map from a replayed journal.
+
+        ``mapping`` is ``{key: (rid, done)}`` as produced by
+        :func:`repro.serve.journal.idempotency_map`; only the rid is
+        kept — completion is re-checked against ``sched.results`` at
+        lookup time.  Call before :meth:`start`."""
+        for key, (rid, _done) in mapping.items():
+            self._idem[key] = rid
+
+    def _retry_after(self) -> str:
+        """Load-aware Retry-After hint: roughly one second per queued
+        batch the scheduler has to chew through first."""
+        sched = self.sched
+        return str(max(1, round(len(sched.queue)
+                                / max(sched.stats.slots, 1))))
 
     # -- driver thread: the ONLY scheduler caller ---------------------------
     def _drive(self) -> None:
@@ -269,6 +328,7 @@ class Gateway:
             method, path = parts[0].upper(), parts[1]
             clen = 0
             accept = ""
+            idem_key: Optional[str] = None
             while True:
                 h = await reader.readline()
                 if h in (b"\r\n", b"\n", b""):
@@ -279,8 +339,11 @@ class Gateway:
                     clen = int(val.strip())
                 elif hname == "accept":
                     accept = val.strip().lower()
+                elif hname == "idempotency-key":
+                    idem_key = val.strip()
             body = await reader.readexactly(clen) if clen else b""
-            await self._route(method, path, body, accept, writer)
+            await self._route(method, path, body, accept, writer,
+                              idem_key=idem_key)
         except (asyncio.IncompleteReadError, ConnectionResetError):
             pass
         finally:
@@ -291,7 +354,8 @@ class Gateway:
                 pass
 
     async def _route(self, method: str, path: str, body: bytes,
-                     accept: str, writer: asyncio.StreamWriter) -> None:
+                     accept: str, writer: asyncio.StreamWriter,
+                     idem_key: Optional[str] = None) -> None:
         """Dispatch to an endpoint handler."""
         sched = self.sched
         busy = len(sched.active) + len(sched.prefilling)
@@ -305,11 +369,17 @@ class Gateway:
                 "queued": len(sched.queue), "active": busy})
         elif method == "GET" and path == "/readyz":
             # readiness: 503 until weights are loaded / mesh is up
-            # (the driver's warmup), so load balancers can gate on it
-            ready = self._ready.is_set()
-            await _respond(writer, 200 if ready else 503, {
-                "ready": ready, "slots": sched.stats.slots,
-                "queued": len(sched.queue), "slots_busy": busy})
+            # (the driver's warmup), and again once draining — load
+            # balancers gate on this to stop routing during a rolling
+            # restart
+            ready = self._ready.is_set() and not self._draining.is_set()
+            await _respond(
+                writer, 200 if ready else 503, {
+                    "ready": ready, "draining": self._draining.is_set(),
+                    "slots": sched.stats.slots,
+                    "queued": len(sched.queue), "slots_busy": busy},
+                extra_headers=None if ready
+                else [("Retry-After", self._retry_after())])
         elif method == "GET" and path == "/metrics":
             if "application/json" in accept:
                 d = dict(sched.stats.as_dict())
@@ -325,7 +395,7 @@ class Gateway:
         elif method == "POST" and path == "/debug/profile":
             await self._profile(body, writer)
         elif method == "POST" and path == "/v1/generate":
-            await self._generate(body, writer)
+            await self._generate(body, writer, idem_key=idem_key)
         else:
             await _respond(writer, 404, {"error": f"no route "
                                                   f"{method} {path}"})
@@ -350,11 +420,42 @@ class Gateway:
                        {"armed": True, "steps": steps, "dir": outdir})
 
     async def _generate(self, body: bytes,
-                        writer: asyncio.StreamWriter) -> None:
+                        writer: asyncio.StreamWriter,
+                        idem_key: Optional[str] = None) -> None:
         """``POST /v1/generate``: admit, then stream tokens (NDJSON
-        chunks) or collect the full completion (``"stream": false``)."""
+        chunks) or collect the full completion (``"stream": false``).
+
+        While draining, answers 503 + ``Retry-After`` without
+        admitting.  A repeated ``Idempotency-Key`` replays the finished
+        result (200, ``idempotent_replay``) or answers 409 while the
+        original request is still in flight."""
+        if self._draining.is_set():
+            await _respond(
+                writer, 503,
+                {"error": "gateway is draining for restart; retry "
+                          "against the next generation"},
+                extra_headers=[("Retry-After", self._retry_after())])
+            return
         try:
             d = json.loads(body.decode() or "{}")
+            idem = idem_key or d.get("idempotency_key")
+            known = self._idem.get(idem) if idem else None
+            if known is not None:
+                res = self.sched.results.get(known)
+                if res is not None:
+                    await _respond(writer, 200, {
+                        "rid": known,
+                        "tokens": [int(t) for t in res],
+                        "idempotent_replay": True})
+                else:
+                    await _respond(
+                        writer, 409,
+                        {"error": "a request with this "
+                                  "Idempotency-Key is still in flight",
+                         "rid": known},
+                        extra_headers=[("Retry-After",
+                                        self._retry_after())])
+                return
             prompt = np.asarray(d["prompt"], np.int32)
             req = Request(
                 rid=d.get("rid", self._make_rid()), prompt=prompt,
@@ -363,7 +464,8 @@ class Gateway:
                 temperature=float(d.get("temperature", 0.0)),
                 seed=d.get("seed"),
                 ttft_deadline_ms=d.get("ttft_deadline_ms"),
-                tpot_deadline_ms=d.get("tpot_deadline_ms"))
+                tpot_deadline_ms=d.get("tpot_deadline_ms"),
+                idem_key=idem)
         except (KeyError, ValueError, TypeError,
                 json.JSONDecodeError) as e:
             await _respond(writer, 400, {"error": f"bad request: {e}"})
@@ -383,6 +485,8 @@ class Gateway:
         if status == "invalid":
             await _respond(writer, 400, {"error": msg, "rid": req.rid})
             return
+        if idem:
+            self._idem[idem] = req.rid
         if streaming:
             await self._stream_out(req.rid, st, writer)
         else:
@@ -454,8 +558,8 @@ class Gateway:
 # -- wire helpers -----------------------------------------------------------
 
 _REASONS = {200: "OK", 400: "Bad Request", 404: "Not Found",
-            429: "Too Many Requests", 500: "Internal Server Error",
-            503: "Service Unavailable"}
+            409: "Conflict", 429: "Too Many Requests",
+            500: "Internal Server Error", 503: "Service Unavailable"}
 
 
 async def _respond(writer: asyncio.StreamWriter, code: int, obj: Dict,

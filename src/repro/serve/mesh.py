@@ -145,7 +145,8 @@ def encode_request(req: Request) -> Dict[str, Any]:
             "temperature": float(req.temperature),
             "seed": req.seed,
             "ttft_deadline_ms": req.ttft_deadline_ms,
-            "tpot_deadline_ms": req.tpot_deadline_ms}
+            "tpot_deadline_ms": req.tpot_deadline_ms,
+            "ntok_base": int(req.ntok_base)}
 
 
 def decode_request(d: Dict[str, Any]) -> Request:
@@ -156,7 +157,8 @@ def decode_request(d: Dict[str, Any]) -> Request:
                    temperature=d.get("temperature", 0.0),
                    seed=d.get("seed"),
                    ttft_deadline_ms=d.get("ttft_deadline_ms"),
-                   tpot_deadline_ms=d.get("tpot_deadline_ms"))
+                   tpot_deadline_ms=d.get("tpot_deadline_ms"),
+                   ntok_base=int(d.get("ntok_base", 0)))
 
 
 @dataclass
@@ -241,8 +243,12 @@ class PlanChannel:
     ``broadcast(plan)`` takes the decided plan on host 0 and ``None``
     on followers; every process receives the plan host 0 sent.  All
     transports round-trip the wire encoding, so host 0's returned plan
-    is exactly what followers decode.
+    is exactly what followers decode.  ``retries`` counts transient
+    fetch retries a degradation-capable transport performed before
+    succeeding (surfaced as the ``plan_retries`` serve counter).
     """
+
+    retries: int = 0
 
     def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
         """Send (host 0) / receive (followers) one plan; blocking."""
@@ -331,10 +337,20 @@ class CoordServiceChannel(PlanChannel):
     in-flight plan.  A dead peer turns into ``DEADLINE_EXCEEDED``
     at the barrier/get instead of an indefinite hang; we re-raise it
     as a RuntimeError naming the step and timeout.
+
+    **Degradation**: the blocking KV *fetches* (follower plan get,
+    host-0 stats gather) are retried ``max_retries`` times with
+    exponential backoff before the peer is declared dead — a host
+    paused by a GC stall or a slow NFS poll gets another chance; the
+    retry count is surfaced as ``plan_retries``.  The delivery
+    *barrier* is NOT retried: barrier state on the coordination
+    service is not safely re-enterable after a timeout, so a barrier
+    deadline is treated as confirmed peer death immediately.
     """
 
     def __init__(self, timeout_s: float = 60.0,
-                 namespace: Optional[str] = None):
+                 namespace: Optional[str] = None,
+                 max_retries: int = 2, backoff_s: float = 0.05):
         from jax._src import distributed
         client = distributed.global_state.client
         if client is None:
@@ -355,6 +371,9 @@ class CoordServiceChannel(PlanChannel):
         self._ns = namespace
         self._seq = 0
         self._gseq = 0
+        self._max_retries = max(0, int(max_retries))
+        self._backoff_s = float(backoff_s)
+        self.retries = 0
 
     def _deadlined(self, fn, *args):
         """Run a blocking coordination-service call with a HARD
@@ -384,9 +403,31 @@ class CoordServiceChannel(PlanChannel):
             raise val
         return val
 
+    def _get_with_retry(self, key: str) -> bytes:
+        """Blocking KV fetch with bounded retry + exponential backoff
+        (the mesh-degradation knob: a slow peer is retried before
+        being declared dead; each retry counts into ``retries``)."""
+        delay = self._backoff_s
+        for attempt in range(self._max_retries + 1):
+            try:
+                return self._deadlined(
+                    self._client.blocking_key_value_get_bytes,
+                    key, self._timeout_ms)
+            except Exception:
+                if attempt >= self._max_retries:
+                    raise
+                self.retries += 1
+                print(f"[mesh] fetch of {key!r} timed out; retry "
+                      f"{attempt + 1}/{self._max_retries} in {delay:.2f}s",
+                      flush=True)
+                time.sleep(delay)
+                delay *= 2
+
     def broadcast(self, plan: Optional[StepPlan]) -> StepPlan:
         """One KV publish/fetch + delivery barrier; blocking with the
-        channel's timeout.  Raises RuntimeError on peer death."""
+        channel's timeout (fetches retried per the channel's
+        degradation policy).  Raises RuntimeError on confirmed peer
+        death."""
         key = f"{self._ns}/{self._seq}"
         try:
             if self._rank == 0:
@@ -395,9 +436,7 @@ class CoordServiceChannel(PlanChannel):
                 self._client.key_value_set_bytes(key, plan.encode())
                 payload = plan.encode()
             else:
-                payload = self._deadlined(
-                    self._client.blocking_key_value_get_bytes,
-                    key, self._timeout_ms)
+                payload = self._get_with_retry(key)
             self._deadlined(self._client.wait_at_barrier,
                             f"{self._ns}/b{self._seq}", self._timeout_ms)
         except Exception as e:  # DEADLINE_EXCEEDED / TimeoutError
@@ -425,9 +464,8 @@ class CoordServiceChannel(PlanChannel):
                 return None
             out = [bytes(payload)]
             for r in range(1, self._world):
-                out.append(self._deadlined(
-                    self._client.blocking_key_value_get_bytes,
-                    f"{self._ns}/stats{seq}/{r}", self._timeout_ms))
+                out.append(self._get_with_retry(
+                    f"{self._ns}/stats{seq}/{r}"))
             for r in range(1, self._world):
                 self._client.key_value_delete(f"{self._ns}/stats{seq}/{r}")
             return out
@@ -777,6 +815,8 @@ class MeshScheduler(Scheduler):
         """
         self.stats.start()
         self.telemetry.step_begin(self._step_count + 1)
+        if self.faults is not None:
+            self.faults.on_step(self, self._step_count + 1)
         if plan is None and jax.process_index() == 0:
             winner = self._poll_registry()
             self._step_count += 1
@@ -823,6 +863,8 @@ class MeshScheduler(Scheduler):
         self._exchange_stats()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
+        self.stats.plan_retries = getattr(self.channel, "retries", 0)
+        self._journal_step()
         tel.step_end()
         return plan
 

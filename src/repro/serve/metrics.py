@@ -183,6 +183,11 @@ class ServeStats:
     spec_k_rows: int = 0           # row-rounds that offered proposals
     ragged_splits: int = 0         # width-split subset decode dispatches
     hot_swaps: int = 0
+    # fault tolerance (serve/journal.py, serve/faults.py, registry)
+    fault_injected: int = 0        # harness faults fired (--fault-spec)
+    swap_rejected_corrupt: int = 0  # hot-swaps refused: corrupt checkpoint
+    plan_retries: int = 0          # mesh plan-channel fetch retries
+    journal_replayed: int = 0      # requests requeued from a WAL journal
     steps: int = 0
     queue_depth_sum: int = 0
     queue_depth_max: int = 0
@@ -254,6 +259,10 @@ class ServeStats:
             "spec_k_mean": self.spec_k_sum / max(self.spec_k_rows, 1),
             "ragged_splits": self.ragged_splits,
             "hot_swaps": self.hot_swaps,
+            "fault_injected": self.fault_injected,
+            "swap_rejected_corrupt": self.swap_rejected_corrupt,
+            "plan_retries": self.plan_retries,
+            "journal_replayed": self.journal_replayed,
             "wall_s": wall,
             # wall is 0.0 before the first step: a /metrics scrape of an
             # idle gateway must not divide by zero
@@ -307,6 +316,12 @@ class ServeStats:
             f"busy={d['slot_occupancy'] * 100:.0f}% "
             f"queue_mean={d['queue_depth_mean']:.1f} "
             f"queue_max={d['queue_depth_max']}")
+        if self.fault_injected or self.swap_rejected_corrupt \
+                or self.plan_retries or self.journal_replayed:
+            log(f"{prefix} robustness: fault_injected={d['fault_injected']} "
+                f"swap_rejected_corrupt={d['swap_rejected_corrupt']} "
+                f"plan_retries={d['plan_retries']} "
+                f"journal_replayed={d['journal_replayed']}")
         if self.spec_rounds:
             log(f"{prefix} speculative: rounds={d['spec_rounds']} "
                 f"accept_rate={d['spec_accept_rate'] * 100:.0f}% "

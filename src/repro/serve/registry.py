@@ -12,9 +12,23 @@ population through :mod:`repro.checkpoint.ckpt`
     :class:`ModelRegistry` polled between scheduler steps reloads when
     a newer winner file (or, with ``auto_export``, a newer population
     step) appears, so serving follows training live.
+
+Hot-swap is **transactional**: exports write a sha256 sidecar manifest
+(``winner_step_<n>.ckpt.sha256``) next to the atomically-renamed
+checkpoint, and the polling path verifies it before touching
+``self.params``.  A corrupt or torn winner (a writer that died
+mid-copy, a truncated rsync) is *quarantined* — renamed to
+``*.corrupt`` and counted in ``rejected_corrupt`` — while the previous
+winner keeps serving; with ``auto_export`` the next poll re-exports a
+good copy from the population checkpoints.  Mesh followers load with
+``strict=True`` instead: host 0 already verified the winner before
+broadcasting the step, so a follower-side failure must raise rather
+than silently diverge the mesh.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 import os
 import re
 from typing import Any, Callable, Dict, List, Optional, Tuple
@@ -22,10 +36,63 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.serve.telemetry import log_event
 
 Params = Any
 
 _WINNER_RE = re.compile(r"^winner_step_(\d+)\.ckpt$")
+
+
+def checksum_path(path: str) -> str:
+    """The sha256 sidecar manifest for a checkpoint file."""
+    return path + ".sha256"
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def write_checksum(path: str) -> str:
+    """Write the sha256+size sidecar for ``path`` (atomic tmp+rename);
+    returns the sidecar path."""
+    side = checksum_path(path)
+    rec = {"sha256": _sha256(path), "size": os.path.getsize(path)}
+    tmp = side + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rec, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, side)
+    return side
+
+
+def verify_checkpoint(path: str) -> None:
+    """Verify a checkpoint against its sidecar manifest.
+
+    Raises ``ValueError`` on a size or sha256 mismatch (torn/corrupt
+    file).  A missing sidecar passes silently — it is a legacy export
+    or one mid-write; ``ckpt.restore`` itself still raises if the file
+    is unreadable.
+    """
+    side = checksum_path(path)
+    if not os.path.exists(side):
+        return
+    with open(side) as f:
+        rec = json.load(f)
+    size = os.path.getsize(path)
+    if size != int(rec.get("size", -1)):
+        raise ValueError(
+            f"checkpoint {path!r} is {size} bytes, manifest says "
+            f"{rec.get('size')} (torn write?)")
+    digest = _sha256(path)
+    if digest != rec.get("sha256"):
+        raise ValueError(
+            f"checkpoint {path!r} sha256 mismatch: file {digest[:12]}… "
+            f"!= manifest {str(rec.get('sha256'))[:12]}… (corrupt)")
 
 
 def winner_path(ckpt_dir: str, step: int) -> str:
@@ -111,6 +178,7 @@ def load_draft(path: str, like_params: Params,
 
 def _restore_draft(path: str, like_params: Params) -> Tuple[Params, dict]:
     try:
+        verify_checkpoint(path)
         tree, meta = ckpt.restore(path, {"params": like_params})
     except Exception as e:
         raise ValueError(
@@ -175,6 +243,7 @@ def export_winner(ckpt_dir: str, like_params: Params,
             "wins": int(metas[idx].get("wins", 0)), **how}
     path = winner_path(ckpt_dir, step)
     ckpt.save(path, {"params": params[idx]}, metadata=info)
+    write_checksum(path)
     return path, info
 
 
@@ -202,6 +271,11 @@ class ModelRegistry:
         self.step: int = -1
         self.info: dict = {}
         self.swaps: int = 0
+        # transactional hot-swap state: corrupt winners are renamed to
+        # *.corrupt (or, if the rename fails, remembered here) so the
+        # poll never re-trips on the same bad file
+        self.rejected_corrupt: int = 0
+        self._quarantined: set = set()
 
     def _maybe_export(self) -> None:
         pop_step = ckpt.latest_population_step(self.ckpt_dir)
@@ -211,29 +285,76 @@ class ModelRegistry:
         if win_step is None or pop_step > win_step:
             export_winner(self.ckpt_dir, self.like_params, step=pop_step,
                           metric_fn=self.metric_fn, val_batch=self.val_batch)
+            # a fresh export supersedes any quarantine of that step —
+            # self-healing: the corrupt file was renamed away, this one
+            # was just written+checksummed from the population
+            self._quarantined.discard(pop_step)
 
     def refresh(self) -> bool:
-        """Load the newest winner if it is newer than what is serving."""
+        """Load the newest winner if it is newer than what is serving.
+
+        The ``--watch-every`` polling path: NEVER raises on a corrupt
+        or torn winner file — the bad file is quarantined, the counter
+        ``rejected_corrupt`` increments, and the previous winner keeps
+        serving (the driver stays up).
+        """
         if self.auto_export:
             self._maybe_export()
         step = latest_winner_step(self.ckpt_dir)
-        if step is None or step <= self.step:
+        if step is None or step <= self.step \
+                or step in self._quarantined:
             return False
-        return self.load_step(step)
+        return self.load_step(step, strict=False)
 
-    def load_step(self, step: int) -> bool:
+    def _quarantine(self, step: int, err: Exception) -> None:
+        """Reject a corrupt winner: rename it (and its sidecar) to
+        ``*.corrupt`` so ``latest_winner_step`` stops seeing it, fall
+        back to an in-memory skip set when the rename fails."""
+        self.rejected_corrupt += 1
+        self._quarantined.add(step)
+        path = winner_path(self.ckpt_dir, step)
+        for p in (path, checksum_path(path)):
+            try:
+                if os.path.exists(p):
+                    os.replace(p, p + ".corrupt")
+            except OSError:
+                pass
+        print(f"[registry] REJECTED corrupt winner step {step}: "
+              f"{type(err).__name__}: {err} — previous winner "
+              f"(step {self.step}) keeps serving", flush=True)
+        log_event("swap_rejected_corrupt", step=step,
+                  serving_step=self.step, error=str(err))
+
+    def load_step(self, step: int, strict: bool = True) -> bool:
         """Load a SPECIFIC exported winner (no newer-than scan).
 
         The mesh-follower path: host 0 polls the filesystem, decides,
         and broadcasts the winning step; followers load exactly that
         step so every host swaps to the same weights on the same
         scheduler step even if their filesystem views are racing the
-        trainer's writes.
+        trainer's writes.  ``strict=True`` (followers, startup) raises
+        on a corrupt file — host 0 verified the winner before
+        broadcasting, so failure here must not silently diverge the
+        mesh; ``strict=False`` (host-0 polling) quarantines instead
+        and returns False, keeping the previous winner serving.
         """
         if step == self.step:
             return False
-        tree, meta = ckpt.restore(winner_path(self.ckpt_dir, step),
-                                  {"params": self.like_params})
+        path = winner_path(self.ckpt_dir, step)
+        try:
+            verify_checkpoint(path)
+            tree, meta = ckpt.restore(path, {"params": self.like_params})
+        except FileNotFoundError:
+            if strict:
+                raise
+            return False        # raced a quarantine/cleanup: just skip
+        except Exception as e:
+            if strict:
+                raise ValueError(
+                    f"winner checkpoint {path!r} is corrupt or torn: "
+                    f"{type(e).__name__}: {e}") from e
+            self._quarantine(step, e)
+            return False
         had = self.params is not None
         self.params = tree["params"]
         self.step = step

@@ -95,6 +95,14 @@ class Request:
     :meth:`Scheduler.shed_expired` instead of admitted late, and a
     completed request that missed its TTFT/TPOT deadline increments
     the corresponding ``[serve]`` miss counter.
+
+    ``ntok_base`` offsets the sampler's rng stream: a journal resume
+    re-submits a request with ``k`` already-emitted tokens folded into
+    the prompt and ``ntok_base=k``, so its first new sample draws
+    ``rng([seed, k])`` — exactly the draw the uninterrupted run would
+    have made (see ``repro.serve.journal``).  ``idem_key`` carries the
+    gateway's ``Idempotency-Key`` header into the journal so client
+    retries after a restart don't double-admit.
     """
 
     rid: Any
@@ -105,6 +113,8 @@ class Request:
     seed: Optional[int] = None
     ttft_deadline_ms: Optional[float] = None   # first token due (ms)
     tpot_deadline_ms: Optional[float] = None   # mean ms/token budget
+    ntok_base: int = 0              # rng-stream offset (journal resume)
+    idem_key: Optional[str] = None  # gateway Idempotency-Key, journaled
 
     @property
     def prompt_len(self) -> int:
@@ -152,7 +162,8 @@ class Scheduler:
                  spec_adapt: bool = False,
                  max_queue: Optional[int] = None,
                  telemetry: bool = True,
-                 trace_capacity: int = 8192):
+                 trace_capacity: int = 8192,
+                 journal=None, faults=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -257,6 +268,13 @@ class Scheduler:
         # rank -> latest follower stats snapshot (mesh aggregation;
         # stays {} on a single-process scheduler)
         self.remote_stats: Dict[int, dict] = {}
+        # fault tolerance: an optional write-ahead RequestJournal (one
+        # fsync per step, batched below) and an optional FaultInjector
+        # fired at the top of each step
+        self.journal = journal
+        self.faults = faults
+        self._journal_tokens: Dict[Any, List[int]] = {}
+        self._journal_finished: List[Any] = []
         self._pending_params = None
         self._head_share = None
         self._step_count = 0
@@ -323,6 +341,8 @@ class Scheduler:
                 f"request {req.rid!r}: temperature > 0 requires a seed "
                 "(refusing to silently fall back to greedy)")
         self.stats.submitted += 1
+        if self.journal is not None:
+            self.journal.record_submit(req)
         req._submit_t = time.perf_counter()   # TTFT includes queueing delay
         self.queue.append(req)
         self.telemetry.req_instant(req.rid, "enqueue", t=req._submit_t,
@@ -508,10 +528,13 @@ class Scheduler:
         trick for temperature > 0) so the only device dispatch per step
         is the batched decode itself.  Deterministic in (seed, ntok) —
         which is what makes speculative decoding output-identical to
-        target-only decoding at ANY temperature, not just greedy."""
+        target-only decoding at ANY temperature, not just greedy.
+        ``ntok_base`` shifts the stream for journal-resumed requests,
+        so sample k of the resumed run draws the same rng the
+        uninterrupted run drew at position ntok_base + k."""
         if req.temperature <= 0.0:
             return int(np.argmax(logits_row))
-        rng = np.random.default_rng([req.seed, ntok])
+        rng = np.random.default_rng([req.seed, req.ntok_base + ntok])
         g = rng.gumbel(size=logits_row.shape[-1])
         return int(np.argmax(
             np.asarray(logits_row, np.float64) / req.temperature + g))
@@ -520,6 +543,8 @@ class Scheduler:
         act.tokens.append(tok)
         act.ntok += 1
         self.stats.decode_tokens += 1
+        if self.journal is not None:
+            self._journal_tokens.setdefault(act.req.rid, []).append(tok)
         # write position of `tok`'s KV on the NEXT decode step
         self._index[act.slot] = act.req.prompt_len + act.ntok - 1
         self._next_token[act.slot] = tok
@@ -531,6 +556,8 @@ class Scheduler:
     def _finish(self, act: _Active) -> None:
         rid = act.req.rid
         self.results[rid] = np.asarray(act.tokens, np.int32)
+        if self.journal is not None:
+            self._journal_finished.append(rid)
         if self.spec_adapt:
             self.spec_k_by_rid[rid] = int(self._spec_k[act.slot])
         self.stats.completed += 1
@@ -621,6 +648,9 @@ class Scheduler:
         if self._head_share is not None and self._head_share[0] == rid:
             self._head_share = None
         kind = "shed" if reason == "deadline" else "cancel"
+        if self.journal is not None:
+            self.journal.record_cancel(rid, reason)
+            self._journal_tokens.pop(rid, None)
         self.telemetry.terminal(rid, kind, reason=reason)
         log_event(kind, rid=rid, reason=reason)
         if reason == "deadline":
@@ -656,9 +686,14 @@ class Scheduler:
         the filesystem) — on a mesh, host 0 polls and broadcasts the
         answer so every host swaps to the same winner on the same step."""
         if self.registry is not None and self.watch_every > 0 \
-                and self._step_count % self.watch_every == 0 \
-                and self.registry.refresh():
-            return getattr(self.registry, "step", 0)
+                and self._step_count % self.watch_every == 0:
+            found = self.registry.refresh()
+            # mirror the registry's corrupt-swap rejections into the
+            # step stats (exported at /metrics as a counter)
+            self.stats.swap_rejected_corrupt = getattr(
+                self.registry, "rejected_corrupt", 0)
+            if found:
+                return getattr(self.registry, "step", 0)
         return None
 
     def _apply_swap(self, winner: Optional[int]) -> None:
@@ -687,6 +722,9 @@ class Scheduler:
         in_flight = bool(self.active or self.prefilling)
         if self.draining:
             return admitted
+        if self.faults is not None \
+                and self.faults.admission_blocked(self._step_count):
+            return admitted       # injected pool exhaustion (oom@step)
         if self.policy == "static":
             if not in_flight:
                 while self.queue and self._can_admit_head():
@@ -748,17 +786,30 @@ class Scheduler:
         window closes; artifacts land under ``outdir``."""
         self.telemetry.arm_profile(steps, outdir)
 
+    def _journal_step(self) -> None:
+        """Commit this step's token emission + completions to the WAL
+        — one batched write + fsync (see ``repro.serve.journal``)."""
+        if self.journal is None:
+            return
+        self.journal.step_commit(self._journal_tokens,
+                                 self._journal_finished)
+        self._journal_tokens = {}
+        self._journal_finished = []
+
     def step(self) -> None:
         """One scheduler iteration: hot-swap check, admission, chunked
         prefill, one batched decode (or speculative) round,
         completion."""
         self.stats.start()
         self.telemetry.step_begin(self._step_count + 1)
+        if self.faults is not None:
+            self.faults.on_step(self, self._step_count + 1)
         self._maybe_hot_swap()
         self._step_count += 1
         self._timed_phases()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
+        self._journal_step()
         self.telemetry.step_end()
 
     # -- plain decode --------------------------------------------------------

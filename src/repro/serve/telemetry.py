@@ -369,6 +369,10 @@ _SNAPSHOT_COUNTERS = (
     "spec_replays",
     "steps",
     "hot_swaps",
+    "fault_injected",
+    "swap_rejected_corrupt",
+    "plan_retries",
+    "journal_replayed",
 )
 
 
@@ -432,6 +436,11 @@ _COUNTER_HELP = {
     "spec_replays": "speculative rollback replay steps",
     "steps": "scheduler steps",
     "hot_swaps": "weight hot swaps applied",
+    "fault_injected": "harness faults fired (--fault-spec)",
+    "swap_rejected_corrupt":
+        "hot swaps rejected on a corrupt/torn winner checkpoint",
+    "plan_retries": "mesh plan-channel fetch retries before success",
+    "journal_replayed": "requests requeued from the request journal",
 }
 
 _SHARD_GAUGES = {

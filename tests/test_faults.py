@@ -1,0 +1,371 @@
+"""Fault-tolerance tests: the write-ahead request journal (crash ->
+resume token identity, in-process and across a real SIGKILL),
+transactional hot-swap quarantine of corrupt winner checkpoints, the
+deterministic fault-injection harness (stall / oom / disconnect), and
+cancellation mid-chunked-prefill / mid-fused-draft resource reclaim."""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.lm import init_lm
+from repro.serve import journal as journal_mod
+from repro.serve.faults import (FaultInjector, InjectedFault,
+                                parse_fault_spec)
+from repro.serve.journal import RequestJournal
+from repro.serve.scheduler import Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def served():
+    cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                              dtype="float32")
+    params, _ = init_lm(cfg, KEY)
+    return cfg, params
+
+
+def _prompts(cfg, n, max_len, seed=1):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, max_len), 0, cfg.vocab_size),
+        np.int32)
+
+
+# ---------------------------------------------------------------------------
+# fault-spec parsing
+# ---------------------------------------------------------------------------
+
+
+def test_parse_fault_spec():
+    evs = parse_fault_spec("stall@5:secs=0.2,kill@12,oom@7:hold=3:rank=1")
+    assert [(e.kind, e.step) for e in evs] == \
+        [("stall", 5), ("oom", 7), ("kill", 12)]     # sorted by step
+    assert evs[0].args["secs"] == "0.2"
+    assert evs[1].rank == 1 and evs[2].rank == 0
+    with pytest.raises(ValueError, match="unknown kind"):
+        parse_fault_spec("explode@3")
+    with pytest.raises(ValueError, match="kind@step"):
+        parse_fault_spec("kill")
+    with pytest.raises(ValueError, match="key=val"):
+        parse_fault_spec("kill@3:rank")
+
+
+# ---------------------------------------------------------------------------
+# journal: record / replay / resume plumbing (no model needed)
+# ---------------------------------------------------------------------------
+
+
+def test_journal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    j = RequestJournal(path)
+    r0 = Request(rid=0, prompt=np.arange(4, dtype=np.int32), max_new=6,
+                 temperature=0.5, seed=9, idem_key="k0")
+    r1 = Request(rid=1, prompt=np.arange(3, dtype=np.int32), max_new=4)
+    j.record_submit(r0)
+    j.record_submit(r1)
+    j.step_commit({0: [10, 11], 1: [20]}, [])
+    j.step_commit({0: [12]}, [])
+    j.record_cancel(1, "cancel")
+    j.record_note("shutdown", drained=False)
+    j.close()
+
+    entries = journal_mod.replay(path)
+    assert set(entries) == {0, 1}
+    assert entries[0].tokens == [10, 11, 12] and not entries[0].done
+    assert entries[1].cancelled
+    assert journal_mod.unfinished(entries) == [0]
+    assert journal_mod.idempotency_map(entries) == {"k0": (0, False)}
+    assert journal_mod.last_note(path)["kind"] == "shutdown"
+
+    req, prefix = journal_mod.resume_request(entries[0])
+    assert prefix == [10, 11, 12]
+    assert req.prompt.tolist() == [0, 1, 2, 3, 10, 11, 12]
+    assert req.max_new == 3 and req.ntok_base == 3
+    assert req.seed == 9 and req.idem_key == "k0"
+
+    # torn tail: a generation that died mid-write loses only the tail
+    with open(path, "ab") as f:
+        f.write(b'{"t":"tokens","toks":{"0":[99')   # cut mid-record
+    torn = journal_mod.replay(path)
+    assert torn[0].tokens == [10, 11, 12]           # 99 never landed
+
+
+def test_resume_scheduler_preloads_finished(tmp_path, served):
+    """done / budget-exhausted / eos-hit entries land straight in
+    ``results``; only genuinely unfinished ones are requeued."""
+    cfg, params = served
+    path = str(tmp_path / "j.jsonl")
+    j = RequestJournal(path)
+    done = Request(rid="a", prompt=np.arange(4, dtype=np.int32),
+                   max_new=2)
+    eosd = Request(rid="b", prompt=np.arange(4, dtype=np.int32),
+                   max_new=8, eos_id=7)
+    for r in (done, eosd):
+        j.record_submit(r)
+    j.step_commit({"a": [1, 2], "b": [5, 7]}, ["a"])
+    j.close()
+    sched = Scheduler(cfg, params, num_slots=1, max_len=16)
+    prefixes = journal_mod.resume_scheduler(sched, journal_mod.replay(path))
+    assert prefixes == {} and not sched.queue
+    assert sched.results["a"].tolist() == [1, 2]
+    assert sched.results["b"].tolist() == [5, 7]    # eos-terminated
+    assert sched.stats.journal_replayed == 0
+
+
+# ---------------------------------------------------------------------------
+# crash -> resume token identity (the tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_crash_resume_token_identity(tmp_path, served, temperature):
+    """An injected crash mid-decode, then a FRESH scheduler resuming
+    from the journal, emits exactly the uninterrupted token streams —
+    greedy and sampled (the rng stream is position-keyed)."""
+    cfg, params = served
+    toks = _prompts(cfg, 3, 8)
+    mk = [Request(rid=i, prompt=toks[i, :4 + 2 * i], max_new=8,
+                  temperature=temperature,
+                  seed=None if temperature <= 0 else 40 + i)
+          for i in range(3)]
+
+    ref = Scheduler(cfg, params, num_slots=2, max_len=32)
+    for r in mk:
+        ref.submit(dataclasses.replace(r))
+    expect = {r.rid: ref.run(max_steps=200)[r.rid].tolist() for r in mk}
+
+    path = str(tmp_path / "j.jsonl")
+    s1 = Scheduler(cfg, params, num_slots=2, max_len=32,
+                   journal=RequestJournal(path),
+                   faults=FaultInjector("crash@4"))
+    for r in mk:
+        s1.submit(dataclasses.replace(r))
+    with pytest.raises(InjectedFault):
+        s1.run(max_steps=200)
+    assert s1.stats.fault_injected == 1
+    # the crashed generation made real progress but finished nothing
+    entries = journal_mod.replay(path)
+    assert journal_mod.unfinished(entries)
+
+    s2 = Scheduler(cfg, params, num_slots=2, max_len=32)
+    prefixes = journal_mod.resume_scheduler(s2, entries)
+    assert s2.stats.journal_replayed == len(prefixes) > 0
+    res = journal_mod.stitched_results(s2.run(max_steps=200), prefixes)
+    assert {rid: t.tolist() for rid, t in res.items()} == expect
+
+
+def test_subprocess_sigkill_resume_token_identity(tmp_path):
+    """The real thing: ``launch/serve.py --fault-spec kill@N`` dies by
+    SIGKILL mid-decode (no flush, no atexit); a second run with
+    ``--resume-journal`` reproduces the uninterrupted streams."""
+    env = dict(os.environ, PYTHONPATH="src", JAX_PLATFORMS="cpu")
+    jpath = str(tmp_path / "j.jsonl")
+    base = [sys.executable, "-m", "repro.launch.serve",
+            "--arch", "qwen3-0.6b", "--smoke", "--requests", "2",
+            "--max-new", "8", "--temperature", "0.7",
+            "--prompt-lens", "4,6"]
+    ref = subprocess.run(
+        base + ["--out-json", str(tmp_path / "ref.json")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert ref.returncode == 0, ref.stderr[-2000:]
+    killed = subprocess.run(
+        base + ["--journal", jpath, "--fault-spec", "kill@3"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert killed.returncode == -9, (killed.returncode,
+                                     killed.stderr[-2000:])
+    resumed = subprocess.run(
+        base + ["--resume-journal", jpath,
+                "--out-json", str(tmp_path / "res.json")],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert resumed.returncode == 0, resumed.stderr[-2000:]
+    a = json.load(open(tmp_path / "ref.json"))["results"]
+    b = json.load(open(tmp_path / "res.json"))["results"]
+    assert a == b and a
+
+
+# ---------------------------------------------------------------------------
+# transactional hot-swap: corrupt winners are quarantined
+# ---------------------------------------------------------------------------
+
+
+def _write_winner(ckpt_dir, step, params, checksum=True):
+    from repro.checkpoint import ckpt
+    from repro.serve import registry as reg
+    path = reg.winner_path(str(ckpt_dir), step)
+    ckpt.save(path, {"params": params}, metadata={"step": step,
+                                                  "trainer": 0})
+    if checksum:
+        reg.write_checksum(path)
+    return path
+
+
+def test_registry_quarantines_corrupt_winner(tmp_path, served):
+    """A torn winner never crashes ``refresh()`` and never changes the
+    served weights; the NEXT good export swaps in normally."""
+    from repro.serve import registry as reg
+    cfg, params = served
+    _write_winner(tmp_path, 1, params)
+    r = reg.ModelRegistry(str(tmp_path), params)
+    assert r.load() is not None and r.step == 1
+
+    p2 = _write_winner(tmp_path, 2, params)
+    size = os.path.getsize(p2)
+    with open(p2, "r+b") as f:                  # torn write
+        f.truncate(size // 2)
+    assert r.refresh() is False                 # never raises
+    assert r.step == 1 and r.rejected_corrupt == 1
+    assert os.path.exists(p2 + ".corrupt")      # renamed away
+    assert r.refresh() is False                 # no re-trip
+
+    _write_winner(tmp_path, 3, params)          # recovery path
+    assert r.refresh() is True and r.step == 3
+    assert r.rejected_corrupt == 1
+
+    # follower semantics: a corrupt load must RAISE, not diverge
+    p4 = _write_winner(tmp_path, 4, params)
+    with open(p4, "r+b") as f:
+        f.truncate(os.path.getsize(p4) // 2)
+    strict = reg.ModelRegistry(str(tmp_path), params)
+    with pytest.raises(ValueError, match="corrupt or torn"):
+        strict.load_step(4)
+
+
+def test_corrupt_winner_during_polling_serves_on(tmp_path, served):
+    """Scheduler-level: the ``corrupt`` fault truncates the newest
+    winner right before a ``--watch-every`` poll; the driver keeps
+    serving the old weights and completes every request."""
+    from repro.serve import registry as reg
+    cfg, params = served
+    _write_winner(tmp_path, 1, params)
+    registry = reg.ModelRegistry(str(tmp_path), params)
+    serving = registry.load()
+    _write_winner(tmp_path, 2, params)          # the poll's next target
+    # corrupt@1 fires BEFORE step 1's registry poll — the very first
+    # refresh sees the torn file
+    sched = Scheduler(cfg, serving, num_slots=2, max_len=32,
+                      registry=registry, watch_every=1,
+                      faults=FaultInjector("corrupt@1"))
+    toks = _prompts(cfg, 2, 8)
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt=toks[i, :6], max_new=6))
+    res = sched.run(max_steps=100)
+    assert len(res) == 2 and sched.stats.completed == 2
+    assert sched.stats.fault_injected == 1
+    assert sched.stats.swap_rejected_corrupt == 1
+    assert registry.step == 1                   # old winner kept serving
+    assert sched.stats.hot_swaps == 0
+
+
+# ---------------------------------------------------------------------------
+# stall / oom / disconnect
+# ---------------------------------------------------------------------------
+
+
+def test_stall_oom_disconnect_faults(served):
+    """The remaining fault kinds: a stall slows one step, oom holds
+    admission shut, disconnect cancels the oldest in-flight request —
+    all counted in ``fault_injected``, all resources reclaimed."""
+    cfg, params = served
+    toks = _prompts(cfg, 3, 8)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32,
+                      faults=FaultInjector(
+                          "stall@1:secs=0.01,oom@2:hold=2,"
+                          "disconnect@5:rid=0"))
+    for i in range(3):
+        sched.submit(Request(rid=i, prompt=toks[i, :6], max_new=8))
+    res = sched.run(max_steps=200)
+    assert sched.stats.fault_injected == 3
+    assert sched.stats.cancelled == 1 and 0 not in res
+    assert sorted(res) == [1, 2] and all(len(t) == 8
+                                         for t in res.values())
+    assert sched.pool.free_slots == 2
+    assert sched.pool.blocks.used_blocks == 0
+
+
+def test_oom_fault_blocks_admission(served):
+    """While an ``oom`` event holds, the admission phase admits
+    nothing — queued requests stay queued until the hold expires."""
+    cfg, params = served
+    toks = _prompts(cfg, 1, 8)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32,
+                      faults=FaultInjector("oom@1:hold=3"))
+    sched.submit(Request(rid=0, prompt=toks[0, :4], max_new=4))
+    for _ in range(3):                           # steps 1..3: held
+        sched.step()
+        assert len(sched.queue) == 1 and not sched.active \
+            and not sched.prefilling
+    res = sched.run(max_steps=50)                # hold expired: admits
+    assert res[0].shape == (4,)
+
+
+# ---------------------------------------------------------------------------
+# cancel mid-chunked-prefill / mid-fused-draft (resource reclaim)
+# ---------------------------------------------------------------------------
+
+
+def test_cancel_mid_chunked_prefill_reclaims_pages(served):
+    """cancel() landing while a request is mid-chunked-prefill frees
+    its slot and every allocated page (no orphaned partial prefill)."""
+    cfg, params = served
+    toks = _prompts(cfg, 2, 16)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32,
+                      block_size=4, prefill_chunk=4)
+    sched.submit(Request(rid=0, prompt=toks[0, :14], max_new=6))
+    sched.step()                                 # first chunk only
+    assert 0 in sched.prefilling                 # mid-prefill
+    assert sched.cancel(0) is True
+    assert sched.pool.free_slots == 2
+    assert sched.pool.blocks.used_blocks == 0
+    assert sched.stats.cancelled == 1
+    # the pool is clean: a follow-up request runs normally
+    sched.submit(Request(rid=1, prompt=toks[1, :6], max_new=4))
+    res = sched.run(max_steps=50)
+    assert 0 not in res and res[1].shape == (4,)
+    assert sched.pool.blocks.used_blocks == 0
+
+
+def test_cancel_during_fused_draft_reclaims_drafter_rows(served):
+    """cancel() while speculative decoding is active releases BOTH the
+    target pool slot/pages and the drafter layout's row for that rid."""
+    cfg, params = served
+    toks = _prompts(cfg, 2, 10)
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32,
+                      draft_params=params, spec_tokens=3)
+    assert sched.draft is not None
+    for i in range(2):
+        sched.submit(Request(rid=i, prompt=toks[i, :6], max_new=10))
+    for _ in range(2):                           # into the spec rounds
+        sched.step()
+    assert 0 in sched.active
+    assert sched.cancel(0) is True
+    assert sched.draft.layout.free_slots >= 1    # drafter row released
+    res = sched.run(max_steps=100)
+    assert 0 not in res and len(res[1]) == 10
+    assert sched.pool.free_slots == 2
+    assert sched.pool.blocks.used_blocks == 0
+    assert sched.draft.layout.free_slots == sched.draft.layout.num_slots
+
+
+def test_cancel_queued_request_is_journaled(tmp_path, served):
+    """A cancel that lands while the request is still queued writes a
+    ``cancel`` record so a resume never re-runs it."""
+    cfg, params = served
+    path = str(tmp_path / "j.jsonl")
+    sched = Scheduler(cfg, params, num_slots=1, max_len=16,
+                      journal=RequestJournal(path))
+    sched.submit(Request(rid=5, prompt=np.arange(4, dtype=np.int32),
+                         max_new=4))
+    assert sched.cancel(5) is True
+    sched.journal.close()
+    entries = journal_mod.replay(path)
+    assert entries[5].cancelled
+    s2 = Scheduler(cfg, params, num_slots=1, max_len=16)
+    assert journal_mod.resume_scheduler(s2, entries) == {}
+    assert not s2.queue and 5 not in s2.results

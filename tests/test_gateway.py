@@ -291,3 +291,144 @@ def test_gateway_client_disconnect_frees_slot(served):
     assert len(json.loads(nxt.split("\r\n\r\n", 1)[1])["tokens"]) == 4
     assert sched.stats.cancelled == 1
     assert "gone" not in sched.results
+
+
+# -- fault tolerance: drain + idempotent retries ----------------------------
+
+
+def _header(resp: str, name: str):
+    for line in resp.split("\r\n\r\n", 1)[0].split("\r\n")[1:]:
+        k, _, v = line.partition(":")
+        if k.strip().lower() == name.lower():
+            return v.strip()
+    return None
+
+
+def test_gateway_drain_refuses_new_work_with_retry_after(served):
+    """begin_drain(): /readyz flips to 503 and new generates get 503 +
+    Retry-After, while an in-flight request keeps streaming to done."""
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=40)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        ready_before = await _http(gw.port, "GET", "/readyz")
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        body = json.dumps({"prompt": _prompt(cfg), "max_new": 16,
+                           "rid": "inflight"}).encode()
+        w.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await w.drain()
+        await r.readuntil(b"token")            # streaming has begun
+        gw.begin_drain()
+        ready_after = await _http(gw.port, "GET", "/readyz")
+        refused = await _http(gw.port, "POST", "/v1/generate",
+                              {"prompt": _prompt(cfg), "max_new": 2,
+                               "rid": "late", "stream": False})
+        rest = (await r.read()).decode()       # in-flight finishes
+        w.close()
+        while not gw.drained():
+            await asyncio.sleep(0.01)
+        await gw.stop()
+        return ready_before, ready_after, refused, rest
+
+    ready_before, ready_after, refused, rest = _run(go())
+    assert _status(ready_before) == 200
+    assert _status(ready_after) == 503
+    assert _header(ready_after, "Retry-After") is not None
+    assert _status(refused) == 503
+    assert _header(refused, "Retry-After") is not None
+    assert "draining" in refused
+    assert '"done": true' in rest.lower()
+    assert "late" not in sched.results and "inflight" in sched.results
+
+
+def test_gateway_idempotency_key_dedups_retries(served):
+    """The same Idempotency-Key never double-admits: 409 while the
+    original is in flight, a 200 replay once it finished."""
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=40)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        first = await _http(gw.port, "POST", "/v1/generate",
+                            {"prompt": _prompt(cfg), "max_new": 4,
+                             "rid": "orig", "stream": False},
+                            headers={"Idempotency-Key": "abc"})
+        replay = await _http(gw.port, "POST", "/v1/generate",
+                             {"prompt": _prompt(cfg), "max_new": 4},
+                             headers={"Idempotency-Key": "abc"})
+        fresh = await _http(gw.port, "POST", "/v1/generate",
+                            {"prompt": _prompt(cfg), "max_new": 4,
+                             "rid": "other", "stream": False},
+                            headers={"Idempotency-Key": "xyz"})
+        await gw.stop()
+        return first, replay, fresh
+
+    first, replay, fresh = _run(go())
+    assert _status(first) == 200 and _status(fresh) == 200
+    body1 = json.loads(first.split("\r\n\r\n", 1)[1])
+    body2 = json.loads(replay.split("\r\n\r\n", 1)[1])
+    assert _status(replay) == 200 and body2["idempotent_replay"]
+    assert body2["tokens"] == body1["tokens"]
+    assert body2["rid"] == "orig"
+    assert sched.stats.submitted == 2          # replay never admitted
+
+
+def test_gateway_idempotency_conflict_while_in_flight(served):
+    """A retry racing the original gets 409 + Retry-After instead of a
+    duplicate stream; seeding from a journal map works the same way."""
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=136)
+    gw = Gateway(sched)
+
+    async def go():
+        await gw.start()
+        r, w = await asyncio.open_connection("127.0.0.1", gw.port)
+        body = json.dumps({"prompt": _prompt(cfg), "max_new": 128,
+                           "rid": "slow"}).encode()
+        w.write((f"POST /v1/generate HTTP/1.1\r\nHost: t\r\n"
+                 f"Idempotency-Key: race\r\n"
+                 f"Content-Length: {len(body)}\r\n\r\n").encode() + body)
+        await w.drain()
+        await r.readuntil(b"token")            # admitted, streaming
+        dup = await _http(gw.port, "POST", "/v1/generate",
+                          {"prompt": _prompt(cfg), "max_new": 4},
+                          headers={"Idempotency-Key": "race"})
+        w.transport.abort()                    # let the run end fast
+        await gw.stop()
+        return dup
+
+    dup = _run(go())
+    assert _status(dup) == 409
+    assert _header(dup, "Retry-After") is not None
+    assert json.loads(dup.split("\r\n\r\n", 1)[1])["rid"] == "slow"
+
+
+def test_gateway_seed_idempotency_replays_journaled_result(served):
+    """Across a restart: a finished rid preloaded from the journal
+    (results + idempotency map) satisfies a client retry without
+    re-decoding."""
+    from repro.serve import journal as journal_mod
+
+    cfg, params = served
+    sched = Scheduler(cfg, params, num_slots=1, max_len=40)
+    sched.results["done-rid"] = np.asarray([3, 1, 4], np.int32)
+    gw = Gateway(sched)
+    gw.seed_idempotency({"restart-key": ("done-rid", True)})
+
+    async def go():
+        await gw.start()
+        resp = await _http(gw.port, "POST", "/v1/generate",
+                           {"prompt": _prompt(cfg), "max_new": 4},
+                           headers={"Idempotency-Key": "restart-key"})
+        await gw.stop()
+        return resp
+
+    resp = _run(go())
+    assert _status(resp) == 200
+    body = json.loads(resp.split("\r\n\r\n", 1)[1])
+    assert body["tokens"] == [3, 1, 4] and body["idempotent_replay"]
+    assert sched.stats.submitted == 0          # nothing re-decoded

@@ -354,3 +354,31 @@ def test_json_log_events(capsys):
     # disabled again: no further records
     telemetry_mod.log_event("after")
     assert "after" not in capsys.readouterr().out
+
+
+# -- robustness counters ----------------------------------------------------
+
+
+def test_prometheus_robustness_counters_present():
+    """The fault-tolerance counters ride the standard exposition: typed,
+    helped, zero-valued on an idle server (so dashboards can alert on
+    any increase without first causing a fault)."""
+    s = ServeStats(slots=2)
+    text = telemetry_mod.prometheus_text(s)
+    samples = _parse_prom(text)
+    for name in ("fault_injected", "swap_rejected_corrupt",
+                 "plan_retries", "journal_replayed"):
+        key = f"repro_serve_{name}_total"
+        assert samples[key] == "0", key
+        assert f"# TYPE {key} counter" in text
+    s.fault_injected = 3
+    s.swap_rejected_corrupt = 1
+    s.plan_retries = 2
+    s.journal_replayed = 4
+    samples = _parse_prom(telemetry_mod.prometheus_text(s))
+    assert samples["repro_serve_fault_injected_total"] == "3"
+    assert samples["repro_serve_swap_rejected_corrupt_total"] == "1"
+    assert samples["repro_serve_plan_retries_total"] == "2"
+    assert samples["repro_serve_journal_replayed_total"] == "4"
+    d = s.as_dict()
+    assert d["fault_injected"] == 3 and d["journal_replayed"] == 4
