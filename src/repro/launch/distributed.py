@@ -116,6 +116,44 @@ def build_parser() -> argparse.ArgumentParser:
                          "whole job up to N times with a fresh "
                          "coordinator, resuming from the previous "
                          "generation's --journal")
+    # online LTFB arena (mirrors launch.serve; every rank mirrors the
+    # roster, rank 0 owns the registry archive + write-back)
+    ap.add_argument("--arena", default=None,
+                    help="serve an N-member population roster from this "
+                         "LTFB checkpoint dir as an ONLINE tournament: "
+                         "champion serves, challengers draft, accept "
+                         "rate scores matches, winners hot-swap in — "
+                         "host 0 decides, the promotion rides the step "
+                         "plan")
+    ap.add_argument("--arena-policy", default="champion",
+                    choices=("champion", "epsilon", "shadow"),
+                    help="challenger routing: champion = best "
+                         "challenger drafts (exploit); epsilon = mostly "
+                         "best, periodically round-robin; shadow = "
+                         "round-robin every stint (even sampling)")
+    ap.add_argument("--arena-window", type=int, default=128,
+                    help="sliding accept-rate window per member, in "
+                         "speculative row-rounds (the match metric)")
+    ap.add_argument("--arena-margin", type=float, default=0.02,
+                    help="a challenger must beat the champion's "
+                         "promotion-time accept rate by this margin to "
+                         "win a match")
+    ap.add_argument("--arena-min-samples", type=int, default=32,
+                    help="proposals a challenger's window must hold "
+                         "before it can qualify for promotion")
+    ap.add_argument("--arena-hysteresis", type=int, default=2,
+                    help="consecutive winning match evaluations before "
+                         "a promotion fires")
+    ap.add_argument("--arena-check-every", type=int, default=8,
+                    help="scheduler steps between match evaluations")
+    ap.add_argument("--arena-writeback", default=None,
+                    help="rank 0 writes finished request/response "
+                         "streams back as datastore token shards in "
+                         "this dir (train->serve->train)")
+    ap.add_argument("--arena-seq", type=int, default=64,
+                    help="write-back row width minus one: rows are "
+                         "(seq+1) tokens, matching launch/ltfb.py "
+                         "--seq so shards re-ingest directly")
     return ap
 
 
@@ -250,12 +288,24 @@ def run_worker(args) -> int:
     if args.fault_spec:
         from repro.serve.faults import FaultInjector
         faults = FaultInjector(args.fault_spec, rank=args.process_id)
+    # online LTFB arena: EVERY rank mirrors the roster (promotions are
+    # replayed from the plan); rank 0 alone archives + writes back.
+    # All ranks replay the journaled arena state on resume (shared
+    # filesystem) so the mesh starts aligned on the same champion.
+    arena, spec_tokens, draft_params = None, 0, None
+    if args.arena:
+        from repro.launch.serve import make_arena
+        arena = make_arena(args, cfg, params, rank=args.process_id)
+        spec_tokens = 4
+        draft_params = arena.drafter_params
     sched = MeshScheduler(
-        cfg, params, mesh_shape=parse_mesh(args.mesh),
+        cfg, arena.champion_params if arena is not None else params,
+        mesh_shape=parse_mesh(args.mesh),
         local_mesh=args.num_processes > 1,
         step_timeout_s=args.step_timeout,
         num_slots=args.slots, max_len=max_len,
-        journal=journal, faults=faults)
+        journal=journal, faults=faults, arena=arena,
+        draft_params=draft_params, spec_tokens=spec_tokens)
     rank = jax.process_index()
     print(f"[dist] rank={rank}/{args.num_processes} arch={cfg.name} "
           f"mesh={args.mesh} feed={args.feed} slots={sched.pool.num_slots} "
@@ -305,10 +355,16 @@ def run_worker(args) -> int:
     sched.stats.stop()
     if rank == 0:
         sched.stats.report(prefix="[dist]")
+        if arena is not None:
+            arena.report(prefix="[dist][arena]")
+    if arena is not None:
+        arena.close()
     out = {"rank": rank,
            "results": {str(rid): [int(t) for t in toks]
                        for rid, toks in results.items()},
            "stats": sched.stats.as_dict()}
+    if arena is not None:
+        out["arena"] = arena.snapshot()
     if rank == 0:
         # the gathered per-rank snapshots — host-0's export covers the
         # whole mesh, so one scrape sees every process's counters

@@ -87,6 +87,43 @@ def make_registry(args, like_params, metric_fn=None,
                          val_batch=val_batch, auto_export=True)
 
 
+def make_arena(args, cfg, like, rank: int = 0):
+    """Build the online-LTFB arena from the CLI flags (None when
+    ``--arena`` was not given).  With ``--resume-journal`` the arena
+    state (champion, windows, generation) is restored from the journal
+    BEFORE the scheduler is built, so the resumed process serves the
+    journaled champion from its first step."""
+    if not getattr(args, "arena", None):
+        return None
+    from repro.serve.arena import Arena, ArenaConfig
+    acfg = ArenaConfig(policy=args.arena_policy,
+                       window=args.arena_window,
+                       min_samples=args.arena_min_samples,
+                       margin=args.arena_margin,
+                       hysteresis=args.arena_hysteresis,
+                       check_every=args.arena_check_every,
+                       seq_len=args.arena_seq)
+    arena = Arena.from_population(
+        args.arena, like, acfg,
+        writeback_dir=getattr(args, "arena_writeback", None),
+        vocab=cfg.vocab_size, rank=rank)
+    if getattr(args, "resume_journal", None):
+        from repro.serve import journal as journal_mod
+        state = journal_mod.replay_arena(args.resume_journal)
+        if state:
+            arena.restore(state)
+            print(f"[serve] arena: restored from journal — champion="
+                  f"{arena.champion} generation={arena.generation} "
+                  f"promotions={arena.promotions}")
+    print(f"[serve] arena: {args.arena} policy={acfg.policy} "
+          f"members={len(arena.members)} champion={arena.champion} "
+          f"drafter={arena.active_drafter} window={acfg.window} "
+          f"margin={acfg.margin} min_samples={acfg.min_samples} "
+          f"hysteresis={acfg.hysteresis} "
+          f"writeback={getattr(args, 'arena_writeback', None)}")
+    return arena
+
+
 def run_lm(args) -> Dict[str, object]:
     from repro.models.lm import init_lm
     from repro.serve.registry import check_draft_compat, load_draft
@@ -94,7 +131,14 @@ def run_lm(args) -> Dict[str, object]:
     cfg = get_config(args.arch, smoke=args.smoke)
     like, _ = init_lm(cfg, jax.random.PRNGKey(args.seed))
     params = like
-    registry = make_registry(args, like)
+    if args.arena and (args.ckpt_dir or args.draft_ckpt):
+        raise SystemExit(
+            "--arena replaces both --ckpt-dir (promotions ARE the hot "
+            "swap) and --draft-ckpt (challengers ARE the drafters); "
+            "drop those flags")
+    arena = make_arena(args, cfg, like)
+    # the arena replaces the registry: promotions drive the hot swap
+    registry = make_registry(args, like) if arena is None else None
     if registry is not None:
         params = registry.load()
         print(f"[serve] winner: step={registry.step} "
@@ -118,6 +162,9 @@ def run_lm(args) -> Dict[str, object]:
               f"step={dinfo.get('step')} trainer={dinfo.get('trainer')} "
               f"spec_tokens={args.spec_tokens} "
               f"fused={not args.no_spec_fused} adapt={args.spec_adapt}")
+    if arena is not None:
+        params = arena.champion_params
+        draft_params = arena.drafter_params
     journal = None
     if getattr(args, "journal", None):
         from repro.serve.journal import RequestJournal
@@ -145,7 +192,7 @@ def run_lm(args) -> Dict[str, object]:
         draft_cfg=draft_cfg, spec_fused=not args.no_spec_fused,
         spec_adapt=args.spec_adapt,
         max_queue=getattr(args, "max_queue", None),
-        journal=journal, faults=faults,
+        journal=journal, faults=faults, arena=arena,
         telemetry=not args.no_telemetry)
     if args.mesh:
         from repro.serve.mesh import MeshScheduler, parse_mesh
@@ -175,6 +222,10 @@ def run_lm(args) -> Dict[str, object]:
     if getattr(args, "gateway", False):
         out = run_gateway(args, sched, journal_entries=journal_entries)
         _maybe_write_trace(args, sched)
+        if arena is not None:
+            arena.report()
+            arena.close()
+            out["arena"] = arena.snapshot()
         if journal is not None:
             journal.close()
         return out
@@ -217,6 +268,9 @@ def run_lm(args) -> Dict[str, object]:
     if registry is not None:
         print(f"[serve] registry: serving_step={registry.step} "
               f"hot_swaps={sched.stats.hot_swaps}")
+    if arena is not None:
+        arena.report()
+        arena.close()
     sample = results.get(reqs[0].rid)
     if sample is None and results:
         sample = next(iter(results.values()))
@@ -229,6 +283,8 @@ def run_lm(args) -> Dict[str, object]:
     out = {"stats": sched.stats.as_dict(), "pool": pd,
            "registry_step": registry.step if registry else None,
            "results": results}
+    if arena is not None:
+        out["arena"] = arena.snapshot()
     _maybe_write_json(args, out)
     return out
 
@@ -242,6 +298,8 @@ def _maybe_write_json(args, out: Dict[str, object]) -> None:
     payload = {"stats": out["stats"],
                "results": {str(k): [int(t) for t in v]
                            for k, v in out.get("results", {}).items()}}
+    if out.get("arena") is not None:
+        payload["arena"] = out["arena"]
     with open(args.out_json, "w") as f:
         json.dump(payload, f)
     print(f"[serve] wrote {args.out_json}")
@@ -282,7 +340,8 @@ def run_gateway(args, sched, journal_entries=None) -> Dict[str, object]:
               f"max_queue={sched.max_queue} "
               f"stream_buffer={gw.stream_buffer} "
               f"(POST /v1/generate, GET /healthz, GET /readyz, "
-              f"GET /metrics, GET /debug/trace, POST /debug/profile)")
+              f"GET /metrics, GET /population, POST /arena/promote, "
+              f"GET /debug/trace, POST /debug/profile)")
         loop = asyncio.get_running_loop()
         stop = asyncio.Event()
 
@@ -430,6 +489,45 @@ def build_parser() -> argparse.ArgumentParser:
                     help="adapt the speculative depth PER ROW from its "
                          "accept-rate history (within [1, spec-tokens]); "
                          "per-row K reported in the [serve] metrics")
+    # online LTFB arena (serve/arena.py: live-traffic tournament)
+    ap.add_argument("--arena", default=None,
+                    help="serve an N-member population roster from this "
+                         "LTFB checkpoint dir as an ONLINE tournament: "
+                         "the champion serves, challengers draft "
+                         "speculatively, accept rate scores matches, "
+                         "and winners are hot-swapped in (replaces "
+                         "--ckpt-dir and --draft-ckpt; lm workload)")
+    ap.add_argument("--arena-policy", default="champion",
+                    choices=("champion", "epsilon", "shadow"),
+                    help="challenger routing: champion = best "
+                         "challenger drafts (exploit); epsilon = mostly "
+                         "best, periodically round-robin (explore/"
+                         "exploit); shadow = round-robin every stint "
+                         "(even sampling)")
+    ap.add_argument("--arena-window", type=int, default=128,
+                    help="sliding accept-rate window per member, in "
+                         "speculative row-rounds (the match metric)")
+    ap.add_argument("--arena-margin", type=float, default=0.02,
+                    help="a challenger must beat the champion's "
+                         "promotion-time accept rate by this margin to "
+                         "win a match")
+    ap.add_argument("--arena-min-samples", type=int, default=32,
+                    help="proposals a challenger's window must hold "
+                         "before it can qualify for promotion")
+    ap.add_argument("--arena-hysteresis", type=int, default=2,
+                    help="consecutive winning match evaluations before "
+                         "a promotion fires")
+    ap.add_argument("--arena-check-every", type=int, default=8,
+                    help="scheduler steps between match evaluations")
+    ap.add_argument("--arena-writeback", default=None,
+                    help="write finished request/response streams back "
+                         "as datastore token shards in this dir — the "
+                         "next launch/ltfb.py round ingests production "
+                         "traffic (train->serve->train)")
+    ap.add_argument("--arena-seq", type=int, default=64,
+                    help="write-back row width minus one: rows are "
+                         "(seq+1) tokens, matching launch/ltfb.py "
+                         "--seq so shards re-ingest directly")
     ap.add_argument("--swap-mode", default="immediate",
                     choices=("immediate", "drain"),
                     help="hot-swap policy: immediate applies new "
@@ -520,7 +618,7 @@ def main(argv=None) -> int:
 
     if args.log_json:
         telemetry_mod.enable_json_logs()
-    if args.draft_ckpt and args.spec_tokens <= 0:
+    if (args.draft_ckpt or args.arena) and args.spec_tokens <= 0:
         args.spec_tokens = 4            # a drafter implies speculation
     workload = args.workload or \
         ("surrogate" if args.arch == "icf-cyclegan" else "lm")

@@ -226,6 +226,8 @@ class Gateway:
                 op = self._control.popleft()
                 if op[0] == "profile":
                     sched.profile_steps(op[1], op[2])
+                elif op[0] == "promote":
+                    sched.arena_force(op[1])
                 busy = True
             for rid in sched.shed_expired():
                 self._post_error(rid, "shed: TTFT deadline expired "
@@ -390,6 +392,16 @@ class Gateway:
                     writer, 200, telemetry_mod.scheduler_prometheus(sched),
                     content_type="text/plain; version=0.0.4; "
                                  "charset=utf-8")
+        elif method == "GET" and path == "/population":
+            arena = getattr(sched, "arena", None)
+            if arena is None:
+                await _respond(writer, 404,
+                               {"error": "no arena attached "
+                                         "(serve with --arena)"})
+            else:
+                await _respond(writer, 200, arena.snapshot())
+        elif method == "POST" and path == "/arena/promote":
+            await self._arena_promote(body, writer)
         elif method == "GET" and path == "/debug/trace":
             await _respond(writer, 200, sched.telemetry.tracer.export())
         elif method == "POST" and path == "/debug/profile":
@@ -418,6 +430,37 @@ class Gateway:
         self._control.append(("profile", steps, outdir))
         await _respond(writer, 200,
                        {"armed": True, "steps": steps, "dir": outdir})
+
+    async def _arena_promote(self, body: bytes,
+                             writer: asyncio.StreamWriter) -> None:
+        """``POST /arena/promote``: admin override — force the named
+        challenger to win the next match evaluation (still through the
+        transactional archive + drain-aware swap).  The override rides
+        the control queue so the driver stays the scheduler's only
+        caller."""
+        arena = getattr(self.sched, "arena", None)
+        if arena is None:
+            await _respond(writer, 404,
+                           {"error": "no arena attached "
+                                     "(serve with --arena)"})
+            return
+        try:
+            d = json.loads(body.decode() or "{}")
+            member = d.get("member")
+            if not isinstance(member, str) or member not in arena.members:
+                raise ValueError(
+                    f"unknown arena member {member!r}; roster is "
+                    f"{sorted(arena.members)}")
+            if member == arena.champion:
+                raise ValueError(
+                    f"{member!r} is already the champion")
+        except (ValueError, TypeError, json.JSONDecodeError) as e:
+            await _respond(writer, 400, {"error": f"bad request: {e}"})
+            return
+        self._control.append(("promote", member))
+        await _respond(writer, 200,
+                       {"queued": True, "member": member,
+                        "champion": arena.champion})
 
     async def _generate(self, body: bytes,
                         writer: asyncio.StreamWriter,

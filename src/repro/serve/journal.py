@@ -20,6 +20,15 @@ Record types (one JSON object per line):
   * ``cancel``   — a request cancelled/shed before completion.
   * ``note``     — free-form operational marker (``peer_death``,
     ``shutdown``) so a replay can tell a clean drain from a crash.
+  * ``match``    — one online-LTFB arena match evaluation
+    (``serve/arena.py``), carrying the full arena snapshot.
+  * ``promotion`` — an arena champion promotion: winner/loser/rate plus
+    the post-promotion arena snapshot.  Synced IMMEDIATELY and written
+    BEFORE the weight swap, so a resumed generation serves the new
+    champion iff the record is durable (see :func:`replay_arena`).
+
+Replay ignores record types it does not know, so journals written by a
+newer arena-enabled server still replay on older readers.
 
 Durability contract: :meth:`RequestJournal.step_commit` performs ONE
 ``write + flush`` per scheduler step (submits and cancels fsync
@@ -138,6 +147,26 @@ class RequestJournal:
         self._append(rec)
         self._sync()
 
+    def record_match(self, step: int, arena: dict) -> None:
+        """Journal one arena match evaluation with the full arena
+        snapshot — replayed by :func:`replay_arena` so sliding windows
+        and hysteresis streaks survive a crash."""
+        self._append({"t": "match", "step": int(step), "arena": arena})
+        self._sync()
+
+    def record_promotion(self, step: int, winner: str, loser: str,
+                         rate: float, forced: bool,
+                         arena: dict) -> None:
+        """Journal an arena promotion (synced immediately, BEFORE the
+        weight swap): ``arena`` is the post-promotion snapshot, so a
+        torn record means the swap never happened and replay lands on
+        the pre-promotion state — either way consistent."""
+        self._append({"t": "promotion", "step": int(step),
+                      "winner": winner, "loser": loser,
+                      "rate": float(rate), "forced": bool(forced),
+                      "arena": arena})
+        self._sync()
+
     def step_commit(self, tokens: Dict[Any, List[int]],
                     finished: List[Any]) -> None:
         """Commit one scheduler step: tokens appended per rid, then the
@@ -214,6 +243,36 @@ def replay(path: str) -> Dict[Any, JournalEntry]:
                 entries[rid].cancelled = True
         # "note" records carry no per-request state
     return entries
+
+
+def replay_arena(path: str) -> Optional[dict]:
+    """Reconstruct arena state from a journal: the LAST durable
+    ``match``/``promotion`` record's snapshot (None when the journal
+    holds neither).
+
+    Stops at the first undecodable line, exactly like :func:`replay`:
+    a promotion record torn mid-write is NOT durable, and because the
+    journal sync is ordered before the weight swap, the crashed
+    generation never served the new champion — so resuming from the
+    preceding snapshot is token-identical.
+    """
+    state: Optional[dict] = None
+    try:
+        raw = open(path, "rb").read()
+    except FileNotFoundError:
+        return None
+    for line in raw.split(b"\n"):
+        if not line.strip():
+            continue
+        try:
+            rec = json.loads(line)
+        except ValueError:
+            break                       # torn tail — stop replay here
+        if rec.get("t") in ("match", "promotion"):
+            arena = rec.get("arena")
+            if isinstance(arena, dict):
+                state = arena
+    return state
 
 
 def resume_request(entry: JournalEntry):

@@ -182,6 +182,10 @@ class StepPlan:
     submits: List[Dict[str, Any]] = field(default_factory=list)
     cancels: List[List[Any]] = field(default_factory=list)
     stop: bool = False
+    # online-LTFB arena: the member host 0's match evaluation promoted
+    # to champion this step (None: no promotion).  Followers apply the
+    # identical promotion before admission replay.
+    promote: Optional[str] = None
 
     def encode(self) -> bytes:
         """Serialize to the JSON wire format (bytes)."""
@@ -189,17 +193,19 @@ class StepPlan:
                            "admits": list(self.admits),
                            "submits": list(self.submits),
                            "cancels": [list(c) for c in self.cancels],
-                           "stop": self.stop}).encode()
+                           "stop": self.stop,
+                           "promote": self.promote}).encode()
 
     @classmethod
     def decode(cls, payload: bytes) -> "StepPlan":
         """Parse the JSON wire format (tolerates plans from older
-        writers that lack the submit/cancel/stop fields)."""
+        writers that lack the submit/cancel/stop/promote fields)."""
         d = json.loads(payload.decode())
         return cls(winner=d["winner"], admits=d["admits"],
                    submits=d.get("submits", []),
                    cancels=d.get("cancels", []),
-                   stop=d.get("stop", False))
+                   stop=d.get("stop", False),
+                   promote=d.get("promote"))
 
 
 def broadcast_plan(plan: StepPlan) -> StepPlan:
@@ -821,6 +827,9 @@ class MeshScheduler(Scheduler):
             winner = self._poll_registry()
             self._step_count += 1
             self._apply_swap(winner)
+            self._arena_rotate()
+            promote = self._arena_decide()
+            self._arena_apply(promote)
             submits = list(self._pending_submits)
             self._pending_submits.clear()
             cancels = [[rid, reason] for rid, reason
@@ -830,7 +839,7 @@ class MeshScheduler(Scheduler):
             admits = self._admission_phase()
             plan = self.channel.broadcast(StepPlan(
                 winner=winner, admits=admits, submits=submits,
-                cancels=cancels))
+                cancels=cancels, promote=promote))
         else:
             if plan is None:  # pragma: no cover (multi-host follower)
                 plan = self.channel.broadcast(None)
@@ -846,6 +855,10 @@ class MeshScheduler(Scheduler):
                 # no registry attached: there is nothing to swap to —
                 # but still run the pending-drain half of the check
                 self._apply_swap(None)
+            # arena: followers replay host 0's promotion verbatim (the
+            # rotation itself is a pure function of replicated state)
+            self._arena_rotate()
+            self._arena_apply(plan.promote)
             self._apply_submits(plan.submits)
             for rid, reason in plan.cancels:
                 self._cancel_now(rid, reason)

@@ -188,6 +188,9 @@ class ServeStats:
     swap_rejected_corrupt: int = 0  # hot-swaps refused: corrupt checkpoint
     plan_retries: int = 0          # mesh plan-channel fetch retries
     journal_replayed: int = 0      # requests requeued from a WAL journal
+    # online LTFB arena (serve/arena.py)
+    arena_matches: int = 0         # match evaluations run
+    arena_promotions: int = 0      # champion promotions applied
     steps: int = 0
     queue_depth_sum: int = 0
     queue_depth_max: int = 0
@@ -263,6 +266,8 @@ class ServeStats:
             "swap_rejected_corrupt": self.swap_rejected_corrupt,
             "plan_retries": self.plan_retries,
             "journal_replayed": self.journal_replayed,
+            "arena_matches": self.arena_matches,
+            "arena_promotions": self.arena_promotions,
             "wall_s": wall,
             # wall is 0.0 before the first step: a /metrics scrape of an
             # idle gateway must not divide by zero
@@ -322,6 +327,9 @@ class ServeStats:
                 f"swap_rejected_corrupt={d['swap_rejected_corrupt']} "
                 f"plan_retries={d['plan_retries']} "
                 f"journal_replayed={d['journal_replayed']}")
+        if self.arena_matches or self.arena_promotions:
+            log(f"{prefix} arena: matches={d['arena_matches']} "
+                f"promotions={d['arena_promotions']}")
         if self.spec_rounds:
             log(f"{prefix} speculative: rounds={d['spec_rounds']} "
                 f"accept_rate={d['spec_accept_rate'] * 100:.0f}% "

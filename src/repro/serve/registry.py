@@ -118,15 +118,20 @@ def population_steps(ckpt_dir: str) -> List[int]:
                   if f.startswith("step_") and f.endswith(".manifest"))
 
 
-def check_draft_compat(target_cfg, draft_cfg) -> None:
+def check_draft_compat(target_cfg, draft_cfg,
+                       member: Optional[str] = None) -> None:
     """Serving a draft arch different from the target's is fine — the
     drafter only PROPOSES tokens — but the two must share a token
     space: draft samples index the target's embedding, so an unequal
     vocab is a tokenizer mismatch, not a shape detail.  Raises a clear
-    ValueError instead of letting the embedding lookup break later."""
+    ValueError — naming the offending member/checkpoint via ``member``
+    (arena rosters make multi-member load failures common) and both
+    vocab sizes — instead of letting the embedding lookup break later."""
     if draft_cfg.vocab_size != target_cfg.vocab_size:
+        who = f"draft member {member!r} (arch {draft_cfg.name!r})" \
+            if member else f"draft arch {draft_cfg.name!r}"
         raise ValueError(
-            f"draft arch {draft_cfg.name!r} has vocab_size "
+            f"{who} has vocab_size "
             f"{draft_cfg.vocab_size} but the target {target_cfg.name!r} "
             f"has {target_cfg.vocab_size}: the two models are tokenizer-"
             "incompatible — draft proposals would index the wrong "
@@ -169,10 +174,11 @@ def load_draft(path: str, like_params: Params,
     if expect_vocab is not None:
         got = _embed_vocab(params)
         if got is not None and got != expect_vocab:
+            kind = "member dir" if os.path.isdir(path) else "checkpoint"
             raise ValueError(
-                f"draft checkpoint {path!r} has vocab_size {got} but "
-                f"the serving target expects {expect_vocab}: the "
-                "drafter is tokenizer-incompatible with the target.")
+                f"draft {kind} {path!r} has vocab_size {got} but "
+                f"the serving target expects vocab_size {expect_vocab}: "
+                "the drafter is tokenizer-incompatible with the target.")
     return params, meta
 
 
@@ -201,9 +207,15 @@ def load_population_params(ckpt_dir: str, step: int, like_params: Params
         manifest = json.load(f)
     params, metas = [], []
     for i in range(manifest["num_trainers"]):
-        tree, meta = ckpt.restore(
-            os.path.join(ckpt_dir, f"step_{step}_trainer_{i}.ckpt"),
-            {"params": like_params})
+        member = os.path.join(ckpt_dir, f"step_{step}_trainer_{i}.ckpt")
+        try:
+            tree, meta = ckpt.restore(member, {"params": like_params})
+        except Exception as e:
+            raise ValueError(
+                f"population member trainer_{i} of {ckpt_dir!r} failed "
+                f"to restore from {member!r}: {type(e).__name__}: {e} "
+                "(wrong --arch for this population, or a torn trainer "
+                "checkpoint?)") from e
         params.append(tree["params"])
         metas.append(meta)
     return params, metas
@@ -245,6 +257,32 @@ def export_winner(ckpt_dir: str, like_params: Params,
     ckpt.save(path, {"params": params[idx]}, metadata=info)
     write_checksum(path)
     return path, info
+
+
+def archive_member(ckpt_dir: str, name: str, params: Params,
+                   generation: int, tag: str = "retired") -> str:
+    """Archive an arena roster member as a dated registry generation.
+
+    The online-LTFB promotion transaction (``serve/arena.py``) calls
+    this twice — once to quarantine the dethroned champion
+    (``tag="retired"``) and once to export the winner
+    (``tag="champion"``) — writing
+    ``<ckpt_dir>/arena/gen_<NNNN>_<date>_<tag>_<name>.ckpt`` with a
+    sha256 sidecar, so every promotion leaves an auditable, restorable
+    trail.  Returns the checkpoint path.
+    """
+    import datetime
+
+    adir = os.path.join(ckpt_dir, "arena")
+    os.makedirs(adir, exist_ok=True)
+    date = datetime.date.today().isoformat()
+    path = os.path.join(
+        adir, f"gen_{int(generation):04d}_{date}_{tag}_{name}.ckpt")
+    ckpt.save(path, {"params": params},
+              metadata={"member": name, "generation": int(generation),
+                        "tag": tag, "date": date})
+    write_checksum(path)
+    return path
 
 
 class ModelRegistry:

@@ -163,7 +163,7 @@ class Scheduler:
                  max_queue: Optional[int] = None,
                  telemetry: bool = True,
                  trace_capacity: int = 8192,
-                 journal=None, faults=None):
+                 journal=None, faults=None, arena=None):
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
         if layout not in ("paged", "dense"):
@@ -273,6 +273,16 @@ class Scheduler:
         # fired at the top of each step
         self.journal = journal
         self.faults = faults
+        # online LTFB: the resident population roster + tournament
+        # (serve/arena.py); drives drafter rotation and champion
+        # promotions from inside step()
+        self.arena = arena
+        if arena is not None and (self.draft is None
+                                  or self.spec_tokens <= 0):
+            raise ValueError(
+                "an online-LTFB arena scores challengers through the "
+                "speculative path: pass draft_params (the active "
+                "challenger's weights) and spec_tokens > 0")
         self._journal_tokens: Dict[Any, List[int]] = {}
         self._journal_finished: List[Any] = []
         self._pending_params = None
@@ -556,6 +566,8 @@ class Scheduler:
     def _finish(self, act: _Active) -> None:
         rid = act.req.rid
         self.results[rid] = np.asarray(act.tokens, np.int32)
+        if self.arena is not None:
+            self.arena.record_finished(rid, act.req.prompt, act.tokens)
         if self.journal is not None:
             self._journal_finished.append(rid)
         if self.spec_adapt:
@@ -714,6 +726,81 @@ class Scheduler:
     def _maybe_hot_swap(self) -> None:
         self._apply_swap(self._poll_registry())
 
+    # -- online LTFB arena (serve/arena.py) ----------------------------------
+    def _arena_rotate(self) -> None:
+        """Rotate the drafter session to the policy's pick for this
+        step.  Pure function of (step, arena state) — every mesh host
+        computes the same rotation without a broadcast."""
+        if self.arena is None:
+            return
+        want = self.arena.drafter_for_step(self._step_count)
+        if want != self.arena.active_drafter:
+            self.arena.set_drafter(want)
+            self.draft.set_params(self.arena.params[want])
+
+    def _arena_decide(self) -> Optional[str]:
+        """Host-0 half of a promotion: run the match evaluation, journal
+        it, and — when the rule fires — run the transactional registry
+        archive (checksum-verified) BEFORE anything mutates.  Returns
+        the winner to broadcast, or None."""
+        if self.arena is None:
+            return None
+        a = self.arena
+        if a.forced is None and self._step_count % a.cfg.check_every != 0:
+            return None
+        winner = a.decide(self._step_count)
+        self.stats.arena_matches = a.matches
+        if self.journal is not None:
+            self.journal.record_match(self._step_count, a.snapshot())
+        if winner is None:
+            return None
+        prepared = a.prepare_promotion(winner)
+        if prepared is None:
+            # archive/export failed verification: abort, keep serving
+            self.stats.swap_rejected_corrupt += 1
+            return None
+        return prepared
+
+    def _arena_apply(self, winner: Optional[str]) -> None:
+        """All-hosts half of a promotion: mutate arena state, journal
+        the promotion (host 0; ordered BEFORE the weight swap so a torn
+        record implies no swap), then hot-swap the target to the new
+        champion — drain-aware, in-flight requests finish on the old
+        weights."""
+        if self.arena is None or winner is None:
+            return
+        a = self.arena
+        loser = a.champion
+        new_params = a.promote(winner, self._step_count)
+        rec = a.last_promotion
+        self.stats.arena_promotions = a.promotions
+        if self.journal is not None:
+            self.journal.record_promotion(
+                self._step_count, winner, loser, rec["rate"],
+                a.last_forced, a.snapshot())
+        if self.swap_mode == "drain" and (self.active or self.prefilling):
+            self._pending_params = new_params
+        else:
+            self._pending_params = None
+            self.set_params(new_params)
+        # the promotion recomputed the rotation; resync the drafter
+        self.draft.set_params(a.params[a.active_drafter])
+        log_event("arena_promotion", step=self._step_count,
+                  winner=winner, loser=loser, rate=rec["rate"],
+                  generation=a.generation)
+
+    def arena_force(self, member: str) -> None:
+        """Queue an admin promotion override (``POST /arena/promote``):
+        the next match evaluation promotes ``member`` unconditionally —
+        still through the transactional archive + drain-aware swap."""
+        if self.arena is None:
+            raise ValueError("no arena attached to this scheduler")
+        if member not in self.arena.members:
+            raise ValueError(
+                f"unknown arena member {member!r}; roster is "
+                f"{sorted(self.arena.members)}")
+        self.arena.forced = member
+
     def _admission_phase(self) -> List[Any]:
         """Pop admissible queued requests and claim their slots/pages
         (host accounting only); returns the admitted rids in order —
@@ -806,6 +893,8 @@ class Scheduler:
             self.faults.on_step(self, self._step_count + 1)
         self._maybe_hot_swap()
         self._step_count += 1
+        self._arena_rotate()
+        self._arena_apply(self._arena_decide())
         self._timed_phases()
         self.stats.sample_step(len(self.queue),
                                len(self.active) + len(self.prefilling))
@@ -1016,6 +1105,8 @@ class Scheduler:
             accepted = max(0, appended - 1)
             self.stats.spec_draft_proposed += offered
             self.stats.spec_draft_accepted += accepted
+            if self.arena is not None:
+                self.arena.record_spec(offered, accepted)
             if offered:
                 self.stats.spec_k_sum += offered
                 self.stats.spec_k_rows += 1

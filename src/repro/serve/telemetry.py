@@ -373,6 +373,8 @@ _SNAPSHOT_COUNTERS = (
     "swap_rejected_corrupt",
     "plan_retries",
     "journal_replayed",
+    "arena_matches",
+    "arena_promotions",
 )
 
 
@@ -405,6 +407,9 @@ def stats_snapshot(sched: Any, rank: int = 0) -> dict:
         getattr(sched, "prefilling", ())
     )
     snap["shards"] = _pool_shards(sched)
+    arena = getattr(sched, "arena", None)
+    if arena is not None:
+        snap["arena"] = arena.counters()
     return snap
 
 
@@ -441,6 +446,8 @@ _COUNTER_HELP = {
         "hot swaps rejected on a corrupt/torn winner checkpoint",
     "plan_retries": "mesh plan-channel fetch retries before success",
     "journal_replayed": "requests requeued from the request journal",
+    "arena_matches": "online-LTFB arena match evaluations",
+    "arena_promotions": "online-LTFB arena champion promotions",
 }
 
 _SHARD_GAUGES = {
@@ -479,6 +486,60 @@ def _hist_lines(out: List[str], name: str, help_: str, series: Any) -> None:
     out.append(f"{name}_count {series.hist.total}")
 
 
+def _arena_lines(out: List[str], arena: dict) -> None:
+    """Append the online-LTFB arena families (per-member accept-rate /
+    served-token gauges + the promotion counter) from an
+    ``Arena.counters()`` dict."""
+    members = arena.get("members", {})
+    fams = (
+        ("accept_rate", "gauge",
+         "per-member sliding-window spec accept rate",
+         lambda m: m.get("accept_rate", 0.0)),
+        ("served_tokens", "gauge",
+         "tokens served while the member was champion",
+         lambda m: int(m.get("served_tokens", 0))),
+    )
+    for suffix, typ, help_, get in fams:
+        name = f"{_PREFIX}arena_{suffix}"
+        out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} {typ}")
+        for member in sorted(members):
+            out.append(f'{name}{{member="{member}"}} '
+                       f"{_fmt(get(members[member]))}")
+    name = f"{_PREFIX}arena_promotions_total"
+    out.append(f"# HELP {name} arena champion promotions")
+    out.append(f"# TYPE {name} counter")
+    out.append(f"{name} {int(arena.get('promotions', 0))}")
+
+
+def _mesh_arena_lines(out: List[str], ranked: List[tuple]) -> None:
+    """Per-rank arena member series (``{rank=,member=}``) — one
+    HELP/TYPE header per family, samples for every rank under it."""
+    fams = (
+        ("accept_rate", "gauge",
+         "per-rank per-member spec accept rate",
+         lambda m: m.get("accept_rate", 0.0)),
+        ("served_tokens", "gauge",
+         "per-rank tokens served while the member was champion",
+         lambda m: int(m.get("served_tokens", 0))),
+    )
+    for suffix, typ, help_, get in fams:
+        name = f"{_PREFIX}mesh_arena_{suffix}"
+        out.append(f"# HELP {name} {help_}")
+        out.append(f"# TYPE {name} {typ}")
+        for rank, arena in ranked:
+            for member in sorted(arena.get("members", {})):
+                out.append(
+                    f'{name}{{rank="{rank}",member="{member}"}} '
+                    f"{_fmt(get(arena['members'][member]))}")
+    name = f"{_PREFIX}mesh_arena_promotions_total"
+    out.append(f"# HELP {name} per-rank arena champion promotions")
+    out.append(f"# TYPE {name} counter")
+    for rank, arena in ranked:
+        out.append(f'{name}{{rank="{rank}"}} '
+                   f"{int(arena.get('promotions', 0))}")
+
+
 def prometheus_text(
     stats: Any,
     pool_shards: Optional[List[dict]] = None,
@@ -486,14 +547,18 @@ def prometheus_text(
     remote_stats: Optional[Dict[int, dict]] = None,
     queue_depth: Optional[int] = None,
     slots_busy: Optional[int] = None,
+    arena: Optional[dict] = None,
 ) -> str:
     """Render a ServeStats (+ pool/phase/mesh context) as Prometheus text.
 
     Exposition format 0.0.4: ``# HELP`` / ``# TYPE`` per family,
     counters suffixed ``_total``, latency histograms with cumulative
     ``_bucket{le=...}`` + ``_sum`` + ``_count``, per-shard pool gauges
-    labelled ``{shard=...}``, and per-rank mesh series labelled
-    ``{rank=...}`` from the follower snapshots.
+    labelled ``{shard=...}``, per-rank mesh series labelled
+    ``{rank=...}`` from the follower snapshots, and — when an
+    online-LTFB arena is live (``arena`` is :meth:`Arena.counters`
+    output) — per-member ``{member=...}`` accept-rate / served-token
+    series plus the promotion counter.
     """
     out: List[str] = []
     for k, help_ in _COUNTER_HELP.items():
@@ -547,6 +612,9 @@ def prometheus_text(
             for i, sh in enumerate(pool_shards):
                 out.append(f'{name}{{shard="{i}"}} {int(sh.get(k, 0))}')
 
+    if arena:
+        _arena_lines(out, arena)
+
     if remote_stats:
         name = f"{_PREFIX}mesh"
         out.append(f"# HELP {name}_counters per-rank mesh counters")
@@ -565,12 +633,19 @@ def prometheus_text(
                     f'{fam}{{rank="{rank}",shard="{i}"}} '
                     f"{int(sh.get('high_water_blocks', 0))}"
                 )
+        ranked = [(r, remote_stats[r]["arena"])
+                  for r in sorted(remote_stats)
+                  if remote_stats[r].get("arena")]
+        if ranked:
+            _mesh_arena_lines(out, ranked)
     return "\n".join(out) + "\n"
 
 
 def scheduler_prometheus(sched: Any) -> str:
-    """Prometheus text for a live scheduler (stats + pool + mesh + phases)."""
+    """Prometheus text for a live scheduler (stats + pool + mesh +
+    phases + online-LTFB arena when one is attached)."""
     tel = getattr(sched, "telemetry", None)
+    arena = getattr(sched, "arena", None)
     return prometheus_text(
         sched.stats,
         pool_shards=_pool_shards(sched),
@@ -579,4 +654,5 @@ def scheduler_prometheus(sched: Any) -> str:
         queue_depth=len(getattr(sched, "queue", ())),
         slots_busy=len(getattr(sched, "active", ()))
         + len(getattr(sched, "prefilling", ())),
+        arena=arena.counters() if arena is not None else None,
     )

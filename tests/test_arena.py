@@ -1,0 +1,621 @@
+"""Online LTFB arena tests (serve/arena.py): the promotion rule
+(min-samples + margin + hysteresis), deterministic drafter routing,
+journal match/promotion replay incl. torn-tail crash consistency, the
+served-stream -> token-shard write-back round-trip with crash/resume
+rid dedup, the gateway admin surface, and the end-to-end
+train -> serve -> train acceptance loop."""
+import dataclasses
+import glob
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.models.lm import init_lm
+from repro.serve.arena import (Arena, ArenaConfig, MemberStats,
+                               TokenWriteback, safe_rate)
+from repro.serve.journal import RequestJournal, replay_arena
+from repro.serve.scheduler import Request, Scheduler
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _f32_cfg(arch="qwen3-0.6b"):
+    return dataclasses.replace(get_config(arch, smoke=True),
+                               dtype="float32")
+
+
+def _dummy_arena(n=2, cfg=None, **kw):
+    """An arena over trivially small 'weights' for rule-only tests."""
+    members = {f"trainer_{i}": {"w": np.full((2,), float(i))}
+               for i in range(n)}
+    return Arena(members, "trainer_0", cfg or ArenaConfig(**kw))
+
+
+def _write_population(pop_dir, params_list, wins):
+    """A real launch/ltfb.py-shaped population checkpoint dir."""
+    from repro.checkpoint import ckpt
+    pop = {"round": 0, "trainers": [
+        {"params": p, "opt_state": {"t": np.zeros((1,), np.float32)},
+         "hparams": {"lr": 1e-3}, "steps": 1, "alive": True,
+         "wins": w, "adoptions": 0}
+        for p, w in zip(params_list, wins)]}
+    ckpt.save_population(str(pop_dir), 0, pop)
+
+
+# ---------------------------------------------------------------------------
+# satellite: zero-guarded accept-rate accounting
+# ---------------------------------------------------------------------------
+
+
+def test_safe_rate_and_empty_window_stats():
+    assert safe_rate(0, 0) == 0.0
+    assert safe_rate(3, 4) == 0.75
+    m = MemberStats(window=4)
+    assert m.rate == 0.0 and m.win_offered == 0      # empty window: no NaN
+    m.add(0, 0)                                      # zero-proposal round
+    assert m.rate == 0.0
+    for _ in range(6):
+        m.add(4, 3)
+    assert m.win_offered == 16                       # window slid to 4 rounds
+    assert m.rate == pytest.approx(0.75)
+    assert m.offered == 24 and m.accepted == 18      # lifetime keeps all
+    d = m.as_dict()
+    m2 = MemberStats(window=4)
+    m2.load(d)
+    assert m2.as_dict() == d
+
+
+def test_arena_counters_never_nan_and_json_safe():
+    a = _dummy_arena(3)
+    snap, counters = a.snapshot(), a.counters()
+    json.dumps(snap), json.dumps(counters)           # JSON-safe throughout
+    for n, c in counters["members"].items():
+        assert c["accept_rate"] == 0.0, n
+
+
+# ---------------------------------------------------------------------------
+# promotion rule: min-samples + margin + hysteresis
+# ---------------------------------------------------------------------------
+
+
+def test_promotion_rule_min_samples_margin_hysteresis():
+    a = _dummy_arena(2, min_samples=8, margin=0.2, hysteresis=2,
+                     window=64)
+    ch = "trainer_1"
+    assert a.active_drafter == ch
+    a.record_spec(4, 4)
+    assert a.decide(8) is None          # only 4 offered < min_samples
+    a.record_spec(4, 0)                 # 8 offered, rate 0.5 >= 0 + 0.2
+    assert a.decide(16) is None         # qualifies -> streak 1 < hysteresis
+    assert a.streak == 1 and a.streak_member == ch
+    assert a.decide(24) == ch           # second consecutive win -> promote
+    params = a.promote(ch, 24)
+    assert params is a.params[ch]
+    assert a.champion == ch and a.generation == 1 and a.promotions == 1
+    assert a.baseline == pytest.approx(0.5)   # winner's rate at promotion
+    assert a.streak == 0 and a.streak_member is None
+    assert all(not m.window for m in a.members.values())  # fresh measurement
+    # the dethroned champion now drafts; beating baseline needs 0.5 + margin
+    assert a.active_drafter == "trainer_0"
+    a.record_spec(16, 10)               # rate 0.625 < 0.7
+    assert a.decide(32) is None and a.streak == 0
+
+
+def test_promotion_rule_margin_resets_streak_on_candidate_change():
+    a = _dummy_arena(3, min_samples=4, margin=0.1, hysteresis=2,
+                     policy="shadow")
+    a.members["trainer_1"].add(8, 6)
+    assert a.decide(8) is None and a.streak_member == "trainer_1"
+    a.members["trainer_2"].add(8, 8)    # a better candidate appears
+    assert a.decide(16) is None         # streak restarts on trainer_2
+    assert a.streak == 1 and a.streak_member == "trainer_2"
+    assert a.decide(24) == "trainer_2"
+
+
+def test_forced_promotion_overrides_rule_and_validates():
+    a = _dummy_arena(2, min_samples=10 ** 6)
+    a.forced = "trainer_1"
+    assert a.decide(1) == "trainer_1" and a.last_forced
+    assert a.forced is None             # consumed
+    a.forced = "trainer_0"              # already champion: ignored
+    assert a.decide(2) is None and not a.last_forced
+
+
+# ---------------------------------------------------------------------------
+# routing: pure function of (step, arena state) on every host
+# ---------------------------------------------------------------------------
+
+
+def test_drafter_routing_policies_deterministic():
+    shadow = _dummy_arena(3, policy="shadow", rotate_every=4)
+    assert [shadow.drafter_for_step(s) for s in (0, 3, 4, 8, 12)] \
+        == ["trainer_1", "trainer_1", "trainer_2", "trainer_1",
+            "trainer_2"]
+    champ = _dummy_arena(3, policy="champion", rotate_every=4)
+    champ.members["trainer_2"].add(8, 8)
+    assert champ.drafter_for_step(0) == "trainer_2"   # best by window rate
+    eps = _dummy_arena(3, policy="epsilon", rotate_every=4, epsilon=0.5)
+    eps.members["trainer_2"].add(8, 8)
+    # period 2: even stints explore round-robin, odd stints exploit
+    assert eps.drafter_for_step(0) == "trainer_1"
+    assert eps.drafter_for_step(4) == "trainer_2"
+    # two "hosts" with identical state agree at every step
+    twin = _dummy_arena(3, policy="shadow", rotate_every=4)
+    assert all(shadow.drafter_for_step(s) == twin.drafter_for_step(s)
+               for s in range(40))
+
+
+def test_arena_requires_two_members_and_known_champion():
+    with pytest.raises(ValueError, match=">= 2 resident members"):
+        Arena({"trainer_0": {}}, "trainer_0")
+    with pytest.raises(ValueError, match="not in the roster"):
+        Arena({"a": {}, "b": {}}, "c")
+    with pytest.raises(ValueError, match="unknown arena policy"):
+        ArenaConfig(policy="random")
+
+
+# ---------------------------------------------------------------------------
+# satellite: journal replay round-trip + torn-tail crash consistency
+# ---------------------------------------------------------------------------
+
+
+def test_journal_arena_replay_roundtrip_and_torn_promotion(tmp_path):
+    path = str(tmp_path / "journal.jsonl")
+    j = RequestJournal(path)
+    a = _dummy_arena(2, min_samples=4, hysteresis=1, margin=0.1)
+    a.record_spec(8, 7)
+    a.matches += 1
+    j.record_match(8, a.snapshot())
+    pre = a.snapshot()                   # durable pre-promotion state
+    winner = "trainer_1"
+    a.promote(winner, 16)
+    j.record_promotion(16, winner, "trainer_0",
+                       a.last_promotion["rate"], False, a.snapshot())
+    post = a.snapshot()
+    j.close()
+
+    # clean replay: the post-promotion snapshot, restored token-identically
+    state = replay_arena(path)
+    b = _dummy_arena(2, min_samples=4, hysteresis=1, margin=0.1)
+    b.restore(state)
+    assert b.snapshot() == post
+    assert b.champion == "trainer_1" and b.generation == 1
+    assert b.baseline == pytest.approx(7 / 8)
+
+    # torn tail: cut the promotion record mid-write -> it is NOT durable,
+    # and because the journal sync is ordered BEFORE the weight swap the
+    # crashed generation never served the winner: replay must land on the
+    # pre-promotion match snapshot, exactly
+    raw = open(path, "rb").read()
+    lines = raw.rstrip(b"\n").split(b"\n")
+    torn = b"\n".join(lines[:-1]) + b"\n" + lines[-1][:len(lines[-1]) // 2]
+    open(path, "wb").write(torn)
+    c = _dummy_arena(2, min_samples=4, hysteresis=1, margin=0.1)
+    c.restore(replay_arena(path))
+    assert c.snapshot() == pre
+    assert c.champion == "trainer_0" and c.generation == 0
+    # the windows survived byte-for-byte: the next decide() re-fires the
+    # promotion the crash swallowed
+    assert c.decide(16) == "trainer_1"
+
+
+def test_journal_arena_records_do_not_disturb_request_replay(tmp_path):
+    from repro.serve.journal import replay
+    path = str(tmp_path / "journal.jsonl")
+    j = RequestJournal(path)
+    j.record_submit(Request(rid="r1", prompt=np.arange(4, dtype=np.int32),
+                            max_new=8))
+    a = _dummy_arena(2)
+    j.record_match(1, a.snapshot())
+    j.step_commit({"r1": [5, 6]}, [])
+    j.record_promotion(2, "trainer_1", "trainer_0", 0.5, False,
+                       a.snapshot())
+    j.step_commit({"r1": [7]}, [])
+    j.close()
+    ent = replay(path)["r1"]
+    assert ent.tokens == [5, 6, 7] and not ent.done
+    assert replay_arena(path) is not None
+
+
+def test_replay_arena_missing_or_empty_journal(tmp_path):
+    assert replay_arena(str(tmp_path / "nope.jsonl")) is None
+    path = str(tmp_path / "empty.jsonl")
+    j = RequestJournal(path)
+    j.record_submit(Request(rid="r", prompt=np.arange(3, dtype=np.int32),
+                            max_new=2))
+    j.close()
+    assert replay_arena(path) is None    # no arena records -> None
+
+
+# ---------------------------------------------------------------------------
+# satellite: write-back round-trip + crash/resume rid dedup
+# ---------------------------------------------------------------------------
+
+
+def test_writeback_shards_reingest_into_datastore(tmp_path):
+    from repro.data.tokens import list_token_shards, read_token_shard
+    from repro.datastore.store import DataStore
+    root = str(tmp_path / "wb")
+    wb = TokenWriteback(root, seq_len=8, vocab=100, samples_per_file=4)
+    streams = {f"r{i}": list(range(1, 4 + i)) for i in range(8)}
+    for rid, s in streams.items():
+        assert wb.add(rid, s)
+    wb.close()
+    shards = list_token_shards(root)
+    assert len(shards) == 2              # 8 rows / 4 per file, all full
+    rows = read_token_shard(shards[0])["tokens"]
+    assert rows.shape == (4, 9) and rows.dtype == np.int32
+    assert rows[0].tolist() == [1, 2, 3] + [0] * 6   # zero-padded
+    # truncation: a stream longer than seq_len + 1 keeps the head
+    assert read_token_shard(shards[1])["tokens"][3, :].tolist() \
+        == list(range(1, 10))
+    # the shard dir IS a datastore manifest: uniform bundles, right count
+    store = DataStore(shards, read_token_shard, num_ranks=2,
+                      mode="preload")
+    store.preload()
+    assert store.num_samples == 8 and store.samples_per_file == 4
+    perm = store.epoch_permutation(0)
+    batch = store.get_batch(perm, 0, 8, consumer_rank=0)
+    assert batch["tokens"].shape == (8, 9)
+
+
+def test_writeback_dedups_rids_across_crash_resume(tmp_path):
+    root = str(tmp_path / "wb")
+    wb = TokenWriteback(root, seq_len=4, vocab=50, samples_per_file=2)
+    assert wb.add("a", [1, 2]) and wb.add("b", [3, 4])
+    assert not wb.add("a", [1, 2])       # same-generation dedup
+    assert wb.add("c", [5])              # buffered, shard not full
+    # crash (no close) -> new generation over the same dir
+    wb2 = TokenWriteback(root, seq_len=4, vocab=50, samples_per_file=2)
+    assert not wb2.add("a", [1, 2])      # written rid survives the crash
+    assert not wb2.add("c", [5])         # pending rid survives too
+    assert wb2.add("d", [6, 7])          # completes the second shard
+    from repro.data.tokens import list_token_shards, read_token_shard
+    shards = list_token_shards(root)
+    assert len(shards) == 2 and wb2._next_shard == 2
+    all_rows = np.concatenate([read_token_shard(p)["tokens"]
+                               for p in shards])
+    assert all_rows.shape == (4, 5)      # a,b,c,d exactly once
+    d = wb2.as_dict()
+    assert d["rows_written"] == 4 and d["pending_rows"] == 0
+
+
+def test_writeback_rejects_out_of_vocab_rows(tmp_path):
+    wb = TokenWriteback(str(tmp_path / "wb"), seq_len=4, vocab=10)
+    with pytest.raises(ValueError, match="token id 11 >= vocab 10"):
+        wb.add("r", [1, 11])
+
+
+def test_writeback_state_file_corruption_falls_back_to_shards(tmp_path):
+    root = str(tmp_path / "wb")
+    wb = TokenWriteback(root, seq_len=2, vocab=10, samples_per_file=1)
+    wb.add("a", [1])
+    open(os.path.join(root, TokenWriteback.STATE), "w").write("{torn")
+    wb2 = TokenWriteback(root, seq_len=2, vocab=10, samples_per_file=1)
+    assert wb2._next_shard == 1          # counts existing shards instead
+
+
+# ---------------------------------------------------------------------------
+# satellite: registry errors name the offending member
+# ---------------------------------------------------------------------------
+
+
+def test_check_draft_compat_error_names_member():
+    from repro.serve.registry import check_draft_compat
+    cfg = _f32_cfg()
+    bad = dataclasses.replace(cfg, vocab_size=cfg.vocab_size + 1)
+    with pytest.raises(ValueError) as e:
+        check_draft_compat(cfg, bad, member="draft/step3")
+    msg = str(e.value)
+    assert "draft member 'draft/step3'" in msg
+    assert str(cfg.vocab_size) in msg and str(bad.vocab_size) in msg
+
+
+def test_load_population_error_names_member_path(tmp_path):
+    from repro.serve.registry import load_population_params
+    cfg = _f32_cfg()
+    like, _ = init_lm(cfg, KEY)
+    _write_population(tmp_path, [jax.tree.map(np.asarray, like)] * 2,
+                      [1, 0])
+    os.remove(str(tmp_path / "step_0_trainer_1.ckpt"))
+    with pytest.raises(ValueError, match="trainer_1") as e:
+        load_population_params(str(tmp_path), 0, like)
+    assert "step_0_trainer_1.ckpt" in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# gateway admin surface
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_population_and_promote_endpoints():
+    import asyncio
+    from repro.serve.gateway import Gateway
+    cfg = _f32_cfg()
+    params, _ = init_lm(cfg, KEY)
+    host = jax.tree.map(np.asarray, params)
+    members = {"trainer_0": host, "trainer_1": host}
+    # min_samples is unreachable: only the forced override can promote
+    arena = Arena(members, "trainer_0",
+                  ArenaConfig(policy="shadow", min_samples=10 ** 6,
+                              hysteresis=1, check_every=1))
+    sched = Scheduler(cfg, params, num_slots=2, max_len=32,
+                      block_size=4, draft_params=host, spec_tokens=2,
+                      arena=arena)
+    gw = Gateway(sched)
+
+    async def _http(port, method, path, body=None):
+        r, w = await asyncio.open_connection("127.0.0.1", port)
+        payload = json.dumps(body).encode() if body is not None else b""
+        w.write((f"{method} {path} HTTP/1.1\r\nHost: t\r\n"
+                 f"Content-Length: {len(payload)}\r\n\r\n").encode()
+                + payload)
+        await w.drain()
+        data = await r.read()
+        w.close()
+        return data.decode()
+
+    async def go():
+        await gw.start()
+        pop = await _http(gw.port, "GET", "/population")
+        bad = await _http(gw.port, "POST", "/arena/promote",
+                          {"member": "nope"})
+        self_p = await _http(gw.port, "POST", "/arena/promote",
+                             {"member": "trainer_0"})
+        ok = await _http(gw.port, "POST", "/arena/promote",
+                         {"member": "trainer_1"})
+        # one real request drives the scheduler loop -> the queued
+        # control op applies and the forced promotion fires
+        await _http(gw.port, "POST", "/v1/generate",
+                    {"rid": "g", "prompt": [1, 2, 3], "max_new": 4,
+                     "stream": False})
+        pop2 = await _http(gw.port, "GET", "/population")
+        await gw.stop()
+        return pop, bad, self_p, ok, pop2
+
+    pop, bad, self_p, ok, pop2 = asyncio.new_event_loop() \
+        .run_until_complete(asyncio.wait_for(go(), 300))
+    assert " 200 " in pop.splitlines()[0]
+    snap = json.loads(pop.split("\r\n\r\n", 1)[1])
+    assert snap["champion"] == "trainer_0" and "members" in snap
+    assert " 400 " in bad.splitlines()[0]
+    assert " 400 " in self_p.splitlines()[0]
+    assert json.loads(ok.split("\r\n\r\n", 1)[1]) \
+        == {"queued": True, "member": "trainer_1",
+            "champion": "trainer_0"}
+    snap2 = json.loads(pop2.split("\r\n\r\n", 1)[1])
+    assert snap2["champion"] == "trainer_1"      # forced promotion applied
+    assert snap2["promotions"] == 1
+    assert sched.stats.arena_promotions == 1
+
+
+def test_gateway_population_404_without_arena():
+    import asyncio
+    from repro.serve.gateway import Gateway
+    cfg = _f32_cfg()
+    params, _ = init_lm(cfg, KEY)
+    gw = Gateway(Scheduler(cfg, params, num_slots=1, max_len=16))
+
+    async def go():
+        await gw.start()
+        pop = await asyncio.open_connection("127.0.0.1", gw.port)
+        r, w = pop
+        w.write(b"GET /population HTTP/1.1\r\nHost: t\r\n"
+                b"Content-Length: 0\r\n\r\n")
+        await w.drain()
+        data = await r.read()
+        w.close()
+        await gw.stop()
+        return data.decode()
+
+    resp = asyncio.new_event_loop().run_until_complete(
+        asyncio.wait_for(go(), 120))
+    assert " 404 " in resp.splitlines()[0]
+    assert "--arena" in resp
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the full train -> serve -> train loop
+# ---------------------------------------------------------------------------
+
+
+def test_arena_e2e_promotion_writeback_and_crash_resume(tmp_path):
+    """2-member arena from a real population dir: the challenger's
+    accept window crosses the margin, the transactional promotion fires
+    through the drain-aware swap (streams stay token-identical to a
+    plain no-arena run), finished streams land as datastore token
+    shards, and a killed generation resumes token-identically from the
+    journal."""
+    from repro.data.tokens import list_token_shards, read_token_shard
+    from repro.serve.registry import population_steps
+
+    cfg = _f32_cfg()
+    like, _ = init_lm(cfg, KEY)
+    host = jax.tree.map(np.asarray, like)
+    pop_dir = tmp_path / "pop"
+    # identical twins: the challenger drafting for the champion accepts
+    # at rate 1.0 (greedy), so the margin is crossed deterministically
+    _write_population(pop_dir, [host, host], wins=[1, 0])
+    assert population_steps(str(pop_dir)) == [0]
+
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(1, cfg.vocab_size, 6 + i).astype(np.int32)
+               for i in range(4)]
+    jpath = str(tmp_path / "journal.jsonl")
+    acfg = ArenaConfig(policy="shadow", window=64, min_samples=4,
+                       margin=0.3, hysteresis=1, check_every=2,
+                       seq_len=16, samples_per_file=4)
+    arena = Arena.from_population(
+        str(pop_dir), like, acfg, writeback_dir=str(tmp_path / "wb"),
+        vocab=cfg.vocab_size)
+    assert arena.champion == "trainer_0"         # most offline wins
+    journal = RequestJournal(jpath)
+    sched = Scheduler(cfg, arena.champion_params, num_slots=2,
+                      max_len=48, block_size=4,
+                      draft_params=arena.drafter_params, spec_tokens=3,
+                      swap_mode="drain", journal=journal, arena=arena)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(rid=i, prompt=p, max_new=8))
+    results = sched.run(max_steps=400)
+    journal.close()
+    arena.close()
+
+    # the challenger crossed baseline + margin and was promoted through
+    # the checksum-verified transactional swap
+    assert arena.promotions == 1 and arena.champion == "trainer_1"
+    assert sched.stats.arena_promotions == 1
+    assert sched.stats.arena_matches == arena.matches > 0
+    # twins accept (almost) everything — max_new / EOS truncation trims
+    # a round's tail, so the rate sits just under 1.0
+    assert 0.3 < arena.baseline <= 1.0
+    archives = sorted(os.listdir(pop_dir / "arena"))
+    assert any("retired_trainer_0" in f and f.endswith(".ckpt")
+               for f in archives)
+    assert any("champion_trainer_1" in f and f.endswith(".ckpt")
+               for f in archives)
+    assert any(f.endswith(".sha256") for f in archives)
+
+    # drain-aware swap + twin weights: streams are token-identical to a
+    # plain no-arena scheduler on the same prompts
+    plain = Scheduler(cfg, like, num_slots=2, max_len=48, block_size=4)
+    for i, p in enumerate(prompts):
+        plain.submit(Request(rid=i, prompt=p, max_new=8))
+    base = plain.run(max_steps=400)
+    assert {i: results[i].tolist() for i in results} \
+        == {i: base[i].tolist() for i in base}
+
+    # write-back: 4 finished streams -> one full datastore token shard,
+    # rows = prompt + generated, zero-padded to seq_len + 1
+    shards = list_token_shards(str(tmp_path / "wb"))
+    assert len(shards) == 1
+    rows = read_token_shard(shards[0])["tokens"]
+    assert rows.shape == (4, 17)
+    full0 = list(prompts[0]) + list(results[0])
+    assert rows[0, :len(full0)].tolist() == [int(t) for t in full0]
+
+    # the journal holds durable match + promotion records
+    recs = [json.loads(l) for l in open(jpath) if l.strip()]
+    kinds = [r["t"] for r in recs]
+    assert "match" in kinds and kinds.count("promotion") == 1
+    promo = next(r for r in recs if r["t"] == "promotion")
+    assert promo["winner"] == "trainer_1" and not promo["forced"]
+
+    # kill/resume: a new generation over the same population dir + journal
+    # reconstructs the last durable arena snapshot token-identically
+    # (weights come from the roster, state from the journal)
+    last = replay_arena(jpath)
+    arena2 = Arena.from_population(str(pop_dir), like, acfg)
+    arena2.restore(last)
+    s2 = {k: v for k, v in arena2.snapshot().items() if k != "writeback"}
+    assert s2 == {k: v for k, v in last.items() if k != "writeback"}
+    assert arena2.champion == arena.champion == "trainer_1"
+    assert arena2.generation == arena.generation == 1
+    assert arena2.baseline == pytest.approx(arena.baseline)
+
+    # resume refuses a roster that does not hold the journaled members
+    tiny = Arena({"x": host, "y": host}, "x", acfg)
+    with pytest.raises(ValueError, match="trainer_0"):
+        tiny.restore(replay_arena(jpath))
+
+
+def test_arena_prometheus_series(tmp_path):
+    """arena_accept_rate / arena_served_tokens gauges carry a member
+    label; promotions export as a counter — locally and aggregated
+    mesh-wide with a rank label."""
+    from repro.serve.metrics import ServeStats
+    from repro.serve.telemetry import prometheus_text
+    a = _dummy_arena(2)
+    a.record_spec(8, 6)
+    a.members["trainer_0"].served_tokens = 42
+    a.promotions = 1
+    stats = ServeStats()
+    stats.arena_matches, stats.arena_promotions = 3, 1
+    text = prometheus_text(stats, arena=a.counters())
+    assert ('repro_serve_arena_accept_rate{member="trainer_1"} 0.75'
+            in text)
+    assert ('repro_serve_arena_served_tokens{member="trainer_0"} 42'
+            in text)
+    assert "repro_serve_arena_promotions_total 1" in text
+    assert "repro_serve_arena_matches_total 3" in text
+    # mesh aggregation: per-rank series, ONE header per family
+    remote = {1: {"completed": 0, "arena": a.counters()}}
+    text = prometheus_text(stats, remote_stats=remote, arena=a.counters())
+    assert ('repro_serve_mesh_arena_accept_rate'
+            '{rank="1",member="trainer_1"} 0.75') in text
+    assert text.count("# TYPE repro_serve_mesh_arena_accept_rate") == 1
+
+
+def test_mesh_arena_follower_replays_host0_promotion():
+    """On a 4x2 emulated mesh, host 0's match evaluation promotes the
+    challenger and the promotion name rides the StepPlan wire encoding:
+    a follower replica replays it to an identical end state without
+    ever running a match itself."""
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env.update({"XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+                "JAX_PLATFORMS": "cpu", "PYTHONPATH": "src"})
+    script = r"""
+import dataclasses, jax, numpy as np
+from repro.configs.registry import get_config
+from repro.models.lm import init_lm
+from repro.serve.scheduler import Request
+from repro.serve.mesh import MeshScheduler, StepPlan
+from repro.serve.arena import Arena, ArenaConfig
+
+cfg = dataclasses.replace(get_config("qwen3-0.6b", smoke=True),
+                          dtype="float32")
+params, _ = init_lm(cfg, jax.random.PRNGKey(0))
+host = jax.tree.map(np.asarray, params)
+rng = np.random.default_rng(9)
+prompts = [rng.integers(1, cfg.vocab_size, 6 + i).astype(np.int32)
+           for i in range(4)]
+acfg = ArenaConfig(policy="shadow", min_samples=4, margin=0.3,
+                   hysteresis=1, check_every=2, window=64)
+
+def mk(rank):
+    arena = Arena({"trainer_0": host, "trainer_1": host}, "trainer_0",
+                  acfg, rank=rank)
+    s = MeshScheduler(cfg, arena.champion_params, num_slots=4,
+                      max_len=48, block_size=4, mesh_shape=(4, 2),
+                      swap_mode="drain",
+                      draft_params=arena.drafter_params, spec_tokens=3,
+                      arena=arena)
+    for i, p in enumerate(prompts):
+        s.submit(Request(rid=i, prompt=p, max_new=6))
+    return s
+
+host0, fol = mk(0), mk(1)
+steps = 0
+while (host0.queue or host0.active or host0.prefilling) and steps < 200:
+    plan = host0.step()
+    fol.step(plan=StepPlan.decode(plan.encode()))    # the wire
+    steps += 1
+assert host0.arena.promotions == 1, host0.arena.promotions
+assert fol.arena.promotions == 1
+assert fol.arena.champion == host0.arena.champion == "trainer_1"
+assert fol.arena.matches == 0            # followers never decide
+assert host0.arena.matches > 0
+assert host0.results.keys() == fol.results.keys()
+for k in host0.results:
+    assert host0.results[k].tolist() == fol.results[k].tolist()
+p = StepPlan.decode(StepPlan(promote="trainer_1").encode())
+assert p.promote == "trainer_1"
+print("OK")
+"""
+    r = subprocess.run([sys.executable, "-c", script],
+                       capture_output=True, text=True, env=env,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."))
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-4000:]
+
+
+def test_serve_cli_rejects_arena_with_registry_flags(tmp_path):
+    from repro.launch import serve
+    with pytest.raises(SystemExit):
+        serve.main(["--arch", "qwen3-0.6b", "--smoke",
+                    "--arena", str(tmp_path), "--ckpt-dir",
+                    str(tmp_path), "--requests", "1"])
