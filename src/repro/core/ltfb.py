@@ -207,13 +207,18 @@ def tree_nbytes(tree) -> int:
 
 
 def host_tournament(population: List[Params], metrics_eval: Callable,
-                    partner: np.ndarray, scope: str = "full"
+                    partner: np.ndarray, scope: str = "full",
+                    telemetry=None
                     ) -> Tuple[List[Params], Dict[str, Any]]:
     """One tournament round over an explicit population.
 
     metrics_eval(trainer_idx, candidate_params) -> float (lower better);
     candidate evaluation uses trainer_idx's LOCAL tournament data.
+    ``telemetry`` (a :class:`repro.train.telemetry.TrainTelemetry`)
+    gets one ``partner_exchange`` span per receiving trainer.
     """
+    import time
+
     K = len(population)
     winners: List[Params] = [None] * K
     log = {"exchanged": 0, "kept_local": 0, "metrics": [],
@@ -224,10 +229,17 @@ def host_tournament(population: List[Params], metrics_eval: Callable,
             winners[i] = population[i]
             log["kept_local"] += 1
             continue
+        x0 = time.perf_counter()
         exch_j, _ = split_scope(population[j], scope)
         _, local_i = split_scope(population[i], scope)
         cand = merge_scope(exch_j, local_i, scope)
-        log["exchange_bytes"] += tree_nbytes(exch_j)
+        nbytes = tree_nbytes(exch_j)
+        log["exchange_bytes"] += nbytes
+        if telemetry is not None:
+            telemetry.trainer_span("partner_exchange", i, x0,
+                                   time.perf_counter(),
+                                   phase="partner_exchange",
+                                   partner=j, bytes=nbytes)
         m_local = float(metrics_eval(i, population[i]))
         m_other = float(metrics_eval(i, cand))
         if m_other < m_local:
@@ -242,7 +254,7 @@ def host_tournament(population: List[Params], metrics_eval: Callable,
 
 def host_tournament_async(population: List[Params], metrics_eval: Callable,
                           partner: np.ndarray, scope: str = "full",
-                          executor=None
+                          executor=None, telemetry=None
                           ) -> Tuple[List[Params], Dict[str, Any]]:
     """Tournament round with evaluation overlapped with the exchange.
 
@@ -252,9 +264,14 @@ def host_tournament_async(population: List[Params], metrics_eval: Callable,
     ``executor`` *before* the exchange (split/merge + byte accounting)
     runs, then the received-candidate evaluations are submitted, so the
     two phases overlap instead of strictly alternating per trainer.
+    ``telemetry`` gets one ``partner_exchange`` span per receiving
+    trainer (the eval spans come from ``metrics_eval`` itself).
     """
+    import time
+
     if executor is None:
-        return host_tournament(population, metrics_eval, partner, scope)
+        return host_tournament(population, metrics_eval, partner, scope,
+                               telemetry=telemetry)
     K = len(population)
     log = {"exchanged": 0, "kept_local": 0, "metrics": [],
            "exchange_bytes": 0}
@@ -265,10 +282,17 @@ def host_tournament_async(population: List[Params], metrics_eval: Callable,
     cands: Dict[int, Params] = {}
     for i in active:
         j = int(partner[i])
+        x0 = time.perf_counter()
         exch_j, _ = split_scope(population[j], scope)
         _, local_i = split_scope(population[i], scope)
         cands[i] = merge_scope(exch_j, local_i, scope)
-        log["exchange_bytes"] += tree_nbytes(exch_j)
+        nbytes = tree_nbytes(exch_j)
+        log["exchange_bytes"] += nbytes
+        if telemetry is not None:
+            telemetry.trainer_span("partner_exchange", i, x0,
+                                   time.perf_counter(),
+                                   phase="partner_exchange",
+                                   partner=j, bytes=nbytes)
     # phase 2: received-candidate evals
     other_f = {i: executor.submit(metrics_eval, i, cands[i]) for i in active}
     winners = list(population)

@@ -51,9 +51,13 @@ class TrainerState:
     alive: bool = True
     steps: int = 0
     train_seconds: float = 0.0
+    data_wait_seconds: float = 0.0   # slice of train_seconds spent in loader()
     wins: int = 0           # pairwise comparisons this trainer's model won
     adoptions: int = 0      # times this trainer adopted a partner's model
     history: List[float] = field(default_factory=list)
+    # telemetry: last train-step metrics dict and last tournament metric
+    last_metrics: Dict[str, float] = field(default_factory=dict)
+    tournament_metric: Optional[float] = None
 
 
 class Population:
@@ -69,6 +73,9 @@ class Population:
         self.perturb_hparams = perturb_hparams
         self.round = 0
         self.rng = np.random.default_rng(seed)
+        # optional repro.train.telemetry.TrainTelemetry (set by the
+        # orchestrator/launcher); None keeps the hot loop span-free
+        self.telemetry = None
         self.trainers: List[TrainerState] = []
         for i, (loader, tb) in enumerate(zip(loaders, tournament_batches)):
             params, opt_state, hparams = fns.init(seed + 1000 * i + 1)
@@ -77,26 +84,58 @@ class Population:
 
     # -- independent training ------------------------------------------------
     def train_round(self, steps: int) -> Dict[str, Any]:
-        """Each alive trainer runs `steps` mini-batch steps independently."""
+        """Each alive trainer runs `steps` mini-batch steps independently.
+
+        Wall time is attributed per trainer: ``data_wait_seconds`` is
+        the slice of ``train_seconds`` spent blocked in ``loader()``
+        (prefetch stall), the rest is compute.  With ``telemetry`` set,
+        each step emits ``data_wait`` + ``step`` spans on the trainer's
+        trace row.
+        """
         metrics = []
-        for t in self.trainers:
+        tel = self.telemetry
+        for i, t in enumerate(self.trainers):
             if not t.alive:
                 continue
             t0 = time.perf_counter()
+            wait = 0.0
             m = None
             for _ in range(steps):
+                w0 = time.perf_counter()
                 batch = t.loader()
+                w1 = time.perf_counter()
+                wait += w1 - w0
                 t.params, t.opt_state, m = self.fns.train_step(
                     t.params, t.opt_state, batch, t.hparams)
                 t.steps += 1
-            t.train_seconds += time.perf_counter() - t0
+                if tel is not None:
+                    tel.trainer_span("data_wait", i, w0, w1)
+                    tel.trainer_span("step", i, w1, time.perf_counter(),
+                                     step=t.steps)
+            t1 = time.perf_counter()
+            t.train_seconds += t1 - t0
+            t.data_wait_seconds += wait
+            if m is not None:
+                # forces the async dispatch, making the timing honest
+                t.last_metrics = {k: float(v) for k, v in m.items()}
+            if tel is not None:
+                tel.trainer_span("train_round", i, t0, t1, phase=None,
+                                 round=self.round, steps=steps)
+                tel.add_phase("data_wait", wait)
+                tel.add_phase("compute", (t1 - t0) - wait)
             metrics.append(m)
         return {"last_metrics": metrics}
 
     # -- tournament ------------------------------------------------------------
     def _metric_on(self, idx: int, params: Params) -> float:
+        tel = self.telemetry
+        t0 = time.perf_counter()
         vals = [float(self.fns.metric(params, b))
                 for b in self.trainers[idx].tournament_batches]
+        if tel is not None:
+            tel.trainer_span("tournament_eval", idx, t0,
+                             time.perf_counter(), phase="tournament_eval",
+                             batches=len(vals))
         return float(np.mean(vals))
 
     def tournament(self, executor=None) -> Dict[str, Any]:
@@ -106,15 +145,18 @@ class Population:
         evaluation is overlapped with the partner exchange
         (:func:`repro.core.ltfb.host_tournament_async`).
         """
+        t0 = time.perf_counter()
         alive = [t.alive for t in self.trainers]
         partner = ltfb.random_pairing(len(self.trainers), self.round,
                                       self.seed, alive)
         pop = [t.params for t in self.trainers]
         winners, log = ltfb.host_tournament_async(
-            pop, self._metric_on, partner, self.scope, executor)
+            pop, self._metric_on, partner, self.scope, executor,
+            telemetry=self.telemetry)
         for i, j, m_local, m_other in log["metrics"]:
             winner_idx = j if m_other < m_local else i
             self.trainers[winner_idx].wins += 1
+            self.trainers[i].tournament_metric = m_local
         for i, t in enumerate(self.trainers):
             adopted = winners[i] is not t.params
             t.params = winners[i]
@@ -127,6 +169,13 @@ class Population:
                                  for k, v in t.hparams.items()}
         self.round += 1
         log["partner"] = partner.tolist()
+        log["seconds"] = time.perf_counter() - t0
+        log["pairing_seed"] = self.seed
+        if self.telemetry is not None:
+            self.telemetry.span("tournament", t0, time.perf_counter(),
+                                round=self.round - 1,
+                                exchanged=log["exchanged"],
+                                exchange_bytes=log["exchange_bytes"])
         return log
 
     def run(self, rounds: int, steps_per_round: int,
@@ -147,28 +196,49 @@ class Population:
         return min(float(self.fns.metric(t.params, batch))
                    for t in self.trainers if t.alive)
 
-    def best_params(self, batch: dict) -> Params:
+    def best_index(self, batch: dict) -> int:
         vals = [(float(self.fns.metric(t.params, batch)), i)
                 for i, t in enumerate(self.trainers) if t.alive]
-        return self.trainers[min(vals)[1]].params
+        return min(vals)[1]
+
+    def best_params(self, batch: dict) -> Params:
+        return self.trainers[self.best_index(batch)].params
 
     # -- fault tolerance / elasticity -----------------------------------------
     def fail(self, idx: int):
         """Simulate a node failure: trainer drops out of tournaments."""
         self.trainers[idx].alive = False
 
-    def recover(self, idx: int, from_best_of: Optional[dict] = None):
-        """Restart a failed trainer, optionally cloning the current best."""
+    def recover(self, idx: int,
+                from_best_of: Optional[dict] = None) -> Optional[int]:
+        """Restart a failed trainer, optionally cloning the current best.
+
+        Returns the trainer index the weights were cloned from (None
+        when the trainer resumed with its own stale weights) — the
+        genealogy needs the ancestry edge.
+        """
         t = self.trainers[idx]
         t.alive = True
         if from_best_of is not None:
-            t.params = self.best_params(from_best_of)
+            src = self.best_index(from_best_of)
+            t.params = self.trainers[src].params
+            return src
+        return None
 
     def resize(self, new_k: int, loaders: Sequence[Callable],
                tournament_batches: Sequence[List[dict]],
-               clone_batch: Optional[dict] = None):
-        """Elastic rescale to `new_k` trainers."""
-        if new_k < len(self.trainers):
+               clone_batch: Optional[dict] = None) -> Dict[str, Any]:
+        """Elastic rescale to `new_k` trainers.
+
+        Returns a provenance dict for the genealogy: ``kept`` maps each
+        surviving slot to its pre-rescale trainer index, ``cloned``
+        lists the new slots (grow), ``clone_src`` is the pre-rescale
+        index the clones warm-started from.
+        """
+        old_k = len(self.trainers)
+        info: Dict[str, Any] = {"from_k": old_k, "to_k": new_k,
+                                "cloned": [], "clone_src": None}
+        if new_k < old_k:
             # keep the best new_k trainers
             if clone_batch is not None:
                 scored = sorted(
@@ -178,19 +248,30 @@ class Population:
             else:
                 keep = list(range(new_k))
             self.trainers = [self.trainers[i] for i in keep]
+            info["kept"] = keep
         else:
-            src = self.best_params(clone_batch) if clone_batch is not None \
-                else self.trainers[0].params
-            for i in range(len(self.trainers), new_k):
+            if clone_batch is not None:
+                scored = sorted(
+                    (float(self.fns.metric(t.params, clone_batch)), i)
+                    for i, t in enumerate(self.trainers) if t.alive)
+                src_idx = scored[0][1]
+            else:
+                src_idx = 0
+            src = self.trainers[src_idx].params
+            for i in range(old_k, new_k):
                 params, opt_state, hparams = self.fns.init(
                     self.seed + 7777 * i)
                 st = TrainerState(params, opt_state, hparams,
                                   loaders[i], list(tournament_batches[i]))
                 st.params = src          # warm-start from the current best
                 self.trainers.append(st)
+            info["kept"] = list(range(old_k))
+            info["cloned"] = list(range(old_k, new_k))
+            info["clone_src"] = src_idx
         for i, t in enumerate(self.trainers):
             t.loader = loaders[i]
             t.tournament_batches = list(tournament_batches[i])
+        return info
 
     # -- checkpointing ----------------------------------------------------------
     def state_dict(self) -> Dict[str, Any]:

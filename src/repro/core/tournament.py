@@ -27,6 +27,7 @@ data + tournament accounting via :meth:`TournamentOrchestrator.stats`.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
@@ -42,6 +43,7 @@ from repro.datastore.store import (
     aggregate_stats,
     partition_files,
 )
+from repro.telemetry import log_event
 
 
 @dataclass
@@ -109,7 +111,8 @@ class TournamentOrchestrator:
     """Drives a K-trainer LTFB population fed from datastore partitions."""
 
     def __init__(self, fns: TrainerFns, plan: DataPlan,
-                 cfg: TournamentConfig, mesh=None):
+                 cfg: TournamentConfig, mesh=None, telemetry=None,
+                 genealogy=None):
         if cfg.backend not in ("host", "mesh"):
             raise ValueError(f"unknown backend {cfg.backend!r}")
         if cfg.backend == "mesh" and mesh is None:
@@ -122,6 +125,26 @@ class TournamentOrchestrator:
         self._mesh_step = None
         self._retired_stats: Dict[str, float] = {}
         self.tournament_exchange_bytes = 0
+        # observability: tracing (repro.train.telemetry.TrainTelemetry),
+        # the genealogy JSONL (GenealogyLog), per-round wall/tournament/
+        # checkpoint timings, event counters and the live efficiency
+        self.telemetry = telemetry
+        self.genealogy = genealogy
+        self.events = {"rescales": 0, "failures": 0, "recoveries": 0,
+                       "checkpoints": 0, "restores": 0}
+        self.tournament_seconds = 0.0
+        self.round_wall_seconds = 0.0
+        self.last_round_seconds = 0.0
+        self.checkpoint_seconds = 0.0
+        self.restore_seconds = 0.0
+        self.last_efficiency: Optional[Dict[str, Any]] = None
+        self._flops_per_step: Optional[float] = None
+        self._flops_probed = False
+        # per-round hook (called with the orchestrator after each
+        # round's accounting) — the launcher writes the Prometheus
+        # snapshot / pushes the metrics endpoint from here
+        self.on_round: Optional[Callable[["TournamentOrchestrator"],
+                                         None]] = None
         self._executor = ThreadPoolExecutor(max_workers=cfg.eval_workers) \
             if (cfg.async_eval and cfg.backend == "host") else None
         # global held-out batch for best-of reporting, warm-start cloning
@@ -143,6 +166,12 @@ class TournamentOrchestrator:
             scope=cfg.scope, seed=cfg.seed,
             perturb_factor=cfg.perturb_factor,
             perturb_hparams=cfg.perturb_hparams)
+        self.population.telemetry = telemetry
+        if self.genealogy is not None:
+            self.genealogy.append(
+                "init", trainers=cfg.trainers, backend=cfg.backend,
+                scope=cfg.scope, seed=cfg.seed,
+                partition=cfg.partition, files=len(self._train_files))
 
     @staticmethod
     def _check_mesh_fits(k: int):
@@ -207,6 +236,8 @@ class TournamentOrchestrator:
         for ld in self.loaders:
             ld.close()
         retired = aggregate_stats(self.stores)
+        retired["prefetch_wait_seconds"] = sum(ld.wait_seconds
+                                               for ld in self.loaders)
         for k, v in retired.items():
             self._retired_stats[k] = self._retired_stats.get(k, 0) + v
 
@@ -215,29 +246,113 @@ class TournamentOrchestrator:
         return self.population.train_round(steps)
 
     def tournament(self) -> Dict[str, Any]:
+        t0 = time.perf_counter()
         if self.cfg.backend == "mesh":
             log = self._tournament_mesh()
+            if self.telemetry is not None:
+                self.telemetry.span("mesh_tournament", t0,
+                                    time.perf_counter(),
+                                    phase="tournament_eval",
+                                    round=self.population.round - 1,
+                                    exchange_bytes=log["exchange_bytes"])
         else:
             log = self.population.tournament(executor=self._executor)
+        log.setdefault("seconds", time.perf_counter() - t0)
+        self.tournament_seconds += float(log["seconds"])
         self.tournament_exchange_bytes += int(log.get("exchange_bytes", 0))
         return log
+
+    def _maybe_probe_flops(self):
+        """Per-compiled-step FLOPs (once, lazily, telemetry runs only):
+        lower+compile the jitted train step on a probe batch and read
+        the XLA cost analysis, so efficiency is also in model-FLOP/s."""
+        if self._flops_probed or self.telemetry is None:
+            return
+        self._flops_probed = True
+        try:
+            from repro.train.telemetry import step_flops
+            t0 = self.population.trainers[0]
+            perm = self.stores[0].epoch_permutation(0)
+            batch = self.plan.adapt(
+                self.stores[0].get_batch(perm, 0, self.cfg.batch_size))
+            self._flops_per_step = step_flops(
+                self.fns.train_step, t0.params, t0.opt_state, batch,
+                t0.hparams)
+        except Exception:
+            self._flops_per_step = None
 
     def run(self, rounds: int, steps_per_round: int, ckpt_every: int = 0,
             log: Optional[Callable[[str], None]] = None) -> List[float]:
         """rounds x (independent training, tournament[, checkpoint]).
 
         Returns the best-trainer validation trace (one entry/round).
+        Each round also computes the live parallel-efficiency figures
+        (:func:`repro.train.telemetry.efficiency_snapshot`), appends
+        ``match`` + ``round`` genealogy records, and emits an
+        ``ltfb_round`` structured log record (``--log-json``).
         """
+        from repro.train.telemetry import efficiency_snapshot
+
         trace = []
+        self._maybe_probe_flops()
         for _ in range(rounds):
+            r0 = time.perf_counter()
+            before = {id(t): (t.steps, t.train_seconds, t.data_wait_seconds)
+                      for t in self.population.trainers}
             self.train_round(steps_per_round)
             tlog = self.tournament()
-            best = self.population.best_metric(self.val_batch)
+            round_idx = self.population.round - 1
+            deltas = []
+            for t in self.population.trainers:
+                s0, tr0, dw0 = before.get(id(t), (t.steps, 0.0, 0.0))
+                deltas.append({"steps": t.steps - s0,
+                               "train_seconds": t.train_seconds - tr0,
+                               "data_wait_seconds":
+                                   t.data_wait_seconds - dw0})
+            vals = [(float(self.fns.metric(t.params, self.val_batch)), i)
+                    for i, t in enumerate(self.population.trainers)
+                    if t.alive]
+            best, best_idx = min(vals)
             trace.append(best)
+            self.last_round_seconds = time.perf_counter() - r0
+            self.round_wall_seconds += self.last_round_seconds
+            eff = efficiency_snapshot(
+                deltas, self.cfg.batch_size,
+                float(tlog.get("seconds", 0.0)), self.last_round_seconds,
+                flops_per_step=self._flops_per_step)
+            self.last_efficiency = eff
+            if self.genealogy is not None:
+                seed = tlog.get("pairing_seed", self.cfg.seed)
+                for i, j, m_local, m_other in tlog["metrics"]:
+                    adopted = m_other < m_local
+                    self.genealogy.append(
+                        "match", round=round_idx, trainer=i, partner=j,
+                        m_local=m_local, m_other=m_other,
+                        winner=(j if adopted else i), adopted=adopted,
+                        seed=seed)
+                self.genealogy.append(
+                    "round", round=round_idx, best_val=best,
+                    best_trainer=best_idx,
+                    exchanged=tlog["exchanged"],
+                    exchange_bytes=int(tlog.get("exchange_bytes", 0)),
+                    efficiency=eff)
+            log_event("ltfb_round", round=round_idx, best_val=best,
+                      best_trainer=best_idx, exchanged=tlog["exchanged"],
+                      exchange_bytes=int(tlog.get("exchange_bytes", 0)),
+                      tournament_seconds=float(tlog.get("seconds", 0.0)),
+                      wall_seconds=self.last_round_seconds,
+                      efficiency=eff)
             if log is not None:
+                sp = eff.get("speedup")
+                eff_txt = (f" speedup={sp:.2f}x "
+                           f"eff={eff['efficiency'] * 100:.0f}%"
+                           if sp is not None else "")
                 log(f"[ltfb] round={self.population.round} "
                     f"best_val={best:.4f} exchanged={tlog['exchanged']} "
-                    f"model_MB={tlog.get('exchange_bytes', 0) / 1e6:.2f}")
+                    f"model_MB={tlog.get('exchange_bytes', 0) / 1e6:.2f}"
+                    f"{eff_txt}")
+            if self.on_round is not None:
+                self.on_round(self)
             if (ckpt_every and self.cfg.ckpt_dir
                     and self.population.round % ckpt_every == 0):
                 self.save_checkpoint()
@@ -330,10 +445,27 @@ class TournamentOrchestrator:
     # -- fault tolerance / elasticity ---------------------------------------
     def fail(self, idx: int):
         self.population.fail(idx)
+        self.events["failures"] += 1
+        if self.genealogy is not None:
+            self.genealogy.append("fail", trainer=idx,
+                                  round=self.population.round)
+        if self.telemetry is not None:
+            self.telemetry.event("trainer_fail", trainer=idx)
+        log_event("ltfb_trainer_fail", trainer=idx,
+                  round=self.population.round)
 
     def recover(self, idx: int, from_best: bool = True):
-        self.population.recover(
+        src = self.population.recover(
             idx, from_best_of=self.val_batch if from_best else None)
+        self.events["recoveries"] += 1
+        if self.genealogy is not None:
+            self.genealogy.append("recover", trainer=idx, cloned_from=src,
+                                  round=self.population.round)
+        if self.telemetry is not None:
+            self.telemetry.event("trainer_recover", trainer=idx,
+                                 cloned_from=src)
+        log_event("ltfb_trainer_recover", trainer=idx, cloned_from=src,
+                  round=self.population.round)
 
     def rescale(self, new_k: int):
         """Elastic rescale: re-partition the datastore manifest across
@@ -341,21 +473,46 @@ class TournamentOrchestrator:
         (keeping the best) the population."""
         if self.cfg.backend == "mesh" and not self._user_mesh:
             self._check_mesh_fits(new_k)
+        t0 = time.perf_counter()
         self._teardown_data()
         self._build_data(new_k)
-        self.population.resize(new_k, self._loader_fns,
-                               self._tournament_batches,
-                               clone_batch=self.val_batch)
+        info = self.population.resize(new_k, self._loader_fns,
+                                      self._tournament_batches,
+                                      clone_batch=self.val_batch)
         # pairing schedule and trainer-axis size both depend on K
         self._mesh_step = None
         if not self._user_mesh:
             self._mesh = None
+        self.events["rescales"] += 1
+        if self.genealogy is not None:
+            self.genealogy.append("rescale", round=self.population.round,
+                                  **info)
+        if self.telemetry is not None:
+            self.telemetry.span("rescale", t0, time.perf_counter(),
+                                **info)
+        log_event("ltfb_rescale", round=self.population.round, **info)
 
     # -- checkpoint / restart -----------------------------------------------
     def save_checkpoint(self):
         assert self.cfg.ckpt_dir, "TournamentConfig.ckpt_dir not set"
+        t0 = time.perf_counter()
         ckpt.save_population(self.cfg.ckpt_dir, self.population.round,
                              self.population.state_dict())
+        dur = time.perf_counter() - t0
+        self.checkpoint_seconds += dur
+        self.events["checkpoints"] += 1
+        if self.genealogy is not None:
+            self.genealogy.append("checkpoint",
+                                  round=self.population.round,
+                                  seconds=dur)
+            # a checkpoint is a durability point for the ancestry too
+            self.genealogy.sync()
+        if self.telemetry is not None:
+            self.telemetry.span("checkpoint", t0, time.perf_counter(),
+                                phase="checkpoint",
+                                round=self.population.round)
+        log_event("ltfb_checkpoint", round=self.population.round,
+                  seconds=dur)
 
     def maybe_resume(self) -> bool:
         """Restore the newest population checkpoint, if any.  Elastic:
@@ -367,27 +524,73 @@ class TournamentOrchestrator:
             return False
         t0 = self.population.trainers[0]
         like = {"params": t0.params, "opt_state": t0.opt_state}
+        w0 = time.perf_counter()
         state = ckpt.restore_population(
             self.cfg.ckpt_dir, step, like,
             num_trainers=len(self.population.trainers))
         self.population.load_state_dict(state)
+        dur = time.perf_counter() - w0
+        self.restore_seconds += dur
+        self.events["restores"] += 1
+        if self.genealogy is not None:
+            self.genealogy.append("resume", round=self.population.round,
+                                  step=step, seconds=dur)
+        if self.telemetry is not None:
+            self.telemetry.span("restore", w0, time.perf_counter(),
+                                phase="restore", step=step)
+        log_event("ltfb_resume", round=self.population.round, step=step,
+                  seconds=dur)
         return True
 
     # -- accounting ----------------------------------------------------------
     def stats(self) -> Dict[str, Any]:
-        """Unified per-trainer + total data/tournament accounting."""
+        """Unified per-trainer + total data/tournament accounting.
+
+        Per trainer: datastore counters plus partition sizes, step/wall
+        attribution (``train_seconds`` / ``data_wait_seconds``), the
+        last train-step metrics and tournament metric.  Totals include
+        round wall time, tournament/checkpoint/restore durations,
+        prefetch-stall time and rescale/fail/recover event counts, so
+        consumers (fig11, the Prometheus export) never recompute
+        timings out-of-band.
+        """
         per = []
-        for store, t in zip(self.stores, self.population.trainers):
+        for store, loader, t in zip(self.stores, self.loaders,
+                                    self.population.trainers):
             d = store.stats.as_dict()
-            d.update(files=len(store.files), wins=t.wins,
-                     adoptions=t.adoptions, steps=t.steps, alive=t.alive)
+            d.update(files=len(store.files),
+                     partition_samples=store.num_samples,
+                     wins=t.wins, adoptions=t.adoptions, steps=t.steps,
+                     alive=t.alive,
+                     train_seconds=t.train_seconds,
+                     data_wait_seconds=t.data_wait_seconds,
+                     prefetch_wait_seconds=loader.wait_seconds,
+                     train_metrics=dict(t.last_metrics),
+                     tournament_metric=t.tournament_metric)
             per.append(d)
         total = aggregate_stats(self.stores)
         for k, v in self._retired_stats.items():
             total[k] = total.get(k, 0) + v
         return {"per_trainer": per, "total": total,
                 "tournament_exchange_bytes": self.tournament_exchange_bytes,
-                "round": self.population.round}
+                "round": self.population.round,
+                "steps": sum(t.steps for t in self.population.trainers),
+                "train_seconds": sum(t.train_seconds
+                                     for t in self.population.trainers),
+                "data_wait_seconds": sum(
+                    t.data_wait_seconds
+                    for t in self.population.trainers),
+                "prefetch_wait_seconds": (
+                    sum(ld.wait_seconds for ld in self.loaders)
+                    + self._retired_stats.get("prefetch_wait_seconds", 0)),
+                "tournament_seconds": self.tournament_seconds,
+                "round_wall_seconds": self.round_wall_seconds,
+                "last_round_seconds": self.last_round_seconds,
+                "checkpoint_seconds": self.checkpoint_seconds,
+                "restore_seconds": self.restore_seconds,
+                "events": dict(self.events),
+                "efficiency": self.last_efficiency,
+                "flops_per_step": self._flops_per_step}
 
     # -- lifecycle -----------------------------------------------------------
     def close(self):

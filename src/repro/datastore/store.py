@@ -35,6 +35,7 @@ class StoreStats:
         self.exchange_bytes = 0
         self.cache_hits = 0
         self.cache_misses = 0
+        self.samples_fetched = 0
         self.preload_seconds = 0.0
 
     def as_dict(self):
@@ -131,6 +132,7 @@ class DataStore:
 
     # -- access ------------------------------------------------------------
     def _fetch_sample(self, sid: int) -> dict:
+        self.stats.samples_fetched += 1
         rank = self.owner_of_sample(sid)
         hit = self._cache[rank].get(sid)
         if hit is not None:
@@ -189,6 +191,12 @@ class PrefetchLoader:
         self._q: "queue.Queue" = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
         self._epoch = epoch
+        # prefetch-stall accounting: wall seconds the consumer spent
+        # blocked in next() (queue empty = producer behind), and how
+        # many of those gets actually blocked
+        self.wait_seconds = 0.0
+        self.stalls = 0
+        self.batches_delivered = 0
         self._thread = threading.Thread(target=self._work, daemon=True)
         self._thread.start()
 
@@ -213,7 +221,15 @@ class PrefetchLoader:
             step += 1
 
     def next(self, timeout: float = 60.0):
-        return self._q.get(timeout=timeout)
+        try:
+            batch = self._q.get_nowait()
+        except queue.Empty:
+            t0 = time.perf_counter()
+            batch = self._q.get(timeout=timeout)
+            self.wait_seconds += time.perf_counter() - t0
+            self.stalls += 1
+        self.batches_delivered += 1
+        return batch
 
     def close(self):
         self._stop.set()

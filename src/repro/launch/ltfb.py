@@ -16,6 +16,7 @@ Resumes from --ckpt-dir automatically unless --no-resume.
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import tempfile
 
@@ -27,6 +28,21 @@ from repro.core.tournament import (
     TournamentConfig,
     TournamentOrchestrator,
 )
+from repro.telemetry import (
+    enable_json_logs,
+    json_logs_enabled,
+    log_event,
+    write_trace,
+)
+
+
+def say(human: str, event: str, **fields):
+    """Report line: one-line JSON under --log-json, human text otherwise
+    (same dialect as the serve launcher's structured records)."""
+    if json_logs_enabled():
+        log_event(event, **fields)
+    else:
+        print(human)
 
 
 def build_plan(args) -> DataPlan:
@@ -47,7 +63,8 @@ def build_plan(args) -> DataPlan:
             files = jag.write_bundles(root, args.samples,
                                       args.samples_per_file,
                                       image_size=image_size, seed=args.seed)
-        print(f"[ltfb] manifest: {len(files)} JAG bundles in {root}")
+        say(f"[ltfb] manifest: {len(files)} JAG bundles in {root}",
+            "ltfb_manifest", files=len(files), root=root, kind="jag")
         return DataPlan.jag_cyclegan(files)
     from repro.data import tokens
     cfg = get_config(args.arch, smoke=args.smoke)
@@ -64,7 +81,8 @@ def build_plan(args) -> DataPlan:
         files = tokens.write_token_shards(
             root, args.samples, seq_len=args.seq, vocab=cfg.vocab_size,
             samples_per_file=args.samples_per_file, seed=args.seed)
-    print(f"[ltfb] manifest: {len(files)} token shards in {root}")
+    say(f"[ltfb] manifest: {len(files)} token shards in {root}",
+        "ltfb_manifest", files=len(files), root=root, kind="tokens")
     return DataPlan.lm_tokens(files)
 
 
@@ -83,22 +101,42 @@ def build_fns(args) -> TrainerFns:
 def report(orch: TournamentOrchestrator):
     st = orch.stats()
     for i, d in enumerate(st["per_trainer"]):
-        print(f"[ltfb] trainer {i}: files={d['files']} "
-              f"cache_hits={d['cache_hits']} "
-              f"cache_misses={d['cache_misses']} "
-              f"file_opens={d['file_opens']} "
-              f"exchange_MB={d['exchange_bytes'] / 1e6:.2f} "
-              f"wins={d['wins']} adoptions={d['adoptions']} "
-              f"steps={d['steps']}")
+        say(f"[ltfb] trainer {i}: files={d['files']} "
+            f"cache_hits={d['cache_hits']} "
+            f"cache_misses={d['cache_misses']} "
+            f"file_opens={d['file_opens']} "
+            f"exchange_MB={d['exchange_bytes'] / 1e6:.2f} "
+            f"wins={d['wins']} adoptions={d['adoptions']} "
+            f"steps={d['steps']} "
+            f"data_wait_s={d['data_wait_seconds']:.2f}",
+            "ltfb_trainer_stats", trainer=i, **d)
     tot = st["total"]
-    print(f"[ltfb] datastore total: read_MB={tot['bytes_read'] / 1e6:.2f} "
-          f"exchange_MB={tot['exchange_bytes'] / 1e6:.2f} "
-          f"cache_hits={int(tot['cache_hits'])} "
-          f"cache_misses={int(tot['cache_misses'])}")
+    say(f"[ltfb] datastore total: read_MB={tot['bytes_read'] / 1e6:.2f} "
+        f"exchange_MB={tot['exchange_bytes'] / 1e6:.2f} "
+        f"cache_hits={int(tot['cache_hits'])} "
+        f"cache_misses={int(tot['cache_misses'])} "
+        f"samples={int(tot.get('samples_fetched', 0))} "
+        f"prefetch_wait_s={st['prefetch_wait_seconds']:.2f}",
+        "ltfb_datastore_stats",
+        prefetch_wait_seconds=st["prefetch_wait_seconds"], **tot)
     wins = [d["wins"] for d in st["per_trainer"]]
-    print(f"[ltfb] tournament: rounds={st['round']} win_counts={wins} "
-          f"model_exchange_MB="
-          f"{st['tournament_exchange_bytes'] / 1e6:.2f}")
+    say(f"[ltfb] tournament: rounds={st['round']} win_counts={wins} "
+        f"model_exchange_MB="
+        f"{st['tournament_exchange_bytes'] / 1e6:.2f} "
+        f"tournament_s={st['tournament_seconds']:.2f} "
+        f"ckpt_s={st['checkpoint_seconds']:.2f}",
+        "ltfb_tournament_stats", rounds=st["round"], win_counts=wins,
+        tournament_exchange_bytes=st["tournament_exchange_bytes"],
+        tournament_seconds=st["tournament_seconds"],
+        checkpoint_seconds=st["checkpoint_seconds"],
+        restore_seconds=st["restore_seconds"], events=st["events"])
+    eff = st.get("efficiency") or {}
+    if eff.get("speedup") is not None:
+        say(f"[ltfb] efficiency: speedup={eff['speedup']:.2f}x "
+            f"efficiency={eff['efficiency'] * 100:.0f}% "
+            f"parallel_samples_per_s="
+            f"{eff['parallel_samples_per_s']:.0f}",
+            "ltfb_efficiency", **eff)
 
 
 def build_parser() -> argparse.ArgumentParser:
@@ -142,6 +180,21 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--rescale-to", type=int, default=0,
                     help="elastically rescale to K' trainers mid-run")
     ap.add_argument("--seed", type=int, default=0)
+    # observability (docs/observability.md "Training telemetry")
+    ap.add_argument("--log-json", action="store_true",
+                    help="one-line JSON log records instead of human text")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome-trace JSON of per-trainer "
+                         "step/exchange/eval spans here on exit")
+    ap.add_argument("--prom-out", default=None,
+                    help="write a Prometheus text snapshot here each round")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve the Prometheus snapshot on this HTTP "
+                         "port (0 = ephemeral)")
+    ap.add_argument("--genealogy", default=None,
+                    help="tournament genealogy JSONL (default: "
+                         "<ckpt-dir>/genealogy.jsonl when --ckpt-dir is "
+                         "set; see repro.launch.lineage)")
     return ap
 
 
@@ -149,14 +202,17 @@ def main(argv=None) -> int:
     """CLI entry point: parse args, run the LTFB tournament."""
     args = build_parser().parse_args(argv)
 
+    if args.log_json:
+        enable_json_logs()
     if args.samples is None:
         args.samples = 1024 if args.smoke else 16_384
     if args.samples_per_file is None:
         args.samples_per_file = 64 if args.smoke else 512
     rounded = (args.samples // args.samples_per_file) * args.samples_per_file
     if rounded != args.samples:
-        print(f"[ltfb] rounding --samples {args.samples} -> {rounded} "
-              "(datastore bundles must be uniform)")
+        say(f"[ltfb] rounding --samples {args.samples} -> {rounded} "
+            "(datastore bundles must be uniform)",
+            "ltfb_samples_rounded", requested=args.samples, used=rounded)
         args.samples = max(rounded, args.samples_per_file)
     scope = args.scope or \
         ("generator" if args.arch == "icf-cyclegan" else "full")
@@ -171,26 +227,72 @@ def main(argv=None) -> int:
         async_eval=not args.no_async_eval,
         quantize_exchange=args.quantize_exchange,
         ckpt_dir=args.ckpt_dir, seed=args.seed)
-    orch = TournamentOrchestrator(fns, plan, cfg)
+
+    from repro.train.telemetry import (GenealogyLog, MetricsServer,
+                                       TrainTelemetry, train_prometheus,
+                                       write_prom)
+    tel = TrainTelemetry() \
+        if (args.trace_out or args.prom_out
+            or args.metrics_port is not None) else None
+    gen_path = args.genealogy or (
+        os.path.join(args.ckpt_dir, "genealogy.jsonl")
+        if args.ckpt_dir else None)
+    gen = GenealogyLog(gen_path) if gen_path else None
+    server = MetricsServer(args.metrics_port) \
+        if args.metrics_port is not None else None
+    if server is not None:
+        say(f"[ltfb] metrics endpoint: "
+            f"http://127.0.0.1:{server.port}/metrics",
+            "ltfb_metrics_endpoint", port=server.port)
+
+    orch = TournamentOrchestrator(fns, plan, cfg, telemetry=tel,
+                                  genealogy=gen)
+    if tel is not None or server is not None or args.prom_out:
+        def on_round(o: TournamentOrchestrator):
+            text = train_prometheus(
+                o.stats(), tel.phase_seconds if tel else None)
+            if args.prom_out:
+                write_prom(text, args.prom_out)
+            if server is not None:
+                server.update(text)
+        orch.on_round = on_round
+    log_line = None if args.log_json else print
     try:
         if not args.no_resume and orch.maybe_resume():
-            print(f"[ltfb] resumed at round {orch.population.round}")
-        print(f"[ltfb] arch={args.arch} K={args.trainers} "
-              f"backend={args.backend} scope={scope} "
-              f"store={args.store_mode}/{args.partition} "
-              f"ranks={args.num_ranks}")
+            say(f"[ltfb] resumed at round {orch.population.round}",
+                "ltfb_resumed", round=orch.population.round)
+        say(f"[ltfb] arch={args.arch} K={args.trainers} "
+            f"backend={args.backend} scope={scope} "
+            f"store={args.store_mode}/{args.partition} "
+            f"ranks={args.num_ranks}",
+            "ltfb_start", arch=args.arch, trainers=args.trainers,
+            backend=args.backend, scope=scope,
+            store_mode=args.store_mode, partition=args.partition,
+            num_ranks=args.num_ranks)
         first = args.rounds // 2 if args.rescale_to else args.rounds
         orch.run(first, args.steps_per_round,
-                 ckpt_every=args.ckpt_every, log=print)
+                 ckpt_every=args.ckpt_every, log=log_line)
         if args.rescale_to:
-            print(f"[ltfb] elastic rescale {args.trainers} -> "
-                  f"{args.rescale_to}")
+            if not args.log_json:
+                print(f"[ltfb] elastic rescale {args.trainers} -> "
+                      f"{args.rescale_to}")
             orch.rescale(args.rescale_to)
             orch.run(args.rounds - first, args.steps_per_round,
-                     ckpt_every=args.ckpt_every, log=print)
+                     ckpt_every=args.ckpt_every, log=log_line)
         report(orch)
+        if args.trace_out and tel is not None:
+            write_trace(tel.tracer, args.trace_out)
+            say(f"[ltfb] wrote {args.trace_out} "
+                f"(Perfetto/chrome://tracing)",
+                "ltfb_trace_written", path=args.trace_out,
+                events=tel.tracer.emitted,
+                dropped=tel.tracer.dropped)
     finally:
         orch.close()
+        if gen is not None:
+            gen.close()
+        if server is not None:
+            server.close()
     return 0
 
 

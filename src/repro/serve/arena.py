@@ -72,6 +72,8 @@ from typing import Any, Dict, List, Optional
 
 import numpy as np
 
+from repro.telemetry import log_event
+
 POLICIES = ("champion", "epsilon", "shadow")
 
 
@@ -336,6 +338,10 @@ class Arena:
         self.ckpt_dir = ckpt_dir
         self.writeback = writeback
         self.rank = int(rank)
+        # training-lineage hookup: rank 0 of a from_population arena
+        # appends promotion records to the population's genealogy log so
+        # arena generations and LTFB rounds form one ancestry chain
+        self.genealogy = None
         self.active_drafter = self.drafter_for_step(0)
 
     # -- construction --------------------------------------------------------
@@ -371,9 +377,14 @@ class Arena:
             wb = TokenWriteback(writeback_dir, seq_len=cfg.seq_len,
                                 vocab=int(vocab or 1 << 30),
                                 samples_per_file=cfg.samples_per_file)
-        return cls(members, f"trainer_{idx}", cfg,
-                   ckpt_dir=pop_dir if rank == 0 else None,
-                   writeback=wb, rank=rank)
+        arena = cls(members, f"trainer_{idx}", cfg,
+                    ckpt_dir=pop_dir if rank == 0 else None,
+                    writeback=wb, rank=rank)
+        if rank == 0:
+            from repro.train.telemetry import GenealogyLog
+            arena.genealogy = GenealogyLog(
+                os.path.join(pop_dir, "genealogy.jsonl"))
+        return arena
 
     # -- routing -------------------------------------------------------------
     @property
@@ -482,7 +493,6 @@ class Arena:
                                       tag="champion")
             reg.verify_checkpoint(path)
         except (OSError, ValueError) as e:
-            from repro.serve.telemetry import log_event
             print(f"[arena] promotion of {winner!r} ABORTED: "
                   f"{type(e).__name__}: {e} — champion "
                   f"{self.champion!r} keeps serving", flush=True)
@@ -514,6 +524,15 @@ class Arena:
             m.window.clear()
         self.active_drafter = self.drafter_for_step(step)
         self.last_promotion = record
+        if self.genealogy is not None:
+            self.genealogy.append(
+                "promotion", winner=winner, loser=record["loser"],
+                rate=record["rate"], step=record["step"],
+                generation=self.generation)
+            self.genealogy.sync()
+        log_event("arena_promotion", winner=winner,
+                  loser=record["loser"], rate=record["rate"],
+                  step=record["step"], generation=self.generation)
         return self.params[winner]
 
     # -- durability ----------------------------------------------------------
@@ -581,9 +600,12 @@ class Arena:
                             for n in self.order}}
 
     def close(self) -> None:
-        """Flush the write-back state sidecar (idempotent)."""
+        """Flush the write-back state sidecar and the genealogy log
+        (idempotent)."""
         if self.writeback is not None:
             self.writeback.close()
+        if self.genealogy is not None:
+            self.genealogy.close()
 
     def report(self, log=print, prefix: str = "[arena]") -> None:
         """Print the human-readable arena summary lines."""

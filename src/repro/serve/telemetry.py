@@ -22,19 +22,28 @@ This module is the observability substrate for the serving stack:
   JSON log records (``--log-json``) for report lines and
   hot-swap/shed events.
 
-Everything here is stdlib + jax; nothing imports the scheduler, so the
-scheduler (and metrics) can import this module freely.
+The tracing/JSON-log primitives live in :mod:`repro.telemetry` (shared
+with the training stack so both emit one dialect) and are re-exported
+here for backward compatibility.  Everything here is stdlib + jax;
+nothing imports the scheduler, so the scheduler (and metrics) can
+import this module freely.
 """
 
 from __future__ import annotations
 
-import json
-import math
-import sys
 import time
-from collections import deque
 from contextlib import contextmanager
 from typing import Any, Dict, Iterator, List, Optional
+
+from repro.telemetry import (  # noqa: F401  (re-exported surface)
+    SCHED_TID,
+    Tracer,
+    enable_json_logs,
+    json_logs_enabled,
+    log_event,
+    prom_fmt as _fmt,
+    write_trace,
+)
 
 __all__ = [
     "Tracer",
@@ -47,139 +56,6 @@ __all__ = [
     "json_logs_enabled",
     "log_event",
 ]
-
-# Chrome-trace identifiers: one fake process, tid 0 for scheduler-level
-# events, tid 1.. assigned per request id in order of first sighting.
-_TRACE_PID = 1
-SCHED_TID = 0
-
-
-class Tracer:
-    """Bounded ring buffer of Chrome-trace events.
-
-    Events follow the Chrome trace-event JSON schema (``ph`` = ``"X"``
-    complete spans, ``"i"`` instant events, ``"M"`` metadata);
-    timestamps are microseconds from a per-tracer ``perf_counter``
-    epoch.  The buffer is a ``deque(maxlen=capacity)`` so a long-running
-    gateway holds at most ``capacity`` events; ``dropped`` counts how
-    many were evicted.
-    """
-
-    def __init__(self, capacity: int = 8192):
-        self.capacity = int(capacity)
-        self.events: deque = deque(maxlen=self.capacity)
-        self.epoch = time.perf_counter()
-        self.emitted = 0  # total events ever emitted (dropped = emitted - len)
-        self._tids: Dict[str, int] = {}  # str(rid) -> tid
-        self._next_tid = SCHED_TID + 1
-        self._meta: List[dict] = [
-            {
-                "name": "thread_name",
-                "ph": "M",
-                "pid": _TRACE_PID,
-                "tid": SCHED_TID,
-                "args": {"name": "scheduler"},
-            }
-        ]
-
-    @property
-    def dropped(self) -> int:
-        """Events evicted from the ring so far."""
-        return self.emitted - len(self.events)
-
-    def _ts(self, t: float) -> float:
-        """Convert a ``perf_counter`` reading to trace microseconds."""
-        return (t - self.epoch) * 1e6
-
-    def _tid(self, rid: Any) -> int:
-        """Stable numeric thread id for a request id (lazily assigned)."""
-        key = str(rid)
-        tid = self._tids.get(key)
-        if tid is None:
-            # keep the rid->tid map bounded alongside the ring
-            if len(self._tids) >= 4 * self.capacity:
-                self._tids.clear()
-            tid = self._next_tid
-            self._next_tid += 1
-            self._tids[key] = tid
-            self._meta.append(
-                {
-                    "name": "thread_name",
-                    "ph": "M",
-                    "pid": _TRACE_PID,
-                    "tid": tid,
-                    "args": {"name": f"req {key}"},
-                }
-            )
-            if len(self._meta) > 4 * self.capacity:
-                del self._meta[1 : len(self._meta) // 2]
-        return tid
-
-    def _push(self, ev: dict) -> None:
-        self.events.append(ev)
-        self.emitted += 1
-
-    def complete(
-        self, name: str, tid: int, t0: float, t1: float, **args: Any
-    ) -> None:
-        """Record a complete span (``ph: X``) on a numeric tid."""
-        self._push(
-            {
-                "name": name,
-                "ph": "X",
-                "ts": self._ts(t0),
-                "dur": max(0.0, (t1 - t0) * 1e6),
-                "pid": _TRACE_PID,
-                "tid": tid,
-                "args": args,
-            }
-        )
-
-    def instant(
-        self, name: str, tid: int, t: Optional[float] = None, **args: Any
-    ) -> None:
-        """Record an instant event (``ph: i``) on a numeric tid."""
-        self._push(
-            {
-                "name": name,
-                "ph": "i",
-                "s": "t",
-                "ts": self._ts(time.perf_counter() if t is None else t),
-                "pid": _TRACE_PID,
-                "tid": tid,
-                "args": args,
-            }
-        )
-
-    def req_span(
-        self, name: str, rid: Any, t0: float, t1: float, **args: Any
-    ) -> None:
-        """Record a complete span on the request's own trace row."""
-        self.complete(name, self._tid(rid), t0, t1, rid=str(rid), **args)
-
-    def req_instant(
-        self, name: str, rid: Any, t: Optional[float] = None, **args: Any
-    ) -> None:
-        """Record an instant event on the request's own trace row."""
-        self.instant(name, self._tid(rid), t, rid=str(rid), **args)
-
-    def export(self) -> dict:
-        """Export the buffer as a Chrome-trace JSON object."""
-        return {
-            "traceEvents": self._meta + list(self.events),
-            "displayTimeUnit": "ms",
-            "otherData": {
-                "emitted": self.emitted,
-                "dropped": self.dropped,
-                "capacity": self.capacity,
-            },
-        }
-
-
-def write_trace(tracer: Tracer, path: str) -> None:
-    """Write a tracer's Chrome-trace JSON export to ``path``."""
-    with open(path, "w") as f:
-        json.dump(tracer.export(), f)
 
 
 class ServeTelemetry:
@@ -302,45 +178,6 @@ class ServeTelemetry:
                   phase_seconds=dict(self.phase_seconds))
 
 
-# ---- structured JSON logs -------------------------------------------------
-
-_JSON_LOGS = {"enabled": False}
-
-
-def enable_json_logs(enabled: bool = True) -> None:
-    """Globally enable/disable one-line JSON log records (``--log-json``)."""
-    _JSON_LOGS["enabled"] = bool(enabled)
-
-
-def json_logs_enabled() -> bool:
-    """Whether JSON log records are currently enabled."""
-    return bool(_JSON_LOGS["enabled"])
-
-
-def _json_safe(v: Any) -> Any:
-    """Coerce a value to something ``json.dumps`` emits as valid JSON."""
-    if isinstance(v, float) and not math.isfinite(v):
-        return None
-    if isinstance(v, (str, int, float, bool)) or v is None:
-        return v
-    if isinstance(v, dict):
-        return {str(k): _json_safe(x) for k, x in v.items()}
-    if isinstance(v, (list, tuple)):
-        return [_json_safe(x) for x in v]
-    return str(v)
-
-
-def log_event(event: str, **fields: Any) -> None:
-    """Emit one JSON log line (monotonic + unix timestamps) if enabled."""
-    if not _JSON_LOGS["enabled"]:
-        return
-    rec = {"event": event, "ts_monotonic": time.monotonic(),
-           "ts_unix": time.time()}
-    rec.update({k: _json_safe(v) for k, v in fields.items()})
-    sys.stdout.write(json.dumps(rec, allow_nan=False) + "\n")
-    sys.stdout.flush()
-
-
 # ---- mesh stats snapshot --------------------------------------------------
 
 # every [serve] counter a follower ships to host 0 (and prometheus
@@ -457,20 +294,6 @@ _SHARD_GAUGES = {
     "high_water_blocks": "peak KV pages allocated",
     "num_blocks": "KV page capacity",
 }
-
-
-def _fmt(v: Any) -> str:
-    """Format a sample value per Prometheus text conventions."""
-    if isinstance(v, bool):
-        return "1" if v else "0"
-    if isinstance(v, int):
-        return str(v)
-    f = float(v)
-    if math.isnan(f):
-        return "NaN"
-    if math.isinf(f):
-        return "+Inf" if f > 0 else "-Inf"
-    return repr(f)
 
 
 def _hist_lines(out: List[str], name: str, help_: str, series: Any) -> None:

@@ -1,0 +1,357 @@
+"""Training-side telemetry: trace-span completeness per trainer,
+Prometheus well-formedness, genealogy round-trips (checkpoint/resume,
+rescale, failure recovery, torn tails), arena promotions joining the
+training ancestry chain, the orchestrator's stats() timing fields, and
+the online parallel-efficiency math."""
+import json
+import re
+import urllib.request
+
+import numpy as np
+import pytest
+
+from repro.configs.base import OptimizerConfig
+from repro.configs.icf_cyclegan import CycleGANConfig
+from repro.core.population import TrainerFns
+from repro.core.tournament import (DataPlan, TournamentConfig,
+                                   TournamentOrchestrator)
+from repro.data import jag
+from repro.launch.lineage import ancestry, default_champion, summarize
+from repro.train.steps import make_gan_steps
+from repro.train.telemetry import (GenealogyLog, MetricsServer,
+                                   TrainTelemetry, efficiency_snapshot,
+                                   replay_genealogy, train_prometheus)
+
+CCFG = CycleGANConfig(
+    name="icf-cyclegan-test", image_size=8,
+    fwd_hidden=(16, 16), inv_hidden=(16, 16), disc_hidden=(16,),
+    enc_hidden=(32,), dec_hidden=(32,))
+
+
+@pytest.fixture(scope="module")
+def bundle_files(tmp_path_factory):
+    root = tmp_path_factory.mktemp("teltourn_jag")
+    return jag.write_bundles(str(root), num_samples=288,
+                             samples_per_file=32, image_size=8, seed=0)
+
+
+def _orch(files, k=4, telemetry=None, genealogy=None, **cfg_kw):
+    fns = TrainerFns(*make_gan_steps(
+        CCFG, OptimizerConfig(name="adam", lr=1e-3)))
+    cfg = TournamentConfig(trainers=k, scope="generator", batch_size=16,
+                           num_ranks=2, tournament_batches=1,
+                           tournament_batch_size=32, seed=0, **cfg_kw)
+    return TournamentOrchestrator(fns, DataPlan.jag_cyclegan(files), cfg,
+                                  telemetry=telemetry, genealogy=genealogy)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: per-trainer trace spans
+# ---------------------------------------------------------------------------
+
+
+def test_trace_spans_complete_per_trainer(bundle_files):
+    tel = TrainTelemetry()
+    orch = _orch(bundle_files, k=2, telemetry=tel)
+    try:
+        orch.run(rounds=2, steps_per_round=3)
+    finally:
+        orch.close()
+    trace = tel.tracer.export()
+    events = trace["traceEvents"]
+    assert trace["otherData"]["dropped"] == 0
+    # thread-name metadata: one orchestrator row + one row per trainer
+    rows = {e["args"]["name"] for e in events if e["ph"] == "M"}
+    assert {"orchestrator", "trainer 0", "trainer 1"} <= rows
+    # every trainer emits the full span set each round
+    by_tid = {}
+    name_tid = {e["args"]["name"]: e["tid"] for e in events
+                if e["ph"] == "M"}
+    for e in events:
+        if e["ph"] == "X":
+            by_tid.setdefault(e["tid"], []).append(e)
+    for t in (0, 1):
+        names = {e["name"] for e in by_tid[name_tid[f"trainer {t}"]]}
+        assert {"train_round", "step", "data_wait", "tournament_eval",
+                "partner_exchange"} <= names, names
+        steps = [e for e in by_tid[name_tid[f"trainer {t}"]]
+                 if e["name"] == "step"]
+        assert len(steps) == 6                    # 2 rounds x 3 steps
+        assert all(e["dur"] >= 0 for e in steps)
+    # the orchestrator row carries the tournament + phase accounting
+    sched = {e["name"] for e in by_tid.get(name_tid["orchestrator"], [])}
+    assert "tournament" in sched
+    assert tel.phase_seconds["compute"] > 0
+    assert set(tel.phase_seconds) >= {"compute", "data_wait",
+                                      "tournament_eval",
+                                      "partner_exchange"}
+
+
+# ---------------------------------------------------------------------------
+# tentpole: Prometheus exposition
+# ---------------------------------------------------------------------------
+
+
+def test_train_prometheus_well_formed(bundle_files):
+    tel = TrainTelemetry()
+    orch = _orch(bundle_files, k=2, telemetry=tel)
+    try:
+        orch.run(rounds=2, steps_per_round=2)
+        text = train_prometheus(orch.stats(), tel.phase_seconds)
+    finally:
+        orch.close()
+    helped, typed, seen = set(), set(), set()
+    sample_re = re.compile(
+        r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^{}]*\})? (-?[0-9.eE+-]+|NaN)$")
+    for line in text.strip().splitlines():
+        if line.startswith("# HELP "):
+            helped.add(line.split()[2])
+        elif line.startswith("# TYPE "):
+            assert line.split()[3] in ("counter", "gauge")
+            typed.add(line.split()[2])
+        else:
+            m = sample_re.match(line)
+            assert m, f"malformed sample line: {line!r}"
+            assert "NaN" not in line
+            seen.add(m.group(1))
+    # every sample's family is declared, prefix is the train namespace
+    assert seen <= typed == helped
+    assert all(n.startswith("repro_train_") for n in seen)
+    # counters end in _total (exposition convention)
+    for fam in ("repro_train_rounds_total", "repro_train_steps_total",
+                "repro_train_tournament_exchange_bytes_total",
+                "repro_train_data_wait_seconds_total",
+                "repro_train_datastore_samples_fetched_total"):
+        assert fam in seen, fam
+    # per-trainer labelled families + online efficiency gauges
+    assert 'repro_train_trainer_steps{trainer="1"}' in text
+    assert 'repro_train_trainer_loss{trainer="0",metric=' in text
+    assert "repro_train_speedup " in text
+    assert "repro_train_efficiency " in text
+    assert "repro_train_exchange_bandwidth_bytes_per_s " in text
+
+
+def test_metrics_server_serves_exposition():
+    srv = MetricsServer(port=0)
+    try:
+        srv.update("# HELP repro_train_rounds_total r\n"
+                   "# TYPE repro_train_rounds_total counter\n"
+                   "repro_train_rounds_total 3\n")
+        with urllib.request.urlopen(
+                f"http://127.0.0.1:{srv.port}/metrics") as r:
+            assert r.headers["Content-Type"].startswith("text/plain")
+            body = r.read().decode()
+        assert "repro_train_rounds_total 3" in body
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------------------------------------
+# tentpole: genealogy + lineage
+# ---------------------------------------------------------------------------
+
+
+def test_genealogy_roundtrip_checkpoint_resume(bundle_files, tmp_path):
+    ck = str(tmp_path / "ck")
+    gpath = str(tmp_path / "genealogy.jsonl")
+    orch = _orch(bundle_files, ckpt_dir=ck, genealogy=GenealogyLog(gpath))
+    try:
+        orch.run(rounds=2, steps_per_round=2, ckpt_every=1)
+    finally:
+        orch.close()
+        orch.genealogy.close()
+
+    orch2 = _orch(bundle_files, ckpt_dir=ck,
+                  genealogy=GenealogyLog(gpath))
+    try:
+        assert orch2.maybe_resume()
+        orch2.run(rounds=1, steps_per_round=2)
+    finally:
+        orch2.close()
+        orch2.genealogy.close()
+
+    recs = replay_genealogy(gpath)
+    kinds = [r["t"] for r in recs]
+    assert kinds.count("init") == 2               # one per process
+    assert "checkpoint" in kinds and "resume" in kinds
+    # matches and rounds span the resume: rounds 0,1 then 2
+    rounds = [r["round"] for r in recs if r["t"] == "round"]
+    assert rounds == [0, 1, 2]
+    assert all(len([r for r in recs
+                    if r["t"] == "match" and r["round"] == i]) == 4
+               for i in rounds)
+    # ancestry of the final best trainer walks back to an init root
+    champ = default_champion(recs)
+    chain = ancestry(recs, champ)
+    assert chain and chain[0]["t"] == "init"
+    summ = summarize(recs)
+    assert summ["rounds"] == 3 and summ["trainers"] == 4
+
+
+def test_genealogy_rescale_and_recover(bundle_files, tmp_path):
+    gpath = str(tmp_path / "genealogy.jsonl")
+    orch = _orch(bundle_files, k=2, genealogy=GenealogyLog(gpath))
+    try:
+        orch.run(rounds=1, steps_per_round=2)
+        orch.rescale(4)
+        orch.fail(1)
+        orch.tournament()
+        orch.recover(1)
+    finally:
+        orch.close()
+        orch.genealogy.close()
+    recs = replay_genealogy(gpath)
+    resc = [r for r in recs if r["t"] == "rescale"]
+    assert len(resc) == 1
+    assert resc[0]["from_k"] == 2 and resc[0]["to_k"] == 4
+    assert resc[0]["cloned"] == [2, 3]
+    assert resc[0]["clone_src"] in (0, 1)
+    assert [r for r in recs if r["t"] == "fail"][0]["trainer"] == 1
+    rec = [r for r in recs if r["t"] == "recover"][0]
+    assert rec["trainer"] == 1 and rec["cloned_from"] is not None
+    # a grown trainer's ancestry passes through the rescale clone edge
+    chain = ancestry(recs, "trainer_3")
+    assert any(r["t"] == "rescale" for r in chain)
+    assert chain[0]["t"] == "init"
+
+
+def test_genealogy_torn_tail_replay(tmp_path):
+    gpath = str(tmp_path / "g.jsonl")
+    g = GenealogyLog(gpath)
+    g.append("init", trainers=2, seed=0)
+    g.append("match", round=0, trainer=0, partner=1, adopted=True)
+    g.close()
+    with open(gpath, "a") as f:                    # torn final record
+        f.write('{"t": "round", "round": 0, "best')
+    recs = replay_genealogy(gpath)
+    assert [r["t"] for r in recs] == ["init", "match"]
+    # appending after a crash keeps the readable prefix usable
+    assert replay_genealogy(str(tmp_path / "missing.jsonl")) == []
+
+
+def test_arena_promotion_joins_training_ancestry(bundle_files, tmp_path):
+    from repro.serve.arena import Arena, ArenaConfig
+    from repro.serve.registry import population_steps
+
+    pop_dir = str(tmp_path / "pop")
+    gpath = str(tmp_path / "pop" / "genealogy.jsonl")
+    orch = _orch(bundle_files, k=2, ckpt_dir=pop_dir,
+                 genealogy=GenealogyLog(gpath))
+    try:
+        orch.run(rounds=1, steps_per_round=2, ckpt_every=1)
+        like = orch.population.trainers[0].params
+    finally:
+        orch.close()
+        orch.genealogy.close()
+    assert population_steps(pop_dir) == [1]
+
+    arena = Arena.from_population(pop_dir, like, ArenaConfig())
+    try:
+        assert arena.genealogy is not None         # rank-0 hookup
+        loser = arena.champion
+        winner = arena.challengers[0]
+        arena.forced = winner
+        assert arena.decide(step=7) == winner
+        arena.promote(winner, step=7)
+    finally:
+        arena.close()
+
+    recs = replay_genealogy(gpath)
+    promo = [r for r in recs if r["t"] == "promotion"]
+    assert len(promo) == 1
+    assert promo[0]["winner"] == winner and promo[0]["loser"] == loser
+    assert promo[0]["generation"] == 1
+    # one chain: the promoted champion's ancestry spans arena + training
+    chain = ancestry(recs, default_champion(recs))
+    assert chain[-1]["t"] == "promotion"
+    assert chain[0]["t"] == "init"
+    # a follower rank never writes genealogy
+    arena2 = Arena.from_population(pop_dir, like, ArenaConfig(), rank=1)
+    try:
+        assert arena2.genealogy is None
+    finally:
+        arena2.close()
+    assert len([r for r in replay_genealogy(gpath)
+                if r["t"] == "promotion"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: stats() timing/event gaps
+# ---------------------------------------------------------------------------
+
+
+def test_stats_carries_timings_and_events(bundle_files):
+    orch = _orch(bundle_files, k=2, telemetry=TrainTelemetry())
+    try:
+        orch.run(rounds=2, steps_per_round=2)
+        st = orch.stats()
+        assert st["round_wall_seconds"] > 0
+        assert st["last_round_seconds"] > 0
+        assert st["tournament_seconds"] > 0
+        assert st["train_seconds"] > 0
+        assert st["data_wait_seconds"] >= 0
+        assert st["steps"] == 8
+        assert st["events"] == {"rescales": 0, "failures": 0,
+                                "recoveries": 0, "checkpoints": 0,
+                                "restores": 0}
+        eff = st["efficiency"]
+        assert eff["trainers"] == 2
+        assert eff["speedup"] > 0 and eff["parallel_samples_per_s"] > 0
+        per = st["per_trainer"]
+        assert all("data_wait_seconds" in d and "train_seconds" in d
+                   and "tournament_metric" in d for d in per)
+        orch.rescale(4)
+        orch.fail(1)
+        orch.recover(1)
+        ev = orch.stats()["events"]
+        assert ev["rescales"] == 1
+        assert ev["failures"] == 1 and ev["recoveries"] == 1
+    finally:
+        orch.close()
+
+
+# ---------------------------------------------------------------------------
+# satellite: online parallel-efficiency math
+# ---------------------------------------------------------------------------
+
+
+def test_efficiency_snapshot_math():
+    per = [{"steps": 100, "train_seconds": 10.0, "data_wait_seconds": 1.0}
+           for _ in range(4)]
+    eff = efficiency_snapshot(per, batch_size=32, tournament_seconds=2.0,
+                              round_wall_seconds=42.0)
+    assert eff["trainers"] == 4
+    assert eff["samples"] == 4 * 100 * 32
+    assert eff["single_trainer_samples_per_s"] == pytest.approx(320.0)
+    # parallel time = slowest trainer + tournament (trainers concurrent)
+    assert eff["parallel_samples_per_s"] == pytest.approx(12800 / 12.0)
+    assert eff["speedup"] == pytest.approx((12800 / 12.0) / 320.0)
+    assert eff["efficiency"] == pytest.approx(eff["speedup"] / 4)
+    assert eff["data_wait_seconds"] == pytest.approx(4.0)
+    with_flops = efficiency_snapshot(
+        per, 32, 2.0, 42.0, flops_per_step=1e6)
+    assert with_flops["model_flops_per_s"] == pytest.approx(400e6 / 12.0)
+    # dead/idle trainers are excluded from the single-trainer baseline
+    idle = per + [{"steps": 0, "train_seconds": 0.0,
+                   "data_wait_seconds": 0.0}]
+    eff2 = efficiency_snapshot(idle, 32, 2.0, 42.0)
+    assert eff2["single_trainer_samples_per_s"] == pytest.approx(320.0)
+
+
+def test_genealogy_match_records_carry_seed_and_metrics(bundle_files,
+                                                        tmp_path):
+    gpath = str(tmp_path / "g.jsonl")
+    orch = _orch(bundle_files, k=2, genealogy=GenealogyLog(gpath))
+    try:
+        orch.run(rounds=1, steps_per_round=1)
+    finally:
+        orch.close()
+        orch.genealogy.close()
+    matches = [r for r in replay_genealogy(gpath) if r["t"] == "match"]
+    assert len(matches) == 2
+    for m in matches:
+        assert {"round", "trainer", "partner", "m_local", "m_other",
+                "winner", "adopted", "seed"} <= set(m)
+        assert np.isfinite(m["m_local"]) and np.isfinite(m["m_other"])
+        assert m["winner"] == (m["partner"] if m["adopted"]
+                               else m["trainer"])
